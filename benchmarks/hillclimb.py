@@ -1,0 +1,103 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""§Perf hillclimb driver: re-lower the three selected cells under config
+deltas (hypothesis -> change -> re-analyse), appending tagged rows to
+benchmarks/results/hillclimb.json.  Each row carries the full roofline terms
+so EXPERIMENTS.md §Perf can show before/after per iteration.
+
+Cells (selection rationale in EXPERIMENTS.md):
+  A nemotron-4-340b x train_4k  — paper-representative (squared-ReLU input
+    sparsity) + biggest absolute step time
+  B kimi-k2-1t     x decode_32k — most collective-bound cell
+  C granite-moe-3b x train_4k   — worst roofline fraction (large cells)
+"""
+import json
+import traceback
+
+from repro.launch.dryrun import run_cell
+
+MATRIX = [
+    # (arch, shape, tag, overrides)
+    ("nemotron-4-340b", "train_4k", "A0_baseline", {"microbatches": 1}),
+    ("nemotron-4-340b", "train_4k", "A1_mb64", {"microbatches": 64}),
+    ("nemotron-4-340b", "train_4k", "A2_mb64_bf16flow",
+     {"microbatches": 64, "bf16_flow": True}),
+    ("nemotron-4-340b", "train_4k", "A3_mb64_bf16_fremat",
+     {"microbatches": 64, "bf16_flow": True, "flash_remat": True}),
+    ("nemotron-4-340b", "train_4k", "A4_mb16_bf16_fremat",
+     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
+    ("kimi-k2-1t-a32b", "decode_32k", "B0_baseline", {}),
+    ("kimi-k2-1t-a32b", "decode_32k", "B1_resident",
+     {"moe_dispatch": "resident"}),
+    ("kimi-k2-1t-a32b", "decode_32k", "B2_resident_bf16",
+     {"moe_dispatch": "resident", "bf16_flow": True}),
+    ("granite-moe-3b-a800m", "train_4k", "C0_baseline", {"microbatches": 1}),
+    ("granite-moe-3b-a800m", "train_4k", "C1_bf16flow",
+     {"microbatches": 1, "bf16_flow": True}),
+    ("granite-moe-3b-a800m", "train_4k", "C2_bf16_fremat",
+     {"microbatches": 1, "bf16_flow": True, "flash_remat": True}),
+    ("granite-moe-3b-a800m", "train_4k", "C3_bf16_fremat_mb4",
+     {"microbatches": 4, "bf16_flow": True, "flash_remat": True}),
+    # iteration 2: pin projection-output sharding (gather AFTER the dot);
+    # fixes GSPMD computing K/V projections replicated over the model axis
+    ("granite-moe-3b-a800m", "train_4k", "C4_projpin_bf16",
+     {"microbatches": 1, "bf16_flow": True}),
+    ("granite-moe-3b-a800m", "train_4k", "C5_projpin_bf16_fremat_mb4",
+     {"microbatches": 4, "bf16_flow": True, "flash_remat": True}),
+    ("nemotron-4-340b", "train_4k", "A5_projpin_mb16_bf16_fremat",
+     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
+    ("nemotron-4-340b", "train_4k", "A6_projpin_mb32_bf16_fremat",
+     {"microbatches": 32, "bf16_flow": True, "flash_remat": True}),
+    # iteration 3: cast-boundary fixes (bf16 cotangents before TP psums)
+    ("granite-moe-3b-a800m", "train_4k", "C6_castfix_bf16_fremat",
+     {"microbatches": 1, "bf16_flow": True, "flash_remat": True}),
+    ("nemotron-4-340b", "train_4k", "A7_castfix_mb16_bf16_fremat",
+     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
+    ("nemotron-4-340b", "train_4k", "A8_castfix_mb16_bf16acc",
+     {"microbatches": 16, "bf16_flow": True, "flash_remat": True,
+      "grad_accum_dtype": "bfloat16"}),
+    ("kimi-k2-1t-a32b", "decode_32k", "B3_resident_castfix",
+     {"moe_dispatch": "resident", "bf16_flow": True}),
+    # iteration 4: grad-accumulator sharding pin + Megatron-SP residuals
+    ("nemotron-4-340b", "train_4k", "A9_gpin_mb16_bf16_fremat",
+     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
+    ("nemotron-4-340b", "train_4k", "A10_gpin_seqres_mb16",
+     {"microbatches": 16, "bf16_flow": True, "flash_remat": True,
+      "seq_shard_residual": True}),
+    ("granite-moe-3b-a800m", "train_4k", "C7_seqres_bf16_fremat",
+     {"microbatches": 1, "bf16_flow": True, "flash_remat": True,
+      "seq_shard_residual": True}),
+    # paper-representative: vector-sparse FFN in the serve path (23.5%)
+    ("nemotron-4-340b", "prefill_32k", "P0_dense_prefill", {}),
+    ("nemotron-4-340b", "prefill_32k", "P1_sparse_ffn_prefill",
+     {"use_sparse_ffn": True}),
+    ("nemotron-4-340b", "prefill_32k", "P2_sparse_ffn_bf16",
+     {"use_sparse_ffn": True, "bf16_flow": True}),
+]
+
+
+def main():
+    out = "benchmarks/results/hillclimb.json"
+    rows = []
+    if os.path.exists(out):
+        rows = json.load(open(out))
+    done = {r.get("tag") for r in rows}
+    for arch, shape, tag, ov in MATRIX:
+        if tag in done:
+            print(f"skip {tag} (done)")
+            continue
+        print(f"=== {tag}: {arch} x {shape} {ov}", flush=True)
+        try:
+            row = run_cell(arch, shape, overrides=ov, tag=tag)
+        except Exception as e:
+            traceback.print_exc()
+            row = {"arch": arch, "shape": shape, "tag": tag, "status": "error",
+                   "error": f"{type(e).__name__}: {e}"}
+        rows.append(row)
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1, default=str)
+    print("hillclimb matrix complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Benchmark harness: one module per paper table/figure + kernel benches.
+
+  bench_table1   -- Table I (5x5 micro example cycle counts)
+  bench_density  -- Figs 9-11 (input/weight/work density, fine vs vector)
+  bench_speedup  -- Figs 12-13 + SIV (VGG-16 speedup on both PE configs)
+  bench_kernels  -- TPU-analogue structural-FLOP scaling + Pallas allclose
+
+Prints one CSV-ish line per result; exits nonzero if a paper-validation
+check fails.  Roofline terms for the assigned architectures come from the
+dry-run (benchmarks/results/dryrun*.json), not from this harness.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--image-size", type=int, default=224,
+                    help="VGG input resolution (small for CI, 224 = paper)")
+    ap.add_argument("--out", default="benchmarks/results/bench.json")
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args()
+
+    from . import bench_table1, bench_density, bench_speedup, bench_kernels
+
+    suites = [
+        ("table1", lambda: bench_table1.run()),
+        ("density", lambda: bench_density.run(image_size=args.image_size)),
+        ("speedup", lambda: bench_speedup.run(image_size=args.image_size)),
+        ("kernels", lambda: bench_kernels.run()),
+    ]
+    all_rows, failed = [], []
+    for name, fn in suites:
+        if name in args.skip:
+            continue
+        t0 = time.time()
+        rows = fn()
+        dt = time.time() - t0
+        print(f"# suite {name}: {len(rows)} rows in {dt:.1f}s")
+        for r in rows:
+            all_rows.append(r)
+            print(",".join(f"{k}={v}" for k, v in r.items()))
+            if r.get("match") is False or r.get("in_validation_band") is False:
+                failed.append(r["name"])
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(all_rows, f, indent=1)
+    print(f"# wrote {len(all_rows)} rows -> {args.out}")
+    if failed:
+        print(f"# VALIDATION FAILURES: {failed}")
+        return 1
+    print("# all paper validations passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

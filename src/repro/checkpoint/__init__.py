@@ -1,0 +1,2 @@
+"""Atomic async checkpointing with elastic-reshard restore."""
+from .manager import CheckpointManager

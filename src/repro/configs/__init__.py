@@ -1,0 +1,23 @@
+"""Architecture registry: --arch <id> resolution for launch/bench tooling."""
+from . import (
+    internvl2_26b, gemma3_12b, nemotron_4_340b, qwen15_4b, phi3_medium_14b,
+    jamba_v01_52b, granite_moe_3b, kimi_k2_1t, hubert_xlarge, rwkv6_3b,
+)
+from .base import ArchConfig, LayerSpec, Segment, ShapeSpec, SparsityConfig, SHAPES
+
+_MODULES = [
+    internvl2_26b, gemma3_12b, nemotron_4_340b, qwen15_4b, phi3_medium_14b,
+    jamba_v01_52b, granite_moe_3b, kimi_k2_1t, hubert_xlarge, rwkv6_3b,
+]
+
+REGISTRY = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(REGISTRY)

@@ -1,0 +1,221 @@
+"""Config dataclasses: architectures, input shapes, sparsity, reduction.
+
+Every assigned architecture is one `ArchConfig` (exact public dims) in its
+own module; `reduce()` derives the CPU smoke-test config (same family
+structure, tiny dims).  `ShapeSpec` enumerates the assignment's four input
+shapes; `supported_shapes()` applies the assignment's skip rules
+(sub-quadratic only for long_500k, no decode for encoder-only).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax.numpy as jnp
+
+from repro.models.moe import MoEConfig
+
+__all__ = [
+    "LayerSpec", "Segment", "ShapeSpec", "SparsityConfig", "ArchConfig",
+    "SHAPES", "uniform_segments",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str = "attn"          # 'attn' | 'mamba' | 'rwkv_tm' | 'none'
+    ffn: str = "mlp"             # 'mlp' | 'moe' | 'rwkv_cm' | 'none'
+    window: int | None = None    # sliding-window size for local attention
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    repeat: int
+    layers: tuple[LayerSpec, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SparsityConfig:
+    """The paper's technique as a config knob (weights pruned at vector
+    granularity; activation vectors skipped at runtime)."""
+
+    density: float = 0.235   # paper's VGG-16 operating point
+    vk: int = 32             # vector (K-tile) length
+    vn: int = 128            # output strip width
+    targets: tuple[str, ...] = ("ffn", "attn_proj")  # which matmuls
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense|moe|hybrid|ssm|audio|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    segments: tuple[Segment, ...]
+    moe: MoEConfig | None = None
+    activation: str = "swiglu"
+    head_dim_override: int | None = None
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    causal: bool = True
+    encoder_only: bool = False
+    attn_free: bool = False
+    subquadratic: bool = False        # eligible for long_500k
+    embed_inputs: bool = True         # False => stub frontend (embeds input)
+    tie_embeddings: bool = False
+    rope_theta: float = 1e4
+    attn_sharding: str = "heads"      # 'heads' | 'sp'
+    attn_impl: str = "xla"            # 'xla' | 'pallas' (single-device serve)
+    sparsity: SparsityConfig | None = SparsityConfig()
+    param_dtype: str = "bfloat16"
+    cache_dtype_str: str = "bfloat16"
+    vocab_pad_to: int = 2048
+    scan_chunk: int = 256
+    attn_block_q: int = 512
+    attn_block_kv: int = 1024
+    ce_chunk: int = 512
+    z_loss: float = 1e-4
+    remat: bool = True
+    tp_hint: int = 16                 # model-axis width configs pad against
+    optimizer: str = "adamw"          # 'adamw' | 'adafactor'
+    microbatches: int = 1             # gradient-accumulation splits per step
+    moe_dispatch: str = "gather_weights"  # | 'resident' (serve/decode)
+    bf16_flow: bool = False           # bf16 matmul outputs (perf knob)
+    grad_accum_dtype: str = "float32" # microbatch gradient accumulator
+    flash_remat: bool = False         # recompute flash scores in backward
+    use_sparse_ffn: bool = False      # vector-sparse FFN (the paper's
+                                      # technique in the LM serving path)
+    seq_shard_residual: bool = False  # Megatron-SP residual stream: h is
+                                      # sequence-sharded over the model axis
+                                      # between blocks (bf16 gather/scatter
+                                      # replaces f32 activation psums)
+    notes: str = ""
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def head_dim(self) -> int:
+        return self.head_dim_override or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_to
+        return -(-self.vocab // m) * m
+
+    @property
+    def dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def cache_dtype(self):
+        return jnp.dtype(self.cache_dtype_str)
+
+    @property
+    def total_layers(self) -> int:
+        return sum(s.repeat * len(s.layers) for s in self.segments)
+
+    def supported_shapes(self) -> dict[str, str]:
+        """shape name -> '' if runnable, else skip reason."""
+        out = {}
+        for name, sh in SHAPES.items():
+            reason = ""
+            if sh.kind == "decode" and self.encoder_only:
+                reason = "encoder-only: no autoregressive decode step"
+            elif name == "long_500k" and not self.subquadratic:
+                reason = ("pure full-attention arch: 524k context requires "
+                          "sub-quadratic attention (assignment skip rule)")
+            out[name] = reason
+        return out
+
+    def param_count(self) -> int:
+        """Total parameters (embedding included), from the schema."""
+        from repro.models.transformer import lm_schema
+        from repro.models.layers import is_param
+        import jax
+        return sum(
+            math.prod(p.shape)
+            for p in jax.tree.leaves(lm_schema(self), is_leaf=is_param)
+        )
+
+    def active_param_count(self) -> int:
+        """MoE-aware active parameters per token (for 6*N*D roofline)."""
+        if self.moe is None:
+            return self.param_count()
+        from repro.models.transformer import lm_schema
+        from repro.models.layers import is_param
+        import jax
+        total = 0
+        for path, p in jax.tree_util.tree_flatten_with_path(
+            lm_schema(self), is_leaf=is_param
+        )[0]:
+            n = math.prod(p.shape)
+            key = jax.tree_util.keystr(path)
+            if "'ffn'" in key and "shared" not in key and "router" not in key:
+                ep = self.moe.padded_experts(self.tp_hint)
+                n = n * self.moe.top_k // ep
+            total += n
+        return total
+
+    def reduce(self) -> "ArchConfig":
+        """Tiny same-family config for CPU smoke tests."""
+        heads = max(2, min(4, self.n_heads))
+        kv = max(1, min(self.n_kv_heads, heads))
+        while heads % kv:
+            kv -= 1
+        moe = None
+        if self.moe is not None:
+            moe = dataclasses.replace(
+                self.moe, n_experts=8, top_k=min(self.moe.top_k, 2), d_ff=64,
+            )
+        segs = tuple(
+            Segment(repeat=min(s.repeat, 2),
+                    layers=tuple(
+                        dataclasses.replace(
+                            sp, window=min(sp.window, 16) if sp.window else None
+                        ) for sp in s.layers
+                    ))
+            for s in self.segments[:2]
+        )
+        return dataclasses.replace(
+            self,
+            d_model=64 * heads if self.attn_free else 32 * heads,
+            n_heads=heads,
+            n_kv_heads=kv,
+            d_ff=128,
+            vocab=512,
+            vocab_pad_to=64,
+            segments=segs,
+            moe=moe,
+            head_dim_override=None,
+            scan_chunk=8,
+            attn_block_q=32,
+            attn_block_kv=32,
+            ce_chunk=64,
+            tp_hint=1,
+            microbatches=1,
+            param_dtype="float32",
+            cache_dtype_str="float32",
+        )
+
+
+def uniform_segments(n_layers: int, spec: LayerSpec) -> tuple[Segment, ...]:
+    return (Segment(repeat=n_layers, layers=(spec,)),)

@@ -1,0 +1,29 @@
+"""Gemma-3 12B: 5 local (1024-window) : 1 global attention, GeGLU, qk-norm,
+256k vocab, tied embeddings [hf:google/gemma-3-12b-pt].
+
+subquadratic=True: only 8/48 layers are global attention; long_500k decode is
+dominated by the windowed layers and the 8 global KVs shard over the
+sequence axis (assignment long-context rule, DESIGN.md §5).
+"""
+from .base import ArchConfig, LayerSpec, Segment
+
+_LOCAL = LayerSpec("attn", "mlp", window=1024)
+_GLOBAL = LayerSpec("attn", "mlp")
+
+CONFIG = ArchConfig(
+    name="gemma3-12b",
+    family="dense",
+    n_layers=48,
+    d_model=3840,
+    n_heads=16,
+    n_kv_heads=8,
+    d_ff=15360,
+    vocab=262144,
+    segments=(Segment(8, (_LOCAL,) * 5 + (_GLOBAL,)),),
+    activation="geglu",
+    qk_norm=True,
+    tie_embeddings=True,
+    subquadratic=True,
+    microbatches=8,
+    attn_sharding="heads",
+)

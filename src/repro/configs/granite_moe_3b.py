@@ -1,0 +1,24 @@
+"""Granite-3.0 MoE 3B (800M active): 40 experts top-8, expert d_ff 512
+[hf:ibm-granite/granite-3.0-3b-a800m-base].
+
+40 experts pad to 48 on the 16-way model axis (dead experts, router-masked);
+24 heads don't divide tp=16 -> sequence-parallel attention.
+"""
+from .base import ArchConfig, LayerSpec, Segment
+from repro.models.moe import MoEConfig
+
+CONFIG = ArchConfig(
+    name="granite-moe-3b-a800m",
+    family="moe",
+    n_layers=32,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=512,
+    vocab=49155,
+    segments=(Segment(32, (LayerSpec("attn", "moe"),)),),
+    moe=MoEConfig(n_experts=40, top_k=8, d_ff=512),
+    activation="swiglu",
+    microbatches=4,
+    attn_sharding="sp",
+)

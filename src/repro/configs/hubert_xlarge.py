@@ -1,0 +1,25 @@
+"""HuBERT X-Large: encoder-only (bidirectional), masked-unit prediction over
+504 cluster targets [arXiv:2106.07447].  The conv waveform frontend is a
+stub: input_specs() provides precomputed frame embeddings.
+No decode shapes (encoder-only skip rule).
+"""
+from .base import ArchConfig, LayerSpec, Segment
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    segments=(Segment(48, (LayerSpec("attn", "mlp"),)),),
+    activation="gelu",
+    causal=False,
+    encoder_only=True,
+    embed_inputs=False,
+    microbatches=4,
+    attn_sharding="heads",
+    notes="audio frontend stubbed: inputs are precomputed frame embeddings",
+)

@@ -1,0 +1,23 @@
+"""InternVL2-26B backbone (InternViT frontend is a stub per assignment).
+
+InternLM2-20B language backbone dims [arXiv:2404.16821]: the ViT patch
+embeddings arrive precomputed via input_specs() (embed_inputs=False).
+"""
+from .base import ArchConfig, LayerSpec, Segment
+
+CONFIG = ArchConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab=92553,
+    segments=(Segment(48, (LayerSpec("attn", "mlp"),)),),
+    activation="swiglu",
+    embed_inputs=False,
+    microbatches=16,
+    attn_sharding="heads",
+    notes="vision frontend stubbed: inputs are precomputed patch embeddings",
+)

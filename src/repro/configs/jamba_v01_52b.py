@@ -1,0 +1,34 @@
+"""Jamba-v0.1 52B: Mamba+attention 1:7, MoE every other layer (16e top-2)
+[arXiv:2403.19887].  One Jamba block = 8 layers (attention at offset 4, MoE
+at odd offsets); 4 scanned blocks = 32 layers.
+"""
+from .base import ArchConfig, LayerSpec, Segment
+from repro.models.moe import MoEConfig
+
+_BLOCK = (
+    LayerSpec("mamba", "mlp"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "mlp"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("attn", "mlp"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "mlp"),
+    LayerSpec("mamba", "moe"),
+)
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=65536,
+    segments=(Segment(4, _BLOCK),),
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff=14336),
+    activation="swiglu",
+    subquadratic=True,
+    microbatches=16,
+    attn_sharding="heads",
+)

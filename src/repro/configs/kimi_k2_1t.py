@@ -1,0 +1,30 @@
+"""Kimi K2 — trillion-parameter MoE: 61 layers (first dense, 60 MoE),
+384 experts top-8 + 1 shared expert, expert d_ff 2048 [paper-table].
+
+Dense stem layer uses DeepSeek-V3-style d_ff 18432 (the assignment's
+d_ff=2048 is the expert width).  Adafactor optimizer (1T AdamW state would
+not fit 512 chips).
+"""
+from .base import ArchConfig, LayerSpec, Segment
+from repro.models.moe import MoEConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=18432,  # the single dense stem layer
+    vocab=163840,
+    segments=(
+        Segment(1, (LayerSpec("attn", "mlp"),)),
+        Segment(60, (LayerSpec("attn", "moe"),)),
+    ),
+    moe=MoEConfig(n_experts=384, top_k=8, d_ff=2048, n_shared=1),
+    activation="swiglu",
+    microbatches=8,
+    grad_accum_dtype="bfloat16",  # f32 accumulator alone would be 15.6 GB/chip
+    attn_sharding="heads",
+    optimizer="adafactor",
+)

@@ -1,0 +1,22 @@
+"""Nemotron-4 340B: GQA, squared-ReLU MLP (real dynamic activation sparsity —
+the closest LM analogue of the paper's post-ReLU input-vector skipping)
+[arXiv:2402.16819].  Adafactor so optimizer state fits 512 chips.
+"""
+from .base import ArchConfig, LayerSpec, Segment
+
+CONFIG = ArchConfig(
+    name="nemotron-4-340b",
+    family="dense",
+    n_layers=96,
+    d_model=18432,
+    n_heads=96,
+    n_kv_heads=8,
+    d_ff=73728,
+    vocab=256000,
+    segments=(Segment(96, (LayerSpec("attn", "mlp"),)),),
+    activation="relu2",
+    microbatches=16,
+    grad_accum_dtype="bfloat16",
+    attn_sharding="heads",
+    optimizer="adafactor",
+)

@@ -1,0 +1,20 @@
+"""Phi-3-medium 14B: RoPE + SwiGLU + GQA (40H, kv=10) [arXiv:2404.14219].
+
+40 heads don't divide tp=16 -> sequence-parallel attention.
+"""
+from .base import ArchConfig, LayerSpec, Segment
+
+CONFIG = ArchConfig(
+    name="phi3-medium-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=10,
+    d_ff=17920,
+    vocab=100352,
+    segments=(Segment(40, (LayerSpec("attn", "mlp"),)),),
+    activation="swiglu",
+    microbatches=8,
+    attn_sharding="sp",
+)

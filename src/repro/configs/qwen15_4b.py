@@ -1,0 +1,22 @@
+"""Qwen1.5-4B: QKV bias, MHA (kv == heads == 20) [hf:Qwen/Qwen1.5-4B].
+
+20 heads do not divide the 16-way model axis -> sequence-parallel attention
+(attn_sharding='sp'), zero padding waste (DESIGN.md §6).
+"""
+from .base import ArchConfig, LayerSpec, Segment
+
+CONFIG = ArchConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    n_layers=40,
+    d_model=2560,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=6912,
+    vocab=151936,
+    segments=(Segment(40, (LayerSpec("attn", "mlp"),)),),
+    activation="swiglu",
+    qkv_bias=True,
+    microbatches=4,
+    attn_sharding="sp",
+)

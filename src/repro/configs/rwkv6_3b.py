@@ -1,0 +1,25 @@
+"""RWKV-6 "Finch" 3B: attention-free, data-dependent decay [arXiv:2404.05892].
+
+TP adaptation (DESIGN.md §5): head_dim 160 -> 16 heads (Finch uses 64 -> 40
+heads, which does not divide the 16-way model axis); the recurrence is
+head-parallel with zero cross-device traffic.  subquadratic (state-based
+decode) -> runs long_500k.
+"""
+from .base import ArchConfig, LayerSpec, Segment
+
+CONFIG = ArchConfig(
+    name="rwkv6-3b",
+    family="ssm",
+    n_layers=32,
+    d_model=2560,
+    n_heads=16,          # head_dim 160 (TP adaptation; Finch: 64)
+    n_kv_heads=16,
+    d_ff=8960,
+    vocab=65536,
+    segments=(Segment(32, (LayerSpec("rwkv_tm", "rwkv_cm"),)),),
+    activation="relu",   # unused: channel-mix is squared-ReLU internally
+    attn_free=True,
+    subquadratic=True,
+    microbatches=8,
+    attn_sharding="heads",
+)

@@ -1,0 +1,29 @@
+"""The paper's own evaluation setup: VGG-16, vector-pruned to 23.5% density,
+simulated on the two 168-PE configurations of §IV.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accel_model import PEConfig, PE_4_14_3, PE_8_7_3
+
+
+@dataclasses.dataclass(frozen=True)
+class VSCNNConfig:
+    name: str = "vscnn-vgg16"
+    image_size: int = 224
+    num_classes: int = 1000
+    weight_density: float = 0.235   # paper: 23.5% after vector pruning
+    vk: int = 32                    # TPU kernel vector length (K-tile)
+    vn: int = 128                   # output strip width
+    pe_configs: tuple[PEConfig, ...] = (PE_4_14_3, PE_8_7_3)
+    # paper-reported reference points (Figs 12/13, §IV)
+    paper_speedup: tuple[float, ...] = (1.871, 1.93)
+    paper_frac_ideal_vector: tuple[float, ...] = (0.92, 0.85)
+    paper_frac_ideal_fine: tuple[float, ...] = (0.466, 0.471)
+
+    def reduce(self) -> "VSCNNConfig":
+        return dataclasses.replace(self, image_size=32, num_classes=16)
+
+
+CONFIG = VSCNNConfig()

@@ -1,0 +1,31 @@
+"""VSCNN core: vector sparsity as a first-class JAX feature.
+
+- `VectorSparse`       balanced block-CSR weight format (paper's index system)
+- `pruning`            Mao-style vector pruning (global + balanced)
+- `sparse_ops`         structural sparse matmul/conv (jnp + Pallas dispatch)
+- `accel_model`        cycle-accurate PE-array simulator (paper Table I/Figs 12-13)
+"""
+from .vector_sparse import VectorSparse, encode, decode, from_mask, tile_mask
+from .pruning import (
+    prune_vectors,
+    prune_vectors_balanced,
+    prune_conv_columns,
+    prune_tree_balanced,
+    element_density,
+)
+from .sparse_ops import (
+    vs_matmul,
+    vs_conv2d_3x3,
+    dense_conv2d_3x3,
+    im2col_3x3,
+    conv_weight_to_matrix,
+)
+from .accel_model import (
+    PEConfig,
+    PE_4_14_3,
+    PE_8_7_3,
+    CycleReport,
+    conv_layer_cycles,
+    aggregate,
+    table1_example,
+)

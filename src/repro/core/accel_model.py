@@ -1,0 +1,170 @@
+"""Cycle-accurate model of the VSCNN PE array (paper §II-III, Table I).
+
+Geometry (Fig. 4/5): a PE config ``[B, R, C]`` has B PE-array blocks, each
+R rows x C(=3) columns.  Every cycle one block consumes:
+
+  * one input-activation column vector  (R consecutive H positions, one W
+    column, one input channel)   — broadcast horizontally, and
+  * one weight kernel column            (C=3 ky-elements for one kx, one
+    (cin, cout) pair)            — broadcast vertically;
+
+the outer product accumulates diagonally into R (+C-1 boundary) output
+partial sums.  Dense cost for an H x W x Cin input and 3x3xCinxCout kernel:
+
+    cycles_dense = ceil(H/R) * W * 3 * Cin * ceil(Cout/B)        (block_map='cout')
+
+(check: 5x5 input, pad 1, R=5, B=1, Cin=Cout=1  ->  1*5*3 = 15 cycles,
+exactly the paper's "15 cycles for 5x5 input"; the Table-I sparse example
+issues only {A,C,D,E} x {WA,WB} = 8 cycles.)
+
+Sparse rule: a cycle is skipped iff its input vector is all-zero OR every
+weight column it would feed in the lockstep block group is all-zero — the
+vectors are simply absent from SRAM (paper Fig. 7 dashed blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+__all__ = ["PEConfig", "CycleReport", "conv_layer_cycles", "aggregate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PEConfig:
+    blocks: int
+    rows: int
+    cols: int = 3
+    block_map: str = "cout"  # what the B blocks parallelize over: 'cout'|'width'
+
+    @property
+    def n_pe(self) -> int:
+        return self.blocks * self.rows * self.cols
+
+
+# The paper's two 168-PE configurations (§IV).
+PE_4_14_3 = PEConfig(blocks=4, rows=14, cols=3)
+PE_8_7_3 = PEConfig(blocks=8, rows=7, cols=3)
+
+
+@dataclasses.dataclass
+class CycleReport:
+    dense: int
+    vscnn: int
+    ideal_vector: int
+    ideal_fine: int
+    macs_nonzero: int
+    macs_dense: int
+
+    @property
+    def speedup(self) -> float:
+        return self.dense / max(self.vscnn, 1)
+
+    @property
+    def frac_ideal_vector_exploited(self) -> float:
+        """Paper §IV: share of ideal-vector-sparse skippable cycles we skip."""
+        skippable = self.dense - self.ideal_vector
+        return (self.dense - self.vscnn) / max(skippable, 1)
+
+    @property
+    def frac_ideal_fine_exploited(self) -> float:
+        skippable = self.dense - self.ideal_fine
+        return (self.dense - self.vscnn) / max(skippable, 1)
+
+
+def _input_vector_occupancy(x_nz: np.ndarray, rows: int) -> np.ndarray:
+    """(H, W, Cin) nonzero map -> (ceil(H/R), W, Cin) vector occupancy."""
+    h, w, cin = x_nz.shape
+    hc = math.ceil(h / rows)
+    pad = hc * rows - h
+    if pad:
+        x_nz = np.concatenate([x_nz, np.zeros((pad, w, cin), bool)], axis=0)
+    return x_nz.reshape(hc, rows, w, cin).any(axis=1)
+
+
+def conv_layer_cycles(x: np.ndarray, w: np.ndarray, pe: PEConfig) -> CycleReport:
+    """Cycle counts for one 3x3/s1/p1 conv layer.
+
+    x : (H, W, Cin) input activations (already post-ReLU: zeros are real)
+    w : (3, 3, Cin, Cout) possibly vector-pruned weights
+    """
+    x_nz = np.asarray(x) != 0
+    w_nz = np.asarray(w) != 0
+    h, width, cin = x_nz.shape
+    kh, kw, wcin, cout = w_nz.shape
+    assert (kh, kw) == (3, 3) and wcin == cin
+
+    iv = _input_vector_occupancy(x_nz, pe.rows)  # (HC, W, Cin)
+    wv = w_nz.any(axis=0)  # weight column occupancy: (kx, Cin, Cout)
+
+    hc = iv.shape[0]
+    if pe.block_map == "cout":
+        g = math.ceil(cout / pe.blocks)
+        pad = g * pe.blocks - cout
+        wvp = np.concatenate([wv, np.zeros((3, cin, pad), bool)], -1) if pad else wv
+        gwv = wvp.reshape(3, cin, g, pe.blocks).any(-1)  # (kx, Cin, G)
+        iv_cnt = iv.sum(axis=(0, 1))  # (Cin,) issued input vectors
+        vscnn = int((iv_cnt * gwv.sum(axis=(0, 2))).sum())
+        dense = hc * width * 3 * cin * g
+    elif pe.block_map == "width":
+        wg = math.ceil(width / pe.blocks)
+        pad = wg * pe.blocks - width
+        ivp = np.concatenate([iv, np.zeros((hc, pad, cin), bool)], 1) if pad else iv
+        giv = ivp.reshape(hc, wg, pe.blocks, cin).any(2)  # (HC, WG, Cin)
+        vscnn = int((giv.sum(axis=(0, 1)) * wv.sum(axis=(0, 2))).sum())
+        dense = hc * wg * 3 * cin * cout
+    else:
+        raise ValueError(pe.block_map)
+
+    # Ideal vector-sparse: every truly-nonzero (input vec, weight col) pair
+    # costs 1/B cycles (perfect packing over blocks, no lockstep loss).
+    pairs = int((iv.sum(axis=(0, 1)) * wv.sum(axis=(0, 2))).sum())
+    ideal_vector = math.ceil(pairs / pe.blocks)
+
+    # Ideal fine-grained: nonzero MACs / total PEs.
+    xp = np.pad(x_nz, ((1, 1), (1, 1), (0, 0)))
+    # hits[ky,kx,cin] = # output positions whose input tap is nonzero
+    hits = np.stack(
+        [
+            [xp[ky : ky + h, kx : kx + width].sum(axis=(0, 1)) for kx in range(3)]
+            for ky in range(3)
+        ]
+    )  # (3,3,Cin)
+    w_cnt = w_nz.sum(axis=3)  # (3,3,Cin) nonzero couts per tap
+    macs_nonzero = int((hits * w_cnt).sum())
+    macs_dense = h * width * 9 * cin * cout
+    ideal_fine = math.ceil(macs_nonzero / pe.n_pe)
+
+    return CycleReport(
+        dense=dense,
+        vscnn=vscnn,
+        ideal_vector=ideal_vector,
+        ideal_fine=ideal_fine,
+        macs_nonzero=macs_nonzero,
+        macs_dense=macs_dense,
+    )
+
+
+def aggregate(reports: list[CycleReport]) -> CycleReport:
+    return CycleReport(
+        dense=sum(r.dense for r in reports),
+        vscnn=sum(r.vscnn for r in reports),
+        ideal_vector=sum(r.ideal_vector for r in reports),
+        ideal_fine=sum(r.ideal_fine for r in reports),
+        macs_nonzero=sum(r.macs_nonzero for r in reports),
+        macs_dense=sum(r.macs_dense for r in reports),
+    )
+
+
+def table1_example() -> CycleReport:
+    """The paper's 5x5 micro example (Table I / Fig. 7-8).
+
+    Input column B (the 2nd of 5) is all zero; weight column WC (kx=2) is all
+    zero.  Expect 15 dense cycles and 8 sparse cycles.
+    """
+    x = np.ones((5, 5, 1))
+    x[:, 1, 0] = 0.0  # column B zero
+    w = np.ones((3, 3, 1, 1))
+    w[:, 2, 0, 0] = 0.0  # column WC zero
+    return conv_layer_cycles(x, w, PEConfig(blocks=1, rows=5, cols=3))

@@ -1,0 +1,109 @@
+"""Vector pruning (Mao et al., CVPRW'17 — the paper's reference [18]).
+
+Prunes weights at *vector* granularity: the score of a vector (tile) is its
+L2 norm; the lowest-scoring vectors are zeroed until the target density is
+reached.  Two flavours:
+
+* ``prune_vectors``        — global threshold (exactly Mao et al.; used by the
+                             cycle-accurate accelerator model / paper figures).
+* ``prune_vectors_balanced`` — equal quota per output strip (TPU adaptation;
+                             required by the balanced block-CSR kernels).
+
+For conv weights the paper prunes kernel *columns*: vectors of length 3 along
+ky for each (kx, cin, cout).  ``prune_conv_columns`` implements that exact
+granularity for the accelerator model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "vector_scores",
+    "prune_vectors",
+    "prune_vectors_balanced",
+    "prune_conv_columns",
+    "element_density",
+]
+
+
+def element_density(w) -> float:
+    w = np.asarray(w)
+    return float(np.count_nonzero(w)) / w.size
+
+
+def vector_scores(w: np.ndarray, vk: int, vn: int) -> np.ndarray:
+    """(KB, NB) L2 norms of (vk, vn) tiles."""
+    k, n = w.shape
+    t = w.reshape(k // vk, vk, n // vn, vn)
+    return np.sqrt((t.astype(np.float64) ** 2).sum(axis=(1, 3)))
+
+
+def _apply_tile_mask(w: np.ndarray, mask: np.ndarray, vk: int, vn: int) -> np.ndarray:
+    k, n = w.shape
+    m = np.repeat(np.repeat(mask, vk, axis=0), vn, axis=1)
+    return (w * m).astype(w.dtype)
+
+
+def prune_vectors(w, density: float, vk: int, vn: int) -> np.ndarray:
+    """Global magnitude vector pruning to ~`density` fraction of tiles kept."""
+    w = np.asarray(w)
+    scores = vector_scores(w, vk, vn)
+    keep = max(1, int(round(scores.size * density)))
+    thresh = np.partition(scores.ravel(), scores.size - keep)[scores.size - keep]
+    mask = scores >= thresh
+    return _apply_tile_mask(w, mask, vk, vn)
+
+
+def prune_vectors_balanced(w, density: float, vk: int, vn: int):
+    """Per-strip equal-quota vector pruning.
+
+    Returns (pruned_dense, mask) where mask is (KB, NB) with identical per-
+    column counts — directly encodable by `vector_sparse.from_mask`.
+    """
+    w = np.asarray(w)
+    scores = vector_scores(w, vk, vn)  # (KB, NB)
+    kb, nb = scores.shape
+    s = max(1, int(round(kb * density)))
+    order = np.argsort(-scores, axis=0)  # descending per strip
+    mask = np.zeros_like(scores, dtype=bool)
+    cols = np.arange(nb)[None, :]
+    mask[order[:s], cols] = True
+    return _apply_tile_mask(w, mask, vk, vn), mask
+
+
+def prune_conv_columns(w: np.ndarray, density: float) -> np.ndarray:
+    """Paper-granularity pruning of conv weights (kh, kw, cin, cout).
+
+    Vector = the kh-column for each (kw, cin, cout) — e.g. WA1..WA3 in Fig. 6.
+    """
+    w = np.asarray(w)
+    kh, kw, cin, cout = w.shape
+    scores = np.sqrt((w.astype(np.float64) ** 2).sum(axis=0))  # (kw, cin, cout)
+    keep = max(1, int(round(scores.size * density)))
+    thresh = np.partition(scores.ravel(), scores.size - keep)[scores.size - keep]
+    mask = (scores >= thresh)[None]  # broadcast over kh
+    return (w * mask).astype(w.dtype)
+
+
+def prune_tree_balanced(params, density: float, vk: int, vn: int, *, min_dim: int = 256):
+    """Vector-prune every 2-D matmul weight in a pytree (leaves named arrays).
+
+    Matrices smaller than `min_dim` on either axis (norms, embeddings' last
+    dim, biases) are left dense.  Returns (new_params, report dict).
+    """
+    report = {}
+
+    def visit(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim != 2:
+            return leaf
+        k, n = leaf.shape
+        if k < min_dim or n < min_dim or k % vk or n % vn:
+            return leaf
+        pruned, _ = prune_vectors_balanced(np.asarray(leaf), density, vk, vn)
+        report[jax.tree_util.keystr(path)] = element_density(pruned)
+        return jnp.asarray(pruned, dtype=leaf.dtype)
+
+    new = jax.tree_util.tree_map_with_path(visit, params)
+    return new, report

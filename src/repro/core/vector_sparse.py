@@ -1,0 +1,126 @@
+"""VectorSparse: balanced block-CSR weight format (the paper's vector sparsity on TPU).
+
+The paper (VSCNN, ISCAS'19) stores only nonzero 1-D weight/input vectors in
+SRAM, with a per-vector index driving the accumulator.  On TPU the natural
+"vector" is a (vk, vn) tile aligned to the MXU lanes: a weight matrix
+W (K, N) is cut into KB x NB tiles; an all-zero tile is simply not stored.
+
+We additionally impose *balance*: every output strip (column of NB) keeps the
+same number S of nonzero K-tiles.  This makes the sparse matmul expressible
+with a static-shape gather (scan/jit/GSPMD friendly) and mirrors the lockstep
+the paper's PE blocks already impose.  ``idx`` is the paper's "index system":
+``idx[j, s]`` names the K-tile that the s-th issued vector of output strip j
+multiplies against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["VectorSparse", "encode", "decode", "from_mask", "tile_mask"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class VectorSparse:
+    """Balanced block-CSR matrix.
+
+    vals : (NB, S, vk, vn)  -- nonzero tiles, per output strip
+    idx  : (NB, S) int32    -- K-tile index of each stored tile
+    shape: (K, N) dense shape
+    """
+
+    vals: jax.Array
+    idx: jax.Array
+    shape: tuple[int, int]
+
+    # -- pytree plumbing (idx is a leaf so it can live in param trees) -------
+    def tree_flatten(self):
+        return (self.vals, self.idx), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        vals, idx = children
+        return cls(vals=vals, idx=idx, shape=aux[0])
+
+    # -- conveniences --------------------------------------------------------
+    @property
+    def vk(self) -> int:
+        return self.vals.shape[2]
+
+    @property
+    def vn(self) -> int:
+        return self.vals.shape[3]
+
+    @property
+    def nnz_per_strip(self) -> int:
+        return self.vals.shape[1]
+
+    @property
+    def n_strips(self) -> int:
+        return self.vals.shape[0]
+
+    @property
+    def kb(self) -> int:
+        return self.shape[0] // self.vk
+
+    @property
+    def density(self) -> float:
+        """Fraction of K-tiles stored (== vector density of the paper)."""
+        return self.nnz_per_strip / self.kb
+
+    @property
+    def dtype(self):
+        return self.vals.dtype
+
+    def astype(self, dtype) -> "VectorSparse":
+        return VectorSparse(self.vals.astype(dtype), self.idx, self.shape)
+
+
+def tile_mask(w: jax.Array, vk: int, vn: int) -> jax.Array:
+    """(KB, NB) bool mask: True where the (vk, vn) tile of w has any nonzero."""
+    k, n = w.shape
+    assert k % vk == 0 and n % vn == 0, f"{w.shape} not tileable by ({vk},{vn})"
+    t = w.reshape(k // vk, vk, n // vn, vn)
+    return jnp.any(t != 0, axis=(1, 3))
+
+
+def from_mask(w: jax.Array, mask: np.ndarray, vk: int, vn: int) -> VectorSparse:
+    """Encode w keeping exactly the tiles where mask is True.
+
+    ``mask`` must be balanced: equal count per column (output strip).  Host-side
+    (numpy) because the index structure is static data, not traced.
+    """
+    mask = np.asarray(mask)
+    k, n = w.shape
+    kb, nb = k // vk, n // vn
+    assert mask.shape == (kb, nb)
+    counts = mask.sum(axis=0)
+    s = int(counts[0])
+    if not np.all(counts == s):
+        raise ValueError(f"unbalanced mask: per-strip counts {counts}")
+    # idx[j, s] = sorted K-tile ids of nonzero tiles in strip j
+    idx = np.stack([np.nonzero(mask[:, j])[0] for j in range(nb)]).astype(np.int32)
+    tiles = w.reshape(kb, vk, nb, vn).transpose(2, 0, 1, 3)  # (NB, KB, vk, vn)
+    vals = jnp.take_along_axis(tiles, jnp.asarray(idx)[:, :, None, None], axis=1)
+    return VectorSparse(vals=vals, idx=jnp.asarray(idx), shape=(k, n))
+
+
+def encode(w: jax.Array, vk: int, vn: int) -> VectorSparse:
+    """Encode an already vector-pruned dense matrix (balanced occupancy)."""
+    mask = np.asarray(tile_mask(w, vk, vn))
+    return from_mask(w, mask, vk, vn)
+
+
+@partial(jax.jit, static_argnames=())
+def decode(vs: VectorSparse) -> jax.Array:
+    """Densify (oracle/debug path)."""
+    nb, s, vk, vn = vs.vals.shape
+    kb = vs.shape[0] // vk
+    tiles = jnp.zeros((nb, kb, vk, vn), vs.vals.dtype)
+    tiles = tiles.at[jnp.arange(nb)[:, None], vs.idx].add(vs.vals)
+    return tiles.transpose(1, 2, 0, 3).reshape(vs.shape)

@@ -1,0 +1,2 @@
+"""Deterministic shard-aware synthetic data pipelines."""
+from .pipeline import LMBatchSpec, SyntheticLM, SyntheticImages, SyntheticEmbeds

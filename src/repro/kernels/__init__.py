@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: sparse conv/matmul.
+
+- `vsmm`   -- vector-sparse matmul (scalar-prefetch block-CSR, the paper's
+             index system as BlockSpec.index_map, runtime input-vector skip)
+- `vsconv` -- direct 3x3 vector-sparse convolution (tap-granular weight skip)
+- `flash`  -- flash-attention forward (VMEM-resident online softmax; the
+             dominant HBM term of every train/prefill roofline cell)
+- `ref`    -- pure-jnp oracles
+- `ops`    -- jit'd public wrappers (padding, backend dispatch)
+
+Validated with interpret=True on CPU; compiled paths target TPU v5e.
+"""
+from .ops import vsmm, vsconv
+from .flash import flash_fwd_pallas
+from . import ref

@@ -1,0 +1,144 @@
+"""Pallas TPU flash-attention (forward) kernel.
+
+The roofline audit (EXPERIMENTS §Perf, cell C) shows the dominant HBM term
+of every training/prefill cell is the online-softmax score chain — XLA:CPU
+materializes the (bq, bk) f32 score block ~10x per KV step.  This kernel is
+the TPU answer: the whole chain (scores -> mask -> running max -> exp ->
+accumulate) lives in VMEM; HBM traffic is exactly q/k/v reads + one output
+write.  Used by the serving path (prefill has no backward); training uses
+the jnp flash (attention.flash_attention) whose backward XLA derives.
+
+Layout: q (BH, Tq, hd), k/v (BH, Tk, hd) — heads flattened into the leading
+grid dim so one kernel covers MHA/GQA (repeat KV before the call, as the
+jnp path does).  Grid (BH, nq, nk), kv innermost; the output tile is
+revisited and normalized at the last kv step.  Causal/window masking is
+positional; fully-masked kv blocks issue no MXU op (@pl.when — the same
+skip the paper applies to zero vectors, here to masked blocks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_fwd_pallas"]
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            bq: int, bk: int, causal: bool, window, q_offset: int,
+            scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos0 = q_offset + qi * bq
+    kpos0 = ki * bk
+    # block-level skip: no query in this tile attends to this kv tile
+    live = True
+    if causal:
+        live = qpos0 + bq - 1 >= kpos0
+    if window is not None:
+        live = jnp.logical_and(live, qpos0 < kpos0 + bk + window - 1) \
+            if causal else (qpos0 < kpos0 + bk + window - 1)
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0].astype(jnp.float32)          # (bk, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                  # (bq, bk)
+        qpos = qpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kpos0 + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window is not None:
+            mask = jnp.logical_and(mask, qpos - kpos < window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[:, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=1)
+        m_ref[:, 0] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_ref[...] = acc_ref[...] * corr[:, None] + pv
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _flush():
+        denom = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "bq", "bk", "interpret"),
+)
+def flash_fwd_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bq: int = 256,
+    bk: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """q (BH, Tq, hd), k/v (BH, Tk, hd) -> (BH, Tq, hd).
+
+    Tq % bq == 0 and Tk % bk == 0 (callers pad); hd should be a multiple of
+    128 on real TPUs (any value works in interpret mode).
+    """
+    bh, tq, hd = q.shape
+    _, tk, _ = k.shape
+    assert tq % bq == 0 and tk % bk == 0, (tq, bq, tk, bk)
+    nq, nk = tq // bq, tk // bk
+    scale = hd ** -0.5
+
+    grid = (bh, nq, nk)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, bq=bq, bk=bk, causal=causal, window=window,
+            q_offset=q_offset, scale=scale,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, tq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # running max
+            pltpu.VMEM((bq, 1), jnp.float32),   # running denom
+            pltpu.VMEM((bq, hd), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=int(4 * bh * tq * tk * hd * (0.5 if causal else 1.0)),
+            bytes_accessed=int(
+                q.size * q.dtype.itemsize
+                + nq * (k.size + v.size) * k.dtype.itemsize
+                + q.size * q.dtype.itemsize
+            ),
+            transcendentals=int(bh * tq * tk),
+        ),
+    )(q, k, v)

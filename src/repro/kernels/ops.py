@@ -1,0 +1,68 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handle padding to kernel-friendly shapes, backend dispatch (interpret=True on
+CPU so kernels validate everywhere, compiled on real TPU), and layout prep
+(the vsconv row-tap stack).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vector_sparse import VectorSparse
+from .vsmm import vsmm_pallas
+from .vsconv import vsconv_pallas, build_row_tap_stack
+
+__all__ = ["vsmm", "vsconv"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def vsmm(
+    x: jax.Array,
+    vs: VectorSparse,
+    *,
+    bm: int = 256,
+    skip_zero_inputs: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x (M, K) @ vector-sparse W (K, N) -> (M, N); pads M to a bm multiple."""
+    m, k = x.shape
+    interpret = _interpret() if interpret is None else interpret
+    bm = min(bm, _round_up(m, 8))
+    mp = _round_up(m, bm)
+    if mp != m:
+        x = jnp.pad(x, ((0, mp - m), (0, 0)))
+    out = vsmm_pallas(
+        x, vs, bm=bm, skip_zero_inputs=skip_zero_inputs, interpret=interpret
+    )
+    return out[:m] if mp != m else out
+
+
+def vsconv(
+    x: jax.Array,
+    vs: VectorSparse,
+    *,
+    bh: int = 8,
+    skip_zero_inputs: bool = True,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """NHWC 3x3/s1/p1 conv with vector-sparse (9*Cin, Cout) weights."""
+    n, h, w, c = x.shape
+    interpret = _interpret() if interpret is None else interpret
+    bh = min(bh, h)
+    hp = _round_up(h, bh)
+    if hp != h:
+        x = jnp.pad(x, ((0, 0), (0, hp - h), (0, 0), (0, 0)))
+    xt = build_row_tap_stack(x)
+    out = vsconv_pallas(
+        xt, vs, w_out=w, bh=bh, skip_zero_inputs=skip_zero_inputs,
+        interpret=interpret,
+    )
+    return out[:, :h] if hp != h else out

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here computing the *same
+mathematical function* with plain jnp ops (densify + dense compute).  Tests
+sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.vector_sparse import VectorSparse, decode
+
+__all__ = ["vsmm_ref", "vsconv_ref", "conv3x3_ref"]
+
+
+def vsmm_ref(x: jax.Array, vs: VectorSparse) -> jax.Array:
+    """x (M, K) @ densify(vs) (K, N) -> (M, N), f32 accumulation."""
+    w = decode(vs)
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(x.dtype)
+
+
+def conv3x3_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Dense 3x3/s1/p1 conv oracle. x NHWC, w (3,3,Cin,Cout)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ).astype(x.dtype)
+
+
+def vsconv_ref(x: jax.Array, w_vs: VectorSparse) -> jax.Array:
+    """3x3 conv against the densified vector-sparse weight.
+
+    w_vs shape is (9*Cin, Cout) with K ordered (ky, kx, cin) — the layout
+    produced by `core.sparse_ops.conv_weight_to_matrix`.
+    """
+    n, h, wdt, c = x.shape
+    k, cout = w_vs.shape
+    assert k == 9 * c, (k, c)
+    w = decode(w_vs).reshape(3, 3, c, cout)
+    return conv3x3_ref(x, w)

@@ -1,0 +1,149 @@
+"""vsconv — direct 3x3 vector-sparse convolution Pallas TPU kernel.
+
+The paper decomposes a 3x3 conv into kernel *columns* (WA/WB/WC in Fig. 6) and
+skips all-zero columns and all-zero input column vectors.  The TPU analogue
+decomposes the conv into kernel *taps* x input-channel tiles:
+
+    conv(x, w) = sum_{ky, kx} shift(x, ky, kx) @ w[ky, kx]       (9 matmuls)
+               = sum over K-tiles t=(ky, kx, cin-tile) of
+                 shift(x, ky, kx)[cin-tile] @ w_tile[t]
+
+A "weight vector" here is one (vk cin, vn cout) tile of one tap — pruned tiles
+are structurally absent from the balanced block-CSR, so their matmuls never
+enter the grid (the paper's weight-side skip).  An all-zero shifted-input row
+block is skipped at runtime with ``@pl.when`` (the input-side skip).
+
+Input layout: the `ops.vsconv` wrapper pre-builds a row-tap stack
+  XT (N, 3, H, bW, C)   with XT[:, ky] = pad(x)[:, ky : ky + H, :, :]
+so the ky shift becomes a unit-block index (selectable from the scalar-
+prefetched tap id), and the kx shift is a dynamic sublane slice inside the
+kernel.  This is the paper's "broadcast the right input column" realized as
+Pallas index_map arithmetic; bW = W+2 rounded up to the sublane multiple.
+
+Grid: ``(NB, N * HB, S)`` — cout strip j, (image, row-block) m, sparse step s.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.vector_sparse import VectorSparse
+
+__all__ = ["vsconv_pallas", "build_row_tap_stack"]
+
+
+def build_row_tap_stack(x: jax.Array, *, sublane: int = 8) -> jax.Array:
+    """NHWC -> (N, 3, H, bW, C) row-tap stack of the pad-1 input.
+
+    bW = W + 2 rounded up to ``sublane`` so the kernel's kx slice stays
+    in-bounds and sublane-aligned.
+    """
+    n, h, w, c = x.shape
+    bw = -(-(w + 2) // sublane) * sublane
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, bw - w - 1), (0, 0)))
+    return jnp.stack([xp[:, ky : ky + h] for ky in range(3)], axis=1)
+
+
+def _kernel(idx_ref, xt_ref, w_ref, o_ref, acc_ref, *, cb: int, w_out: int,
+             skip_zero_inputs: bool):
+    j = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # decode the K-tile id: t = (ky*3 + kx) * CB + cin_tile
+    t = idx_ref[j, s]
+    kx = (t // cb) % 3
+
+    xt = xt_ref[0, 0]  # (bh, bW, vk) — ky and cin-tile selected by index_map
+    xs = jax.lax.dynamic_slice_in_dim(xt, kx, w_out, axis=1)  # (bh, W, vk)
+    xs2 = xs.reshape(-1, xs.shape[-1])  # (bh*W, vk)
+
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            xs2, w_ref[0, 0], preferred_element_type=jnp.float32
+        )
+
+    if skip_zero_inputs:
+        # paper's input zero-vector skip (post-ReLU activations)
+        pl.when(jnp.any(xs2 != 0))(_mac)
+    else:
+        _mac()
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].reshape(o_ref.shape).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w_out", "bh", "skip_zero_inputs", "interpret", "out_dtype"),
+)
+def vsconv_pallas(
+    xt: jax.Array,
+    vs: VectorSparse,
+    *,
+    w_out: int,
+    bh: int = 8,
+    skip_zero_inputs: bool = True,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Row-tap stack xt (N, 3, H, bW, C) * sparse (9C, Cout) -> (N, H, W, Cout).
+
+    H must be a multiple of ``bh``; the `ops.vsconv` wrapper pads.
+    """
+    n, three, h, bw, c = xt.shape
+    assert three == 3
+    nb, s_steps, vk, vn = vs.vals.shape
+    assert vs.shape[0] == 9 * c and c % vk == 0, (vs.shape, c, vk)
+    assert h % bh == 0, (h, bh)
+    cb = c // vk  # cin-tiles per tap
+    hb = h // bh
+    out_dtype = out_dtype or xt.dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, n * hb, s_steps),
+        in_specs=[
+            # block: one image, one ky tap, one row block, full width, one cin tile
+            pl.BlockSpec(
+                (1, 1, bh, bw, vk),
+                lambda j, m, s, idx: (
+                    m // hb,                      # image
+                    idx[j, s] // cb // 3,         # ky
+                    m % hb,                       # row block
+                    0,
+                    idx[j, s] % cb,               # cin tile
+                ),
+            ),
+            pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ),
+        scratch_shapes=[pltpu.VMEM((bh * w_out, vn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, cb=cb, w_out=w_out, skip_zero_inputs=skip_zero_inputs
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h, w_out, nb * vn), out_dtype),
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=2 * n * h * w_out * nb * s_steps * vk * vn,
+            bytes_accessed=(
+                n * hb * nb * s_steps * bh * bw * vk * xt.dtype.itemsize
+                + vs.vals.size * vs.vals.dtype.itemsize
+                + n * h * w_out * nb * vn * jnp.dtype(out_dtype).itemsize
+            ),
+            transcendentals=0,
+        ),
+    )(vs.idx, xt, vs.vals)

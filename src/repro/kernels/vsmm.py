@@ -1,0 +1,124 @@
+"""vsmm — vector-sparse matmul Pallas TPU kernel (the paper's PE array on MXU).
+
+Maps VSCNN's dataflow onto the TPU memory hierarchy:
+
+  paper (ASIC)                          this kernel (TPU)
+  ------------------------------------  -----------------------------------
+  nonzero 1-D weight vectors in SRAM    nonzero (vk, vn) weight tiles in a
+                                        balanced block-CSR; only those tiles
+                                        are DMA'd HBM->VMEM by the grid
+                                        pipeline (static skip: the zero
+                                        tiles never cost cycles *or* FLOPs)
+  per-vector index -> accumulator       scalar-prefetch ``idx`` in SMEM
+                                        drives BlockSpec.index_map: the s-th
+                                        issued vector of output strip j
+                                        gathers activation K-tile idx[j,s]
+  zero input vectors absent from SRAM   ``@pl.when(any(x!=0))`` runtime
+                                        guard: an all-zero activation tile
+                                        issues no MXU op (the TPU analogue
+                                        of a skipped cycle; the DMA itself
+                                        is pipelined and hidden)
+  diagonal partial-sum accumulation     f32 VMEM accumulator revisited
+                                        across the innermost sparse-K grid
+                                        dimension (stays on-chip, one
+                                        HBM write at s == S-1)
+  dense/sparse in one datapath          the dense path is S == KB with
+                                        idx[j, s] = s — same kernel
+
+Grid: ``(NB, MB, S)`` — output strip j, activation row-block m, sparse step s
+(innermost, so the output tile is revisited and accumulated in VMEM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.vector_sparse import VectorSparse
+
+__all__ = ["vsmm_pallas"]
+
+
+def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, skip_zero_inputs: bool):
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    if skip_zero_inputs:
+        # Paper's input-side zero-vector skip: an all-zero activation tile
+        # (e.g. post-ReLU) issues no MXU work.  On the ASIC the vector is not
+        # in SRAM at all; on TPU the DMA is pipelined/hidden and we predicate
+        # off the compute, which is what costs cycles on the MXU.
+        nonzero = jnp.any(x != 0)
+
+        @pl.when(nonzero)
+        def _mac():
+            acc_ref[...] += jnp.dot(
+                x, w_ref[0, 0], preferred_element_type=jnp.float32
+            )
+    else:
+        acc_ref[...] += jnp.dot(x, w_ref[0, 0], preferred_element_type=jnp.float32)
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "skip_zero_inputs", "interpret", "out_dtype"),
+)
+def vsmm_pallas(
+    x: jax.Array,
+    vs: VectorSparse,
+    *,
+    bm: int = 256,
+    skip_zero_inputs: bool = True,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """x (M, K) @ vector-sparse W (K, N) -> (M, N).
+
+    M must be a multiple of ``bm`` and K of ``vs.vk`` (the `ops.vsmm` wrapper
+    pads).  FLOPs scale with vs.density — the zero weight vectors are
+    structurally absent from the grid.
+    """
+    m, k = x.shape
+    nb, s_steps, vk, vn = vs.vals.shape
+    assert k == vs.shape[0] and k % vk == 0, (x.shape, vs.shape, vk)
+    assert m % bm == 0, (m, bm)
+    out_dtype = out_dtype or x.dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, m // bm, s_steps),
+        in_specs=[
+            # activation K-tile gather: the paper's index system
+            pl.BlockSpec((bm, vk), lambda j, mi, s, idx: (mi, idx[j, s])),
+            # the s-th stored weight vector of strip j
+            pl.BlockSpec((1, 1, vk, vn), lambda j, mi, s, idx: (j, s, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, vn), lambda j, mi, s, idx: (mi, j)),
+        scratch_shapes=[pltpu.VMEM((bm, vn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, skip_zero_inputs=skip_zero_inputs),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, nb * vn), out_dtype),
+        interpret=interpret,
+        cost_estimate=pl.CostEstimate(
+            flops=2 * m * nb * s_steps * vk * vn,
+            bytes_accessed=(
+                m * nb * s_steps * vk * x.dtype.itemsize
+                + vs.vals.size * vs.vals.dtype.itemsize
+                + m * nb * vn * jnp.dtype(out_dtype).itemsize
+            ),
+            transcendentals=0,
+        ),
+    )(vs.idx, x, vs.vals)

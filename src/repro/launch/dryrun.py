@@ -1,0 +1,156 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import — jax locks the device
+count at first init, and the production meshes need 512 placeholder host
+devices (16x16 single pod, 2x16x16 multi-pod).
+
+Per cell this script:
+  1. builds the step function + ShapeDtypeStruct inputs + shardings,
+  2. jit(...).lower(...).compile()  — proving the distribution config is
+     coherent (sharding mismatches / unsupported collectives fail here),
+  3. prints compiled.memory_analysis()  (fits-in-HBM proof),
+  4. derives the three roofline terms (utils.hlo + utils.roofline) and
+     appends a row to the results JSON consumed by EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k
+  python -m repro.launch.dryrun --all [--multipod] [--out results.json]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch import step_builders as sb
+from repro.launch.mesh import make_production_mesh, mesh_name
+from repro.parallel import sharding as shd
+from repro.utils import hlo, roofline
+
+__all__ = ["run_cell", "main"]
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             rules: shd.MeshRules | None = None, verbose: bool = True,
+             keep_text: bool = False, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    import dataclasses
+    cfg = get_config(arch)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    reason = cfg.supported_shapes()[shape_name]
+    if reason:
+        row = {"arch": arch, "shape": shape_name,
+               "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+               "status": "skip", "reason": reason}
+        if verbose:
+            print(f"SKIP  {arch} x {shape_name}: {reason}")
+        return row
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = rules or shd.TRAIN_RULES
+    t0 = time.time()
+    with shd.use_mesh(mesh, rules) as ctx:
+        art = sb.build(cfg, shape, ctx)
+        jitted = jax.jit(
+            art.fn,
+            in_shardings=art.in_shardings,
+            out_shardings=art.out_shardings,
+            donate_argnums=art.donate,
+        )
+        lowered = jitted.lower(*art.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        text = compiled.as_text()
+
+    cost = hlo.analyze(text)
+    rep = roofline.report(
+        arch=arch, shape=shape_name, mesh_name=mesh_name(mesh),
+        chips=mesh.size, cost=cost,
+        model_flops=sb.model_flops(cfg, shape), mem_stats=mem,
+    )
+    row = rep.row()
+    row.update(status="ok", lower_s=round(t_lower, 1),
+               compile_s=round(t_compile, 1),
+               hlo_bytes=len(text), tag=tag,
+               overrides={k: str(v) for k, v in (overrides or {}).items()})
+    if keep_text:
+        row["_hlo_text"] = text
+    if verbose:
+        print(rep.summary())
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"| HLO {len(text)/1e6:.1f} MB")
+        print("  " + hlo.collective_report(cost).replace("\n", "\n  "))
+    return row
+
+
+OPTIMIZED_FLAGS = {
+    # validated by the §Perf hillclimb (benchmarks/hillclimb.py)
+    "train": {"bf16_flow": True, "flash_remat": True},     # + per-arch mb
+    "prefill": {"bf16_flow": True},
+    "decode": {"moe_dispatch": "resident", "bf16_flow": True},
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--optimized", action="store_true",
+                    help="apply the hillclimb-validated beyond-paper flags")
+    ap.add_argument("--out", default="benchmarks/results/dryrun.json")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in list_archs():
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells.append((args.arch, args.shape))
+
+    rows = []
+    for arch, shape in cells:
+        print(f"=== {arch} x {shape} "
+              f"({'2x16x16' if args.multipod else '16x16'}) ===", flush=True)
+        overrides = None
+        if args.optimized:
+            overrides = dict(OPTIMIZED_FLAGS[SHAPES[shape].kind])
+            if SHAPES[shape].kind != "train":
+                overrides.pop("flash_remat", None)
+        elif not args.optimized:
+            # baseline semantics: no microbatching (configs carry tuned
+            # defaults for the optimized sweep)
+            overrides = {"microbatches": 1}
+        try:
+            rows.append(run_cell(arch, shape, multi_pod=args.multipod,
+                                 overrides=overrides,
+                                 tag="optimized" if args.optimized else "baseline"))
+        except Exception as e:  # a failing cell is a bug; record and continue
+            traceback.print_exc()
+            rows.append({"arch": arch, "shape": shape, "status": "error",
+                         "error": f"{type(e).__name__}: {e}"})
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    suffix = "_multipod" if args.multipod else ""
+    out = args.out.replace(".json", f"{suffix}.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    ok = sum(r.get("status") == "ok" for r in rows)
+    skip = sum(r.get("status") == "skip" for r in rows)
+    err = sum(r.get("status") == "error" for r in rows)
+    print(f"\n{ok} ok / {skip} skip / {err} error -> {out}")
+    return 1 if err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,271 @@
+"""Build (step_fn, ShapeDtypeStruct inputs, shardings) for train/prefill/decode.
+
+Shared by the dry-run (lower + compile, no allocation), the trainer, and the
+server.  Everything here derives from the param schema: input_specs are
+ShapeDtypeStructs (weak-type-correct, shardable, no device memory), and every
+sharding comes from the logical-axes trees via the active MeshRules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as PS
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import transformer as tfm
+from repro.models.layers import axes_tree, init_params, is_param
+from repro.optim import adamw, adafactor, clip_by_global_norm
+from repro.optim.schedules import warmup_cosine
+from repro.parallel import sharding as shd
+
+__all__ = [
+    "make_optimizer", "param_structs", "param_shardings", "opt_state_axes",
+    "build_train", "build_prefill", "build_decode", "model_flops",
+]
+
+
+def make_optimizer(cfg: ArchConfig):
+    if cfg.optimizer == "adafactor":
+        return adafactor()
+    return adamw()
+
+
+# ---------------------------------------------------------------------------
+# structures + shardings
+# ---------------------------------------------------------------------------
+
+
+def param_structs(cfg: ArchConfig):
+    schema = tfm.lm_schema(cfg)
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: init_params(schema, key, cfg.dtype)), schema
+
+
+def _shard(axes, shape, ctx):
+    return NamedSharding(
+        ctx.mesh, shd.spec_for(axes, mesh=ctx.mesh, rules=ctx.rules, shape=shape)
+    )
+
+
+def tree_shardings(axes_tr, struct_tr, ctx):
+    return jax.tree.map(
+        lambda a, s: _shard(a, s.shape, ctx),
+        axes_tr, struct_tr,
+        is_leaf=lambda t: isinstance(t, tuple),
+    )
+
+
+def param_shardings(cfg: ArchConfig, ctx, schema=None):
+    schema = schema or tfm.lm_schema(cfg)
+    structs = jax.eval_shape(
+        lambda: init_params(schema, jax.random.PRNGKey(0), cfg.dtype)
+    )
+    return tree_shardings(axes_tree(schema), structs, ctx), structs
+
+
+def opt_state_axes(cfg: ArchConfig, schema):
+    """Logical-axes tree matching the optimizer state structure."""
+    p_axes = axes_tree(schema)
+    if cfg.optimizer == "adafactor":
+        opt = adafactor()
+        moments = jax.tree.map(
+            lambda p: opt.state_axes(p.axes, p.shape), schema, is_leaf=is_param
+        )
+        return {"moments": moments, "count": ()}
+    return {"m": p_axes, "v": p_axes, "count": ()}
+
+
+# ---------------------------------------------------------------------------
+# batch specs
+# ---------------------------------------------------------------------------
+
+
+def _train_batch(cfg: ArchConfig, shape: ShapeSpec, ctx):
+    b, t = shape.global_batch, shape.seq_len
+    structs, axes = {}, {}
+    if cfg.embed_inputs:
+        structs["tokens"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+        axes["tokens"] = ("batch", "seq")
+    else:
+        structs["embeds"] = jax.ShapeDtypeStruct((b, t, cfg.d_model), cfg.dtype)
+        axes["embeds"] = ("batch", "seq", None)
+    structs["labels"] = jax.ShapeDtypeStruct((b, t), jnp.int32)
+    axes["labels"] = ("batch", "seq")
+    shards = {k: _shard(axes[k], structs[k].shape, ctx) for k in structs}
+    return structs, shards
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StepArtifacts:
+    fn: object                 # python callable
+    args: tuple                # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: object      # tree or None
+    donate: tuple
+
+
+def build_train(cfg: ArchConfig, shape: ShapeSpec, ctx,
+                *, grad_clip: float = 1.0) -> StepArtifacts:
+    opt = make_optimizer(cfg)
+    lr_fn = warmup_cosine(3e-4, 200, 10_000)
+    schema = tfm.lm_schema(cfg)
+    p_struct, _ = param_structs(cfg)
+    p_shard = tree_shardings(axes_tree(schema), p_struct, ctx)
+    s_struct = jax.eval_shape(opt.init, p_struct)
+    s_shard = tree_shardings(opt_state_axes(cfg, schema), s_struct, ctx)
+    b_struct, b_shard = _train_batch(cfg, shape, ctx)
+    step_struct = jax.ShapeDtypeStruct((), jnp.int32)
+    repl = NamedSharding(ctx.mesh, PS())
+    mb = cfg.microbatches
+    assert shape.global_batch % max(mb, 1) == 0, (shape.global_batch, mb)
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            tfm.loss_fn, has_aux=True)(params, batch, cfg)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, step):
+        if mb <= 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            # gradient accumulation: activation memory / mb, one optimizer
+            # step.  fp32 accumulators keep the sum exact across microbatches.
+            batch_mb = jax.tree.map(
+                lambda a: a.reshape(mb, a.shape[0] // mb, *a.shape[1:]), batch)
+
+            def one(carry, b_i):
+                g_acc, l_acc, c_acc, a_acc = carry
+                loss, metrics, grads = grads_of(params, b_i)
+                # NOTE §Perf A-iterations: pinning grads/accumulator to the
+                # param shardings here (with_sharding_constraint) was tried
+                # and REVERTED — it forced ~40 GB of extra accumulator
+                # materialization (A9) for no collective win over A7/A8.
+                g_acc = jax.tree.map(
+                    lambda a, g: a + (g.astype(jnp.float32) / mb).astype(a.dtype),
+                    g_acc, grads)
+                return (g_acc, l_acc + loss / mb, c_acc + metrics["ce"] / mb,
+                        a_acc + metrics["aux"] / mb), None
+
+            acc_dt = jnp.dtype(cfg.grad_accum_dtype)
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            z = jnp.zeros((), jnp.float32)
+            (grads, loss, ce, aux), _ = jax.lax.scan(
+                one, (g0, z, z, z), batch_mb)
+            metrics = {"ce": ce, "aux": aux}
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        updates, opt_state = opt.update(grads, opt_state, params, lr_fn(step))
+        params = jax.tree.map(lambda p, u: p + u, params, updates)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    metrics_shard = {"ce": repl, "aux": repl, "loss": repl, "grad_norm": repl}
+    return StepArtifacts(
+        fn=train_step,
+        args=(p_struct, s_struct, b_struct, step_struct),
+        in_shardings=(p_shard, s_shard, b_shard, repl),
+        out_shardings=(p_shard, s_shard, metrics_shard),
+        donate=(0, 1),
+    )
+
+
+def build_prefill(cfg: ArchConfig, shape: ShapeSpec, ctx) -> StepArtifacts:
+    b, t = shape.global_batch, shape.seq_len
+    capacity = t
+    schema = tfm.lm_schema(cfg)
+    p_struct, _ = param_structs(cfg)
+    p_shard = tree_shardings(axes_tree(schema), p_struct, ctx)
+    if cfg.embed_inputs:
+        batch = {"tokens": jax.ShapeDtypeStruct((b, t), jnp.int32)}
+        b_shard = {"tokens": _shard(("batch", "seq"), (b, t), ctx)}
+    else:
+        batch = {"embeds": jax.ShapeDtypeStruct((b, t, cfg.d_model), cfg.dtype)}
+        b_shard = {"embeds": _shard(("batch", "seq", None), (b, t, cfg.d_model), ctx)}
+
+    fn = functools.partial(_prefill_fn, cfg=cfg, capacity=capacity)
+    if cfg.encoder_only:
+        # encoder inference emits per-position logits, no cache
+        out_shard = _shard(("batch", "seq", "vocab"),
+                           (b, t, cfg.padded_vocab), ctx)
+    else:
+        c_struct = jax.eval_shape(lambda: tfm.init_cache(cfg, b, capacity))
+        c_shard = tree_shardings(tfm.cache_axes(cfg), c_struct, ctx)
+        logits_shard = _shard(("batch", "vocab"), (b, cfg.padded_vocab), ctx)
+        out_shard = (logits_shard, c_shard)
+    return StepArtifacts(
+        fn=fn,
+        args=(p_struct, batch),
+        in_shardings=(p_shard, b_shard),
+        out_shardings=out_shard,
+        donate=(),
+    )
+
+
+def _prefill_fn(params, batch, *, cfg, capacity):
+    if cfg.encoder_only:
+        # encoder inference: per-position logits, no cache
+        return tfm.lm_apply(params, batch, cfg)
+    return tfm.prefill(params, batch, cfg, capacity=capacity)
+
+
+def build_decode(cfg: ArchConfig, shape: ShapeSpec, ctx) -> StepArtifacts:
+    b, t = shape.global_batch, shape.seq_len
+    schema = tfm.lm_schema(cfg)
+    p_struct, _ = param_structs(cfg)
+    p_shard = tree_shardings(axes_tree(schema), p_struct, ctx)
+    c_struct = jax.eval_shape(lambda: tfm.init_cache(cfg, b, t))
+    c_shard = tree_shardings(tfm.cache_axes(cfg), c_struct, ctx)
+    if cfg.embed_inputs:
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        tok_shard = _shard(("batch", None), (b, 1), ctx)
+    else:
+        tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.dtype)
+        tok_shard = _shard(("batch", None, None), (b, 1, cfg.d_model), ctx)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    repl = NamedSharding(ctx.mesh, PS())
+    logits_shard = _shard(("batch", "vocab"), (b, cfg.padded_vocab), ctx)
+
+    def decode(params, caches, tokens, pos):
+        return tfm.decode_step(params, caches, tokens, pos, cfg)
+
+    return StepArtifacts(
+        fn=decode,
+        args=(p_struct, c_struct, tok, pos),
+        in_shardings=(p_shard, c_shard, tok_shard, repl),
+        out_shardings=(logits_shard, c_shard),
+        donate=(1,),
+    )
+
+
+def build(cfg: ArchConfig, shape: ShapeSpec, ctx) -> StepArtifacts:
+    if shape.kind == "train":
+        return build_train(cfg, shape, ctx)
+    if shape.kind == "prefill":
+        return build_prefill(cfg, shape, ctx)
+    return build_decode(cfg, shape, ctx)
+
+
+# ---------------------------------------------------------------------------
+# useful-work reference FLOPs
+# ---------------------------------------------------------------------------
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference (global;
+    attention-score FLOPs excluded by convention)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

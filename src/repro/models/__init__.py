@@ -1,0 +1,2 @@
+"""Model zoo: transformer stack (GQA/MoE/Mamba/RWKV patterns) + VGG-16."""
+from . import layers, attention, moe, mamba, rwkv, transformer, cnn, frontend

@@ -1,0 +1,340 @@
+"""GQA attention: flash-style chunked softmax, TP/SP sharding, KV-cache decode.
+
+Sharding modes (cfg.attn_sharding):
+  'heads' — Q/K/V heads sharded over the model axis (classic TP; requires
+            n_heads % tp == 0).
+  'sp'    — sequence-parallel: Q sequence sharded over the model axis, KV
+            replicated (Megatron context-parallel style).  Used for archs
+            whose head count does not divide the model axis (qwen 20H,
+            phi3 40H, granite 24H on tp=16) — zero padding waste.
+
+Decode uses a sequence-sharded KV cache (logical axis 'kv_seq' -> model):
+each model shard holds a slice of the context, computes partial scores, and
+the global softmax reduction lowers to an all-reduce — flash-decoding
+expressed in GSPMD rather than hand-written collectives.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel import sharding as shd
+from repro.parallel.sharding import logical
+from .layers import P, dense, matmul_out_dtype, rope, rms_norm
+
+__all__ = ["attn_schema", "attention_apply", "flash_attention", "init_kv_cache"]
+
+
+def attn_schema(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s = {
+        "wq": P((d, h, hd), ("fsdp", "heads", "head_dim"), fan_in=d),
+        "wk": P((d, kv, hd), ("fsdp", "kv_heads", "head_dim"), fan_in=d),
+        "wv": P((d, kv, hd), ("fsdp", "kv_heads", "head_dim"), fan_in=d),
+        "wo": P((h, hd, d), ("heads", "head_dim", "fsdp"), fan_in=h * hd),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = P((h, hd), ("heads", "head_dim"), init="zeros")
+        s["bk"] = P((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+        s["bv"] = P((kv, hd), ("kv_heads", "head_dim"), init="zeros")
+    if cfg.qk_norm:
+        s["q_norm"] = P((hd,), (None,), init="zeros")
+        s["k_norm"] = P((hd,), (None,), init="zeros")
+    return s
+
+
+def _chunk_sizes(t: int, pref: int) -> int:
+    b = min(pref, t)
+    while t % b:
+        b -= 1
+    return b
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, T, KV, hd) -> (B, T, H, hd).
+
+    GSPMD-safe GQA: when Q heads are model-sharded but KV heads are not
+    divisible by tp (8 KV on tp=16), the (KV, G) grouped reshape of a sharded
+    H dim cannot be partitioned.  Repeating the *replicated* KV up to H keeps
+    every einsum on the sharded H dim; each shard materializes only its own
+    H/tp repeated heads.
+    """
+    b, t, kvh, hd = k.shape
+    if kvh == n_heads:
+        return k
+    g = n_heads // kvh
+    return jnp.broadcast_to(
+        k[:, :, :, None, :], (b, t, kvh, g, hd)
+    ).reshape(b, t, n_heads, hd)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    bq: int = 512,
+    bk: int = 1024,
+    remat_kv: bool = False,
+) -> jax.Array:
+    """Online-softmax attention, O(bq*bk) score memory.
+
+    q, k, v (B, T, H, hd) — KV already repeated to H (see `repeat_kv`).
+    ``q_offset`` places query positions at q_offset + [0, Tq) against key
+    positions [0, Tk).
+    """
+    b, tq, h, hd = q.shape
+    _, tk, _, _ = k.shape
+    scale = hd ** -0.5
+    bq = _chunk_sizes(tq, bq)
+    bk = _chunk_sizes(tk, bk)
+    nq, nk = tq // bq, tk // bk
+
+    qc = q.reshape(b, nq, bq, h, hd).transpose(1, 0, 3, 2, 4)   # (nq,B,H,bq,hd)
+    kc = k.reshape(b, nk, bk, h, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, bk, h, hd).transpose(1, 0, 3, 2, 4)
+
+    def q_step(_, qi_qc):
+        qi, qcur = qi_qc  # (B, H, bq, hd)
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, ki_kv):
+            m, l, acc = carry
+            ki, kcur, vcur = ki_kv  # (B, H, bk, hd) x2
+            kpos = ki * bk + jnp.arange(bk)
+            s = jnp.einsum(
+                "bhqd,bhsd->bhqs", qcur.astype(jnp.float32),
+                kcur.astype(jnp.float32),
+            ) * scale
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            if matmul_out_dtype() is None:  # bf16-flow: bf16 residuals
+                p = p.astype(vcur.dtype)
+            pv = jnp.einsum(
+                "bhqs,bhsd->bhqd", p, vcur,
+                preferred_element_type=jnp.float32,
+            )
+            acc = acc * corr[..., None] + pv
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, h, bq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, h, bq), jnp.float32)
+        a0 = jnp.zeros((b, h, bq, hd), jnp.float32)
+        step = kv_step
+        if remat_kv:
+            # flash semantics in backward too: recompute scores/p per kv
+            # chunk instead of storing (nk, B, H, bq, bk) residual stacks —
+            # the dominant HBM term of the training baseline (§Perf)
+            step = jax.checkpoint(kv_step)
+        (m, l, acc), _ = jax.lax.scan(
+            step, (m0, l0, a0), (jnp.arange(nk), kc, vc)
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]  # (B, H, bq, hd)
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qc))
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, tq, h, hd)
+    return out.astype(q.dtype)
+
+
+def init_kv_cache(cfg, batch: int, capacity: int, dtype) -> dict:
+    """One layer's cache arrays; the stack wrapper adds the group dim."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    shape = (batch, capacity, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+CACHE_AXES = {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+              "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def _flash_pallas(q, k, v, cfg, window):
+    """(B, T, H, hd) wrapper around the Pallas flash-fwd kernel."""
+    import jax as _jax
+    from repro.kernels.flash import flash_fwd_pallas
+    b, t, h, hd = q.shape
+    tk = k.shape[1]
+    to_bh = lambda a: a.transpose(0, 2, 1, 3).reshape(b * h, a.shape[1], hd)
+    bq = _chunk_sizes(t, 256)
+    bk = _chunk_sizes(tk, 512)
+    out = flash_fwd_pallas(
+        to_bh(q), to_bh(k), to_bh(v), causal=cfg.causal, window=window,
+        bq=bq, bk=bk, interpret=_jax.default_backend() != "tpu",
+    )
+    return out.reshape(b, h, t, hd).transpose(0, 2, 1, 3)
+
+
+def _persist_cache(k, v, t, cap, cfg):
+    """Prefill K/V persistence (shared by both attention impls)."""
+    if cap >= t:
+        kc = jnp.pad(k, ((0, 0), (0, cap - t), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, cap - t), (0, 0), (0, 0)))
+    else:
+        src = t - 1 - (t - 1 - jnp.arange(cap)) % cap
+        kc = jnp.take(k, src, axis=1)
+        vc = jnp.take(v, src, axis=1)
+    return {"k": logical(kc.astype(cfg.cache_dtype), CACHE_AXES["k"]),
+            "v": logical(vc.astype(cfg.cache_dtype), CACHE_AXES["v"])}
+
+
+def _project_qkv(params, x, cfg):
+    pt = matmul_out_dtype()
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"],
+                   preferred_element_type=pt).astype(x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"],
+                   preferred_element_type=pt).astype(x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"],
+                   preferred_element_type=pt).astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(q.dtype)
+        k = k + params["bk"].astype(k.dtype)
+        v = v + params["bv"].astype(v.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def attention_apply(
+    params: dict,
+    x: jax.Array,
+    cfg,
+    *,
+    window: int | None = None,
+    cache: dict | None = None,
+    pos: jax.Array | None = None,
+    decode: bool = False,
+    cache_capacity: int | None = None,
+):
+    """Returns (out, new_cache). new_cache is None in pure-training mode.
+
+    Training / prefill: full-sequence flash attention; if ``cache_capacity``
+    is given (prefill) the projected K/V are persisted sequence-sharded.
+    Decode:  x is (B, 1, D); reads the cache, writes position ``pos``.
+
+    The cache is *circular*: capacity may be min(window, seq) for sliding-
+    window layers; position p lives in slot p % capacity, and the absolute
+    position of slot i under write head ``pos`` is pos - ((pos - i) % cap)
+    (which degenerates to kpos == i when cap > pos, i.e. a plain cache).
+    """
+    b, t, d = x.shape
+    seq_ax = "seq_sp" if cfg.attn_sharding == "sp" else "seq"
+    q, k, v = _project_qkv(params, x, cfg)
+
+    if decode:
+        assert cache is not None and pos is not None
+        dpos = jnp.reshape(pos, (1,))
+        q = rope(q, dpos, theta=cfg.rope_theta)
+        k = rope(k, dpos, theta=cfg.rope_theta)
+        cap = cache["k"].shape[1]
+        slot = pos % cap
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+        k_cache = logical(k_cache, CACHE_AXES["k"])
+        v_cache = logical(v_cache, CACHE_AXES["v"])
+        kvh = cfg.n_kv_heads
+        g = cfg.n_heads // kvh
+        qg = q.reshape(b, 1, kvh, g, cfg.head_dim)
+        scores = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qg, k_cache,
+            preferred_element_type=jnp.float32,
+        ) * (cfg.head_dim ** -0.5)
+        kpos = pos - (pos - jnp.arange(cap)) % cap  # absolute pos per slot
+        valid = kpos[None, :] >= 0
+        if window is not None:
+            valid &= pos - kpos[None, :] < window
+        scores = jnp.where(valid[None, None, None], scores, -1e30)
+        # global softmax over the sequence-sharded axis: GSPMD inserts the
+        # max / sum all-reduces (flash-decoding combine)
+        p = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum(
+            "bkgqs,bskd->bqkgd", p, v_cache,
+            preferred_element_type=jnp.float32,
+        ).astype(x.dtype)
+        out = out.reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        new_cache = {"k": k_cache, "v": v_cache}
+    else:
+        # Pin projection outputs to a *computed-sharded* layout before any
+        # replicated-KV relaxation, so GSPMD places the seq all-gather AFTER
+        # the projection dots.  Without this the propagation pass sometimes
+        # gathers the activations first and computes the K/V projections
+        # replicated over the model axis — 16x redundant FLOPs (§Perf C-iter).
+        ctx = shd.current()
+        tp = 1
+        if ctx is not None:
+            phys = ctx.rules.get("kv_heads")
+            tp = ctx.mesh.shape.get(phys, 1) if isinstance(phys, str) else 1
+        kv_sharded = cfg.n_kv_heads % max(tp, 1) == 0
+        kv_proj_axes = (
+            ("batch", "seq" if cfg.attn_sharding == "heads" else "seq_sp",
+             "kv_heads", "head_dim") if kv_sharded
+            else ("batch", "seq_sp", None, None)
+        )
+        q = logical(q, ("batch", seq_ax, "heads", "head_dim"))
+        k = logical(k, kv_proj_axes)
+        v = logical(v, kv_proj_axes)
+        positions = jnp.arange(t)
+        q = rope(q, positions, theta=cfg.rope_theta)
+        k = rope(k, positions, theta=cfg.rope_theta)
+        q = logical(q, ("batch", seq_ax, "heads", "head_dim"))
+        k = logical(k, ("batch", None, "kv_heads", "head_dim"))
+        v = logical(v, ("batch", None, "kv_heads", "head_dim"))
+        kr = repeat_kv(k, cfg.n_heads)
+        vr = repeat_kv(v, cfg.n_heads)
+        if cfg.attn_impl == "pallas" and shd.current() is None:
+            # single-device serving path: the Pallas flash kernel keeps the
+            # online-softmax chain VMEM-resident (EXPERIMENTS §Perf C).
+            # Sharded meshes use the jnp flash below (GSPMD-partitionable);
+            # shard_map-wrapping the kernel is the designated follow-up.
+            out = _flash_pallas(q, kr, vr, cfg, window)
+            out = logical(out, ("batch", seq_ax, "heads", "head_dim"))
+            new_cache = None
+            if cache_capacity is not None:
+                new_cache = _persist_cache(k, v, t, cache_capacity, cfg)
+            y = jnp.einsum("bthk,hkd->btd", out.astype(x.dtype), params["wo"],
+                           preferred_element_type=matmul_out_dtype()
+                           ).astype(x.dtype)
+            return logical(y, ("batch", seq_ax, "embed")), new_cache
+        if cfg.attn_sharding == "sp":
+            # q is sequence-sharded: a (nq, bq) reshape of the sharded T dim
+            # cannot be partitioned, so use a single q chunk (scores stay
+            # seq-sharded, (B, H, T/tp, bk) per device per kv step).
+            bq = t
+        else:
+            kr = logical(kr, ("batch", None, "heads", "head_dim"))
+            vr = logical(vr, ("batch", None, "heads", "head_dim"))
+            bq = cfg.attn_block_q
+        out = flash_attention(
+            q, kr, vr, causal=cfg.causal, window=window,
+            bq=bq, bk=cfg.attn_block_kv, remat_kv=cfg.flash_remat,
+        )
+        out = logical(out, ("batch", seq_ax, "heads", "head_dim"))
+        new_cache = None
+        if cache_capacity is not None:  # prefill: persist K/V seq-sharded
+            cap = cache_capacity
+            if cap >= t:
+                kc = jnp.pad(k, ((0, 0), (0, cap - t), (0, 0), (0, 0)))
+                vc = jnp.pad(v, ((0, 0), (0, cap - t), (0, 0), (0, 0)))
+            else:  # keep last `cap` positions, circularly addressed
+                src = t - 1 - (t - 1 - jnp.arange(cap)) % cap
+                kc = jnp.take(k, src, axis=1)
+                vc = jnp.take(v, src, axis=1)
+            new_cache = {
+                "k": logical(kc.astype(cfg.cache_dtype), CACHE_AXES["k"]),
+                "v": logical(vc.astype(cfg.cache_dtype), CACHE_AXES["v"]),
+            }
+
+    y = jnp.einsum("bthk,hkd->btd", out.astype(x.dtype), params["wo"],
+                   preferred_element_type=matmul_out_dtype()).astype(x.dtype)
+    return logical(y, ("batch", seq_ax if not decode else None, "embed")), new_cache

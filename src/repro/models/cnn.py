@@ -1,0 +1,154 @@
+"""VGG-16 (the paper's evaluation model) with first-class vector sparsity.
+
+Dense path: jax.lax conv.  Sparse path: every 3x3 conv (except the 3-channel
+stem, whose 27-row K doesn't tile and whose FLOPs are negligible) and every
+FC layer can run through the vector-sparse ops — `impl='jnp'` for the
+structural GSPMD-friendly path, `impl='pallas'` for the TPU kernel.
+
+`collect_conv_traffic` exposes per-layer (input activations, weights) so the
+cycle-accurate accelerator model (core.accel_model) can replay the paper's
+Figs 9-13 on real post-ReLU activation sparsity.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    VectorSparse,
+    encode,
+    prune_vectors_balanced,
+    vs_matmul,
+    vs_conv2d_3x3,
+    dense_conv2d_3x3,
+    conv_weight_to_matrix,
+)
+from .layers import P
+
+__all__ = [
+    "VGG16_LAYERS", "vgg16_schema", "vgg16_apply", "sparsify_vgg16",
+    "collect_conv_traffic", "conv_names",
+]
+
+# channels per conv layer; 'M' = 2x2 max-pool
+VGG16_LAYERS = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+                512, 512, 512, "M", 512, 512, 512, "M"]
+
+FC_DIMS = [(512 * 7 * 7, 4096), (4096, 4096)]
+
+
+def conv_names():
+    names, cin = [], 3
+    i = 1
+    for c in VGG16_LAYERS:
+        if c == "M":
+            continue
+        names.append((f"conv{i}", cin, c))
+        cin = c
+        i += 1
+    return names
+
+
+def vgg16_schema(num_classes: int = 1000, *, image_size: int = 224) -> dict:
+    s = {}
+    for name, cin, cout in conv_names():
+        s[name] = {
+            "w": P((3, 3, cin, cout), (None, None, None, "ff"), fan_in=9 * cin),
+            "b": P((cout,), ("ff",), init="zeros"),
+        }
+    fc_in = 512 * (image_size // 32) ** 2
+    dims = [(fc_in, 4096), (4096, 4096), (4096, num_classes)]
+    for j, (din, dout) in enumerate(dims, start=1):
+        s[f"fc{j}"] = {
+            "w": P((din, dout), ("fsdp", "ff"), fan_in=din),
+            "b": P((dout,), ("ff",), init="zeros"),
+        }
+    return s
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def vgg16_apply(params, x, *, sparse: dict | None = None, impl: str = "jnp",
+                collect=None):
+    """x (N, H, W, 3) -> logits (N, classes).
+
+    sparse: {layer_name: VectorSparse} — layers present run the paper's
+    vector-sparse path (weight-side structural skip + input-side skip);
+    absent layers run dense.
+    """
+    sparse = sparse or {}
+    names = iter(conv_names())
+    for c in VGG16_LAYERS:
+        if c == "M":
+            x = _maxpool2(x)
+            continue
+        name, cin, cout = next(names)
+        p = params[name]
+        if collect is not None:
+            collect.append((name, x, p["w"]))
+        if name in sparse:
+            y = vs_conv2d_3x3(x, sparse[name], impl=impl)
+        else:
+            y = dense_conv2d_3x3(x, p["w"].astype(x.dtype))
+        x = jax.nn.relu(y + p["b"].astype(y.dtype))
+    n = x.shape[0]
+    x = x.reshape(n, -1)
+    for j in (1, 2, 3):
+        p = params[f"fc{j}"]
+        key = f"fc{j}"
+        if key in sparse:
+            x = vs_matmul(x, sparse[key], impl=impl)
+        else:
+            x = jnp.dot(x, p["w"].astype(x.dtype),
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+        x = x + p["b"].astype(x.dtype)
+        if j < 3:
+            x = jax.nn.relu(x)
+    return x
+
+
+def sparsify_vgg16(params, density: float, *, vk: int = 32, vn: int = 128,
+                   include_fc: bool = True):
+    """Vector-prune VGG-16 to `density` (fraction of nonzero weight vectors).
+
+    Returns (sparse dict for vgg16_apply, pruned dense params for oracles).
+    The 3-channel stem conv stays dense (27-row K; negligible FLOPs), as in
+    standard pruning practice.
+    """
+    sparse, pruned = {}, jax.tree.map(lambda a: a, params)
+    for name, cin, cout in conv_names():
+        if cin < vk:  # conv1: K = 9*3 = 27, not tileable
+            continue
+        w = np.asarray(params[name]["w"], np.float32)
+        wm = w.reshape(9 * cin, cout)
+        vn_l = min(vn, cout)
+        wp, _ = prune_vectors_balanced(wm, density, vk, vn_l)
+        sparse[name] = encode(jnp.asarray(wp, params[name]["w"].dtype), vk, vn_l)
+        pruned[name]["w"] = jnp.asarray(
+            wp.reshape(3, 3, cin, cout), params[name]["w"].dtype
+        )
+    if include_fc:
+        for j in (1, 2, 3):
+            w = np.asarray(params[f"fc{j}"]["w"], np.float32)
+            dout = w.shape[1]
+            vn_l = min(vn, dout)
+            if w.shape[0] % vk or dout % vn_l:
+                continue
+            wp, _ = prune_vectors_balanced(w, density, vk, vn_l)
+            sparse[f"fc{j}"] = encode(
+                jnp.asarray(wp, params[f"fc{j}"]["w"].dtype), vk, vn_l
+            )
+            pruned[f"fc{j}"]["w"] = jnp.asarray(wp, params[f"fc{j}"]["w"].dtype)
+    return sparse, pruned
+
+
+def collect_conv_traffic(params, x):
+    """Forward pass recording (name, conv input NHWC, weight) per conv layer."""
+    rec = []
+    vgg16_apply(params, x, collect=rec)
+    return rec

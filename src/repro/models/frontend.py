@@ -1,0 +1,36 @@
+"""Modality frontend stubs (per assignment: [vlm]/[audio] backbones only).
+
+The assigned internvl2 (InternViT) and hubert (conv feature encoder)
+frontends are STUBS: `input_specs()` for those architectures provides
+precomputed patch/frame embeddings of shape (batch, seq, d_model), and these
+helpers generate deterministic synthetic embeddings with realistic statistics
+for smoke tests and examples.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["synthetic_embeddings", "synthetic_tokens", "synthetic_labels"]
+
+
+def synthetic_embeddings(key, batch: int, seq: int, d_model: int,
+                         dtype=jnp.bfloat16) -> jax.Array:
+    """Unit-variance embeddings with a shared low-rank structure (so the
+    sequence is not pure white noise — attention has something to attend to)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    basis = jax.random.normal(k1, (16, d_model), jnp.float32)
+    coef = jax.random.normal(k2, (batch, seq, 16), jnp.float32) / 4.0
+    noise = jax.random.normal(k3, (batch, seq, d_model), jnp.float32)
+    return (coef @ basis + 0.5 * noise).astype(dtype)
+
+
+def synthetic_tokens(key, batch: int, seq: int, vocab: int) -> jax.Array:
+    # Zipf-ish marginal: realistic softmax mass distribution for CE losses
+    u = jax.random.uniform(key, (batch, seq), jnp.float32, 1e-6, 1.0)
+    ranks = jnp.floor(jnp.exp(u * jnp.log(float(vocab)))) - 1
+    return jnp.clip(ranks.astype(jnp.int32), 0, vocab - 1)
+
+
+def synthetic_labels(key, batch: int, seq: int, vocab: int) -> jax.Array:
+    return synthetic_tokens(jax.random.fold_in(key, 1), batch, seq, vocab)

@@ -1,0 +1,255 @@
+"""Param schema + common layers.
+
+Every model is described by a *schema*: a nested dict whose leaves are `P`
+entries (shape, logical axes, init law).  One schema drives
+
+  * `init_params`    — deterministic parameter initialization (traceable, so
+                       `jax.eval_shape(init)` gives the dry-run param tree
+                       without allocating 1T parameters),
+  * `axes_tree`      — the logical-sharding tree consumed by
+                       `parallel.sharding.sharding_tree`,
+  * scan stacking    — `stack(schema, n)` prepends a 'stack' axis to every
+                       leaf so homogeneous layer groups lower as one
+                       `lax.scan` body (compile time ∝ unique layers, not
+                       total layers).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import zlib
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical
+
+# --- matmul output precision (beyond-paper perf knob) -----------------------
+# Baseline ('f32-out'): every matmul emits f32 and is cast back — faithful
+# accumulation everywhere, but backward cotangents (and therefore the TP
+# all-reduces and flash-attention residuals) are f32.
+# bf16-flow: matmuls emit the activation dtype (the MXU still accumulates in
+# f32 internally for bf16 inputs on TPU); softmax/norm/loss math stays f32.
+_MATMUL_OUT_F32 = contextvars.ContextVar("matmul_out_f32", default=True)
+
+
+def matmul_out_dtype():
+    """preferred_element_type for activation matmuls (None = input dtype)."""
+    return jnp.float32 if _MATMUL_OUT_F32.get() else None
+
+
+@contextlib.contextmanager
+def precision_flow(bf16_flow: bool):
+    tok = _MATMUL_OUT_F32.set(not bf16_flow)
+    try:
+        yield
+    finally:
+        _MATMUL_OUT_F32.reset(tok)
+
+__all__ = [
+    "P",
+    "init_params",
+    "axes_tree",
+    "stack",
+    "is_param",
+    "rms_norm",
+    "dense",
+    "rope",
+    "mlp_schema",
+    "mlp_apply",
+    "chunked_remat_scan",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class P:
+    """Schema leaf: one parameter array."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (or None) per dim
+    init: str = "normal"  # 'normal' | 'zeros' | 'ones' | 'embed'
+    fan_in: int | None = None  # scaled normal: std = 1/sqrt(fan_in)
+    dtype: Any = None  # None -> model default
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, P)
+
+
+def _leaf_init(p: P, key, path: str, default_dtype) -> jax.Array:
+    dtype = p.dtype or default_dtype
+    sub = jax.random.fold_in(key, zlib.crc32(path.encode()))
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "embed":
+        # std 1/sqrt(d): tied-unembedding logits stay O(1); the lookup path
+        # rescales by sqrt(d) (Gemma convention)
+        std = p.shape[-1] ** -0.5
+        return (std * jax.random.normal(sub, p.shape, jnp.float32)).astype(dtype)
+    if p.init == "a_log":  # Mamba A init: A_n = -(n+1), stored as log
+        row = jnp.log(jnp.arange(1, p.shape[-1] + 1, dtype=jnp.float32))
+        return jnp.broadcast_to(row, p.shape).astype(dtype)
+    if p.init == "vs_idx":  # VectorSparse indices: S evenly-spaced K-tiles
+        kb = p.fan_in  # number of K-tiles in the dense matrix
+        s = p.shape[-1]
+        stride = max(1, kb // s)
+        row = (jnp.arange(s, dtype=jnp.int32) * stride) % kb
+        row = jnp.sort(row)
+        return jnp.broadcast_to(row, p.shape)
+    fan_in = p.fan_in or (p.shape[0] if p.shape else 1)
+    std = fan_in ** -0.5
+    return (std * jax.random.normal(sub, p.shape, jnp.float32)).astype(dtype)
+
+
+def init_params(schema, key, default_dtype=jnp.bfloat16):
+    """Deterministic init; traceable (eval_shape-safe)."""
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path(
+        schema, is_leaf=is_param
+    )[0]
+    out = {}
+    for path, leaf in leaves_with_paths:
+        out[path] = _leaf_init(leaf, key, jax.tree_util.keystr(path), default_dtype)
+    treedef = jax.tree_util.tree_structure(schema, is_leaf=is_param)
+    return jax.tree_util.tree_unflatten(
+        treedef, [out[p] for p, _ in leaves_with_paths]
+    )
+
+
+def axes_tree(schema):
+    """Schema -> tree of logical-axes tuples (leaves are tuples)."""
+    return jax.tree.map(lambda p: p.axes, schema, is_leaf=is_param)
+
+
+def stack(schema, n: int):
+    """Prepend a scanned-layer-group dim of size n to every leaf."""
+    return jax.tree.map(
+        lambda p: P(
+            (n, *p.shape), ("stack", *p.axes), p.init, p.fan_in, p.dtype
+        ),
+        schema,
+        is_leaf=is_param,
+    )
+
+
+# ---------------------------------------------------------------------------
+# layers
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, *, eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b: jax.Array | None = None) -> jax.Array:
+    """x (..., K) @ w (K, ...out) with f32 accumulation, back to x.dtype."""
+    kdims = w.ndim - 1
+    out = jax.lax.dot_general(
+        x,
+        w,
+        ((tuple(range(x.ndim - 1, x.ndim)), (0,)), ((), ())),
+        preferred_element_type=matmul_out_dtype(),
+    )
+    del kdims
+    if b is not None:
+        out = out + b.astype(out.dtype)
+    return out.astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, *, theta: float = 1e4) -> jax.Array:
+    """Rotary embedding. x (B, T, H, hd), positions (B, T) or (T,)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freq  # (B, T, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# -- gated / plain MLP -------------------------------------------------------
+
+_GATED = {"swiglu", "geglu"}
+
+
+def mlp_schema(d_model: int, d_ff: int, activation: str) -> dict:
+    if activation in _GATED:
+        wi = P((2, d_model, d_ff), (None, "fsdp", "ff"), fan_in=d_model)
+    else:
+        wi = P((d_model, d_ff), ("fsdp", "ff"), fan_in=d_model)
+    return {
+        "wi": wi,
+        "wo": P((d_ff, d_model), ("ff", "fsdp"), fan_in=d_ff),
+    }
+
+
+def _act(h: jax.Array, kind: str) -> jax.Array:
+    if kind == "relu2":  # nemotron squared-ReLU: real dynamic sparsity
+        r = jax.nn.relu(h)
+        return r * r
+    if kind == "gelu":
+        return jax.nn.gelu(h)
+    if kind == "relu":
+        return jax.nn.relu(h)
+    raise ValueError(kind)
+
+
+def mlp_apply(params: dict, x: jax.Array, *, activation: str) -> jax.Array:
+    if activation in _GATED:
+        gate = dense(x, params["wi"][0])
+        up = dense(x, params["wi"][1])
+        gate = logical(gate, ("batch", "seq", "ff"))
+        up = logical(up, ("batch", "seq", "ff"))
+        act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+        h = act(gate.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = dense(x, params["wi"])
+        h = logical(h, ("batch", "seq", "ff"))
+        h = _act(h.astype(jnp.float32), activation).astype(x.dtype)
+    out = dense(h, params["wo"])
+    return logical(out, ("batch", "seq", "embed"))
+
+
+# -- chunked remat scan (Mamba / RWKV recurrences) ---------------------------
+
+
+def chunked_remat_scan(step_fn, carry, xs, *, chunk: int):
+    """lax.scan over time with per-chunk rematerialization.
+
+    Splits the T leading axis of ``xs`` into chunks; the inner scan over each
+    chunk is wrapped in jax.checkpoint, so the backward pass stores only one
+    carry per chunk (T/chunk checkpoints) and recomputes inside — the memory
+    posture Mamba-style recurrences need at 4k-500k sequence lengths.
+    """
+    t = jax.tree.leaves(xs)[0].shape[0]
+    chunk = min(chunk, t)
+    while t % chunk:  # largest divisor <= requested (exact state carry)
+        chunk -= 1
+    nchunks = t // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape(nchunks, chunk, *a.shape[1:]), xs
+    )
+
+    @jax.checkpoint
+    def chunk_body(c, xc):
+        c, ys = jax.lax.scan(step_fn, c, xc)
+        return c, ys
+
+    carry, ys_c = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape(t, *a.shape[2:]), ys_c)
+    return carry, ys

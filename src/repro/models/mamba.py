@@ -1,0 +1,148 @@
+"""Mamba (S6 selective SSM) mixer — the Jamba hybrid's recurrent layer.
+
+TP layout: the inner dimension d_inner (= 2 * d_model) is sharded over the
+model axis ('ff' logical), so the recurrence is channel-parallel with zero
+cross-device traffic; only in_proj / out_proj touch the TP collectives,
+exactly like a dense FFN.
+
+Training uses `chunked_remat_scan`: per-step tensors (dA, dB·x) of size
+(B, d_inner, d_state) are built *inside* the scan step (materializing them
+for all T would be ~B·T·d_inner·d_state — hundreds of GB at 4k context), and
+the backward pass stores one carry per chunk.
+
+Decode carries (conv tail, ssm state) in the cache pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical
+from .layers import P, chunked_remat_scan, matmul_out_dtype
+
+__all__ = ["mamba_schema", "mamba_apply", "init_mamba_cache", "MAMBA_CACHE_AXES"]
+
+D_STATE = 16
+D_CONV = 4
+
+
+def _dims(cfg):
+    d_in = 2 * cfg.d_model
+    dt_rank = -(-cfg.d_model // 16)
+    return d_in, dt_rank
+
+
+def mamba_schema(cfg) -> dict:
+    d = cfg.d_model
+    d_in, dt_rank = _dims(cfg)
+    return {
+        "in_proj": P((2, d, d_in), (None, "fsdp", "ff"), fan_in=d),
+        "conv_w": P((D_CONV, d_in), (None, "ff"), fan_in=D_CONV),
+        "conv_b": P((d_in,), ("ff",), init="zeros"),
+        "x_proj": P((d_in, dt_rank + 2 * D_STATE), ("ff", None), fan_in=d_in),
+        "dt_proj": P((dt_rank, d_in), (None, "ff"), fan_in=dt_rank),
+        "dt_bias": P((d_in,), ("ff",), init="zeros"),
+        "a_log": P((d_in, D_STATE), ("ff", None), init="a_log"),
+        "d_skip": P((d_in,), ("ff",), init="ones"),
+        "out_proj": P((d_in, d), ("ff", "fsdp"), fan_in=d_in),
+    }
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    d_in, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, D_CONV - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, D_STATE), jnp.float32),
+    }
+
+
+MAMBA_CACHE_AXES = {
+    "conv": ("batch", None, "ff"),
+    "ssm": ("batch", "ff", None),
+}
+
+
+def _ssm_inputs(params, xc, cfg):
+    """xc (B, T, d_in) post-conv activations -> (dt, B_ssm, C_ssm)."""
+    _, dt_rank = _dims(cfg)
+    proj = jnp.einsum("bti,ir->btr", xc.astype(jnp.float32),
+                      params["x_proj"].astype(jnp.float32))
+    dt_raw = proj[..., :dt_rank]
+    b_ssm = proj[..., dt_rank : dt_rank + D_STATE]
+    c_ssm = proj[..., dt_rank + D_STATE :]
+    dt = jax.nn.softplus(
+        jnp.einsum("btr,ri->bti", dt_raw, params["dt_proj"],
+                   preferred_element_type=jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )
+    return dt, b_ssm, c_ssm
+
+
+def _scan_step(a_neg, carry, xs):
+    """h_t = exp(dt A) h_{t-1} + dt B x_t ;  y_t = <h_t, C_t> (per channel)."""
+    h = carry
+    xc_t, dt_t, b_t, c_t = xs  # (B, d_in), (B, d_in), (B, N), (B, N)
+    da = jnp.exp(dt_t[..., None] * a_neg[None])            # (B, d_in, N)
+    dbx = (dt_t * xc_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+    h = da * h + dbx
+    y = jnp.einsum("bin,bn->bi", h, c_t)                    # (B, d_in)
+    return h, y
+
+
+def mamba_apply(params, x, cfg, *, cache=None, decode=False, prefill=False):
+    """x (B, T, D) -> (out (B, T, D), new_cache)."""
+    b, t, d = x.shape
+    d_in, _ = _dims(cfg)
+    xz = jnp.einsum("btd,cdi->cbti", x, params["in_proj"],
+                    preferred_element_type=matmul_out_dtype()).astype(x.dtype)
+    x_in, z = xz[0], xz[1]
+    x_in = logical(x_in, ("batch", "seq", "ff"))
+    a_neg = -jnp.exp(params["a_log"].astype(jnp.float32))
+
+    if decode:
+        assert cache is not None
+        # causal depthwise conv over (cached tail ++ current token)
+        window = jnp.concatenate([cache["conv"], x_in], axis=1)  # (B, 4, d_in)
+        xc = jnp.einsum("bki,ki->bi", window.astype(jnp.float32),
+                        params["conv_w"].astype(jnp.float32))
+        xc = jax.nn.silu(xc + params["conv_b"].astype(jnp.float32))
+        xc = xc[:, None, :].astype(x.dtype)                      # (B, 1, d_in)
+        dt, b_ssm, c_ssm = _ssm_inputs(params, xc, cfg)
+        h, y = _scan_step(
+            a_neg, cache["ssm"],
+            (xc[:, 0], dt[:, 0], b_ssm[:, 0], c_ssm[:, 0]),
+        )
+        y = y[:, None, :]
+        new_cache = {"conv": window[:, 1:].astype(cache["conv"].dtype), "ssm": h}
+    else:
+        kernel = params["conv_w"].astype(x.dtype)[:, None, :]    # (K, 1, d_in)
+        xc = jax.lax.conv_general_dilated(
+            x_in, kernel, window_strides=(1,), padding=[(D_CONV - 1, 0)],
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=d_in,
+        )
+        xc = jax.nn.silu(
+            xc.astype(jnp.float32) + params["conv_b"].astype(jnp.float32)
+        ).astype(x.dtype)
+        dt, b_ssm, c_ssm = _ssm_inputs(params, xc, cfg)
+        h0 = jnp.zeros((b, d_in, D_STATE), jnp.float32)
+        xs = (
+            xc.transpose(1, 0, 2),
+            dt.transpose(1, 0, 2).astype(jnp.float32),
+            b_ssm.transpose(1, 0, 2),
+            c_ssm.transpose(1, 0, 2),
+        )
+        step = lambda c, s: _scan_step(a_neg, c, s)
+        h, ys = chunked_remat_scan(step, h0, xs, chunk=min(cfg.scan_chunk, t))
+        y = ys.transpose(1, 0, 2)                                # (B, T, d_in)
+        new_cache = None
+        if prefill:  # persist conv tail + final ssm state
+            tail = x_in[:, -(D_CONV - 1):, :]
+            new_cache = {"conv": tail.astype(cfg.cache_dtype), "ssm": h}
+
+    y = y.astype(jnp.float32) + params["d_skip"].astype(jnp.float32) * x_in.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = logical(y, ("batch", "seq", "ff"))
+    out = jnp.einsum("bti,id->btd", y, params["out_proj"],
+                     preferred_element_type=matmul_out_dtype()).astype(x.dtype)
+    return logical(out, ("batch", "seq", "embed")), new_cache

@@ -1,0 +1,379 @@
+"""Pattern-based LM stack: segments of scanned homogeneous super-blocks.
+
+An architecture is a list of `Segment`s; each segment repeats a tuple of
+`LayerSpec`s (mixer x ffn x window).  All repeats of a segment share one
+scanned body (params stacked on a leading 'stack' axis), so compile time and
+HLO size scale with the number of *unique* layer kinds, not total depth —
+gemma3's 48 layers lower as one scan over 8 groups of [5 local + 1 global],
+jamba's 32 as 4 groups of its 8-layer block.
+
+Modes:
+  train   — full-sequence forward, remat per super-block, returns hidden
+  prefill — forward + populated decode caches (KV seq-sharded, SSM states)
+  decode  — one token through cached states at position ``pos``
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical
+from repro.parallel.losses import chunked_cross_entropy
+from .layers import P, precision_flow, rms_norm, mlp_schema, mlp_apply, stack
+from .attention import attn_schema, attention_apply, init_kv_cache, CACHE_AXES
+from .mamba import (
+    mamba_schema, mamba_apply, init_mamba_cache, MAMBA_CACHE_AXES,
+)
+from .rwkv import (
+    rwkv_tm_schema, rwkv_cm_schema, rwkv_time_mix, rwkv_channel_mix,
+    init_rwkv_tm_cache, init_rwkv_cm_cache,
+    RWKV_TM_CACHE_AXES, RWKV_CM_CACHE_AXES,
+)
+from .moe import moe_schema, moe_apply
+
+__all__ = [
+    "lm_schema", "init_cache", "cache_axes", "forward_hidden",
+    "loss_fn", "prefill", "decode_step", "lm_apply",
+]
+
+
+def _gated(cfg) -> bool:
+    return cfg.activation in ("swiglu", "geglu")
+
+
+def _act_fn(cfg):
+    return jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+def layer_schema(spec, cfg) -> dict:
+    d = cfg.d_model
+    s = {}
+    if spec.mixer != "none":
+        s["ln1"] = P((d,), (None,), init="zeros")
+        if spec.mixer == "attn":
+            s["mix"] = attn_schema(cfg)
+        elif spec.mixer == "mamba":
+            s["mix"] = mamba_schema(cfg)
+        elif spec.mixer == "rwkv_tm":
+            s["mix"] = rwkv_tm_schema(cfg)
+        else:
+            raise ValueError(spec.mixer)
+    if spec.ffn != "none":
+        s["ln2"] = P((d,), (None,), init="zeros")
+        if spec.ffn == "mlp":
+            if cfg.use_sparse_ffn and cfg.sparsity is not None:
+                from .sparse_lm import sparse_mlp_schema
+                s["ffn"] = sparse_mlp_schema(cfg, cfg.sparsity)
+            else:
+                s["ffn"] = mlp_schema(d, cfg.d_ff, cfg.activation)
+        elif spec.ffn == "moe":
+            s["ffn"] = moe_schema(d, cfg.moe, gated=_gated(cfg), tp_hint=cfg.tp_hint)
+            if cfg.moe.n_shared:
+                s["ffn_shared"] = mlp_schema(
+                    d, cfg.moe.d_ff * cfg.moe.n_shared, cfg.activation
+                )
+        elif spec.ffn == "rwkv_cm":
+            s["ffn"] = rwkv_cm_schema(cfg)
+        else:
+            raise ValueError(spec.ffn)
+    return s
+
+
+def lm_schema(cfg) -> dict:
+    d, vp = cfg.d_model, cfg.padded_vocab
+    s = {"final_norm": P((d,), (None,), init="zeros")}
+    if cfg.embed_inputs:
+        s["embed"] = P((vp, d), ("vocab", "fsdp"), init="embed")
+    if not (cfg.tie_embeddings and cfg.embed_inputs):
+        s["out_head"] = P((d, vp), ("fsdp", "vocab"), fan_in=d)
+    s["segments"] = [
+        stack({f"l{i}": layer_schema(sp, cfg) for i, sp in enumerate(seg.layers)},
+              seg.repeat)
+        for seg in cfg.segments
+    ]
+    return s
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES_BY_MIXER = {
+    "attn": CACHE_AXES,
+    "mamba": MAMBA_CACHE_AXES,
+    "rwkv_tm": RWKV_TM_CACHE_AXES,
+}
+
+
+def _slot_cache(spec, cfg, batch, capacity, dtype):
+    slot = {}
+    if spec.mixer == "attn":
+        cap = min(capacity, spec.window) if spec.window else capacity
+        slot["mix"] = init_kv_cache(cfg, batch, cap, dtype)
+    elif spec.mixer == "mamba":
+        slot["mix"] = init_mamba_cache(cfg, batch, dtype)
+    elif spec.mixer == "rwkv_tm":
+        slot["mix"] = init_rwkv_tm_cache(cfg, batch, dtype)
+    if spec.ffn == "rwkv_cm":
+        slot["ffn"] = init_rwkv_cm_cache(cfg, batch, dtype)
+    return slot
+
+
+def init_cache(cfg, batch: int, capacity: int, dtype=None):
+    """Decode caches: one stacked tree per segment (leading dim = repeat)."""
+    dtype = dtype or cfg.cache_dtype
+    caches = []
+    for seg in cfg.segments:
+        group = {
+            f"l{i}": _slot_cache(sp, cfg, batch, capacity, dtype)
+            for i, sp in enumerate(seg.layers)
+        }
+        caches.append(
+            jax.tree.map(
+                lambda a: jnp.zeros((seg.repeat, *a.shape), a.dtype), group
+            )
+        )
+    return caches
+
+
+def cache_axes(cfg):
+    """Logical-axes tree matching init_cache's structure."""
+    out = []
+    for seg in cfg.segments:
+        group = {}
+        for i, sp in enumerate(seg.layers):
+            slot = {}
+            if sp.mixer in _CACHE_AXES_BY_MIXER:
+                slot["mix"] = {
+                    k: ("stack", *v)
+                    for k, v in _CACHE_AXES_BY_MIXER[sp.mixer].items()
+                }
+            if sp.ffn == "rwkv_cm":
+                slot["ffn"] = {
+                    k: ("stack", *v) for k, v in RWKV_CM_CACHE_AXES.items()
+                }
+            group[f"l{i}"] = slot
+        out.append(group)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _residual_axes(cfg, mode):
+    if cfg.seq_shard_residual and mode != "decode":
+        return ("batch", "seq_sp", "embed")
+    return ("batch", "seq", "embed")
+
+
+def apply_layer(p, h, spec, cfg, *, mode, cache=None, pos=None, capacity=None):
+    """One (mixer, ffn) residual layer. Returns (h, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = {}
+    decode = mode == "decode"
+    prefill = mode == "prefill"
+    cache = cache or {}
+    if cfg.seq_shard_residual:  # Megatron-SP stream (knob; see §Perf)
+        h = logical(h, _residual_axes(cfg, mode))
+
+    if spec.mixer != "none":
+        inp = rms_norm(h, p["ln1"])
+        if spec.mixer == "attn":
+            cap = None
+            if prefill:
+                cap = min(capacity, spec.window) if spec.window else capacity
+            out, nc = attention_apply(
+                p["mix"], inp, cfg, window=spec.window,
+                cache=cache.get("mix"), pos=pos, decode=decode,
+                cache_capacity=cap,
+            )
+        elif spec.mixer == "mamba":
+            out, nc = mamba_apply(
+                p["mix"], inp, cfg, cache=cache.get("mix"),
+                decode=decode, prefill=prefill,
+            )
+        else:  # rwkv_tm
+            out, nc = rwkv_time_mix(
+                p["mix"], inp, cfg, cache=cache.get("mix"),
+                decode=decode, prefill=prefill,
+            )
+        h = h + out
+        if nc is not None:
+            new_cache["mix"] = nc
+
+    if spec.ffn != "none":
+        inp = rms_norm(h, p["ln2"])
+        if spec.ffn == "mlp":
+            if cfg.use_sparse_ffn and cfg.sparsity is not None:
+                from .sparse_lm import sparse_mlp_apply
+                out = sparse_mlp_apply(p["ffn"], inp, cfg)
+            else:
+                out = mlp_apply(p["ffn"], inp, activation=cfg.activation)
+        elif spec.ffn == "moe":
+            out, aux = moe_apply(
+                p["ffn"], inp, cfg.moe, gated=_gated(cfg),
+                activation_fn=_act_fn(cfg), dispatch=cfg.moe_dispatch,
+            )
+            if cfg.moe.n_shared:
+                out = out + mlp_apply(
+                    p["ffn_shared"], inp, activation=cfg.activation
+                )
+        else:  # rwkv_cm
+            out, nc = rwkv_channel_mix(
+                p["ffn"], inp, cfg, cache=cache.get("ffn"),
+                decode=decode, prefill=prefill,
+            )
+            if nc is not None:
+                new_cache["ffn"] = nc
+        h = h + out
+    return h, new_cache, aux
+
+
+def _segment_scan(p_seg, h, seg, cfg, *, mode, caches=None, pos=None,
+                  capacity=None):
+    """Scan one segment's stacked params (and caches) over its repeats."""
+
+    def body(h, xs):
+        p_group, c_group = xs if mode == "decode" else (xs, None)
+        ncs = {}
+        aux = jnp.zeros((), jnp.float32)
+        for i, sp in enumerate(seg.layers):
+            key = f"l{i}"
+            h, nc, a = apply_layer(
+                p_group[key], h, sp, cfg, mode=mode,
+                cache=(c_group or {}).get(key) if c_group is not None else None,
+                pos=pos, capacity=capacity,
+            )
+            ncs[key] = nc
+            aux = aux + a
+        return h, (ncs, aux)
+
+    if mode == "train" and cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (p_seg, caches) if mode == "decode" else p_seg
+    h, (new_caches, auxs) = jax.lax.scan(body, h, xs)
+    return h, new_caches, jnp.sum(auxs)
+
+
+def forward_hidden(params, x, cfg, *, mode="train", caches=None, pos=None,
+                   capacity=None):
+    """x (B, T, D) embeddings -> (h, new_caches, aux)."""
+    h = logical(x, _residual_axes(cfg, mode))
+    aux_total = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for si, seg in enumerate(cfg.segments):
+        h, ncs, aux = _segment_scan(
+            params["segments"][si], h, seg, cfg, mode=mode,
+            caches=caches[si] if caches is not None else None,
+            pos=pos, capacity=capacity,
+        )
+        new_caches.append(ncs)
+        aux_total = aux_total + aux
+    h = rms_norm(h, params["final_norm"])
+    return h, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# token embedding / logits / losses / serve steps
+# ---------------------------------------------------------------------------
+
+
+def embed_tokens(params, tokens, cfg):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    h = h * jnp.asarray(cfg.d_model ** 0.5, h.dtype)  # see layers 'embed' init
+    return logical(h, ("batch", "seq", "embed"))
+
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings and cfg.embed_inputs:
+        return params["embed"].T
+    return params["out_head"]
+
+
+def _inputs_to_hidden(params, batch, cfg):
+    if cfg.embed_inputs:
+        return embed_tokens(params, batch["tokens"], cfg)
+    return logical(batch["embeds"].astype(cfg.dtype), ("batch", "seq", "embed"))
+
+
+def loss_fn(params, batch, cfg):
+    """Token-level CE (vocab-sharded, chunked) + MoE aux. Returns (loss, metrics)."""
+    with precision_flow(cfg.bf16_flow):
+        return _loss_fn_inner(params, batch, cfg)
+
+
+def _loss_fn_inner(params, batch, cfg):
+    x = _inputs_to_hidden(params, batch, cfg)
+    h, _, aux = forward_hidden(params, x, cfg, mode="train")
+    # CE chunks over T: gather the (bf16) residuals if sequence-sharded
+    h = logical(h, ("batch", "seq", "embed"))
+    w_out = unembed_matrix(params, cfg)
+    ce = chunked_cross_entropy(
+        h, batch["labels"], w_out, real_vocab=cfg.vocab, chunk=cfg.ce_chunk,
+        z_weight=cfg.z_loss,
+    )
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.aux_weight * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def lm_apply(params, batch, cfg):
+    """Plain forward to last-position logits (smoke tests / examples)."""
+    with precision_flow(cfg.bf16_flow):
+        return _lm_apply_inner(params, batch, cfg)
+
+
+def _lm_apply_inner(params, batch, cfg):
+    x = _inputs_to_hidden(params, batch, cfg)
+    h, _, _ = forward_hidden(params, x, cfg, mode="train")
+    logits = jnp.einsum(
+        "btd,dv->btv", h, unembed_matrix(params, cfg),
+        preferred_element_type=jnp.float32,
+    )
+    return logits
+
+
+def prefill(params, batch, cfg, *, capacity: int):
+    """Full-context forward; returns (last-token logits (B, Vp), caches)."""
+    with precision_flow(cfg.bf16_flow):
+        return _prefill_inner(params, batch, cfg, capacity=capacity)
+
+
+def _prefill_inner(params, batch, cfg, *, capacity: int):
+    x = _inputs_to_hidden(params, batch, cfg)
+    h, caches, _ = forward_hidden(params, x, cfg, mode="prefill",
+                                  capacity=capacity)
+    h_last = h[:, -1:, :]
+    logits = jnp.einsum(
+        "btd,dv->btv", h_last, unembed_matrix(params, cfg),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    return logical(logits, ("batch", "vocab")), caches
+
+
+def decode_step(params, caches, tokens, pos, cfg):
+    """One decode step. tokens (B, 1) int32, pos scalar int32.
+
+    Returns (logits (B, Vp), updated caches).
+    """
+    with precision_flow(cfg.bf16_flow):
+        return _decode_step_inner(params, caches, tokens, pos, cfg)
+
+
+def _decode_step_inner(params, caches, tokens, pos, cfg):
+    x = embed_tokens(params, tokens, cfg) if cfg.embed_inputs else tokens
+    h, new_caches, _ = forward_hidden(params, x, cfg, mode="decode",
+                                      caches=caches, pos=pos)
+    logits = jnp.einsum(
+        "btd,dv->btv", h, unembed_matrix(params, cfg),
+        preferred_element_type=jnp.float32,
+    )[:, 0]
+    return logical(logits, ("batch", "vocab")), new_caches

@@ -1,0 +1,3 @@
+"""Optimizers + schedules (state trees mirror params; shard via same rules)."""
+from .optimizers import Optimizer, adamw, adamw8bit, adafactor, global_norm, clip_by_global_norm
+from .schedules import warmup_cosine, warmup_linear, constant

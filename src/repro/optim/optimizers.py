@@ -1,0 +1,234 @@
+"""Optimizers: AdamW (fp32 / bf16 moments) and Adafactor (factored second
+moment — the 340B / 1T fit on 512 x 16 GB chips requires it).
+
+Pure-pytree, schema-agnostic: state trees mirror the param tree, so the same
+logical-axes tree shards optimizer state (ZeRO posture falls out of the
+'fsdp' rule for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "global_norm", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # state_axes(param_axes_leaf, param_shape) -> pytree of axes for this leaf
+    state_axes: Callable[[tuple, tuple], Any]
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, moment_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def leaf(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr * upd).astype(p.dtype), m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+
+        out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
+        upds = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return upds, {"m": m, "v": v, "count": count}
+
+    def state_axes(axes, shape):
+        return {"m": axes, "v": axes}
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# int8 block-quantized AdamW (8-bit optimizer states, Dettmers-style)
+# ---------------------------------------------------------------------------
+
+_QBLOCK = 256
+
+
+def _q8(x32: jax.Array, block: int = _QBLOCK):
+    """f32 -> (int8 codes, f32 per-block scales, pad). Linear symmetric."""
+    flat = x32.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=1), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dq8(q, scale, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def adamw8bit(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+              weight_decay: float = 0.1) -> Optimizer:
+    """AdamW with int8 block-quantized moments: ~4.5 bits/param of state
+    per moment (int8 + fp32 scale per 256 block) instead of 32 — the m,v
+    state of a 340B model drops from 2.7 TB to ~0.77 TB."""
+
+    def _state_of(p):
+        n = p.size
+        nb = -(-n // _QBLOCK)
+        return {
+            "mq": jnp.zeros((nb, _QBLOCK), jnp.int8),
+            "ms": jnp.zeros((nb,), jnp.float32),
+            "vq": jnp.zeros((nb, _QBLOCK), jnp.int8),
+            "vs": jnp.zeros((nb,), jnp.float32),
+        }
+
+    def init(params):
+        return {
+            "moments": jax.tree.map(_state_of, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        c1 = 1.0 - b1 ** count.astype(jnp.float32)
+        c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+        def leaf(mom, g, p):
+            g32 = g.astype(jnp.float32)
+            m = _dq8(mom["mq"], mom["ms"], p.shape)
+            v = _dq8(mom["vq"], mom["vs"], p.shape)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            upd = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            upd = upd + weight_decay * p.astype(jnp.float32)
+            mq, ms = _q8(m)
+            vq, vs = _q8(v)
+            return ((-lr * upd).astype(p.dtype),
+                    {"mq": mq, "ms": ms, "vq": vq, "vs": vs})
+
+        is_mom = lambda x: isinstance(x, dict) and "mq" in x
+        out = jax.tree.map(leaf, state["moments"], grads, params,
+                           is_leaf=is_mom)
+        upds = jax.tree.map(lambda o: o[0], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        moms = jax.tree.map(lambda o: o[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return upds, {"moments": moms, "count": count}
+
+    def state_axes(axes, shape):
+        # block layout is flat: shard nothing (scales/codes are tiny relative
+        # to fsdp-sharded fp32 states; replicate-over-model, shard via fsdp
+        # is a future refinement)
+        return {"mq": (None, None), "ms": (None,),
+                "vq": (None, None), "vs": (None,)}
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern, 2018) — factored second moments
+# ---------------------------------------------------------------------------
+
+
+def adafactor(decay: float = 0.8, eps: float = 1e-30, clip_threshold: float = 1.0,
+              min_dim_factored: int = 128, weight_decay: float = 0.0) -> Optimizer:
+    """Memory: O(rows + cols) per matrix instead of O(rows * cols).
+
+    Matrices with both trailing dims >= min_dim_factored factor over the last
+    two axes; everything else stores a full second moment.
+    """
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= min_dim_factored and shape[-2] >= min_dim_factored
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {
+            "moments": jax.tree.map(leaf, params),
+            "count": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, lr):
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** -decay  # t^-0.8 schedule
+
+        def leaf(g, mom, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p.shape):
+                vr = beta * mom["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * mom["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                r_factor = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + eps
+                )
+                c_factor = jax.lax.rsqrt(vc + eps)
+                upd = g32 * r_factor[..., None] * c_factor[..., None, :]
+                new_mom = {"vr": vr, "vc": vc}
+            else:
+                v = beta * mom["v"] + (1 - beta) * g2
+                upd = g32 * jax.lax.rsqrt(v + eps)
+                new_mom = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-30)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            return (-lr * upd).astype(p.dtype), new_mom
+
+        is_mom = lambda x: isinstance(x, dict) and ("v" in x or "vr" in x)
+        out = jax.tree.map(lambda mom, g, p: leaf(g, mom, p),
+                           state["moments"], grads, params, is_leaf=is_mom)
+        upds = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        moms = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return upds, {"moments": moms, "count": count}
+
+    def state_axes(axes, shape):
+        if _factored(shape):
+            return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+        return {"v": axes}
+
+    return Optimizer(init, update, state_axes)

@@ -1,0 +1,7 @@
+"""Distribution: logical-axis sharding, sharded losses, grad compression."""
+from .sharding import (
+    MeshRules, use_mesh, current, logical, spec_for, named_sharding,
+    sharding_tree, TRAIN_RULES, SERVE_RULES,
+)
+from .losses import chunked_cross_entropy, cross_entropy_dense
+from . import compression, pipeline

@@ -1,0 +1,85 @@
+"""Cross-pod gradient compression: fp8-block all-reduce with error feedback.
+
+At multi-pod scale the 'pod' axis rides DCN (much lower bandwidth than
+in-pod ICI), so the cross-pod leg of the gradient reduction is the one worth
+compressing.  Wire format: per-block (fp8 values, fp32 amax scale) — an 8x
+volume cut on the DCN hop vs fp32, ~2x vs bf16.  Error feedback accumulates
+the quantization residual into the next step so the compression is unbiased
+over time (Seide et al. / EF-SGD).
+
+`compressed_psum(x, axis, err)` is the primitive (usable under shard_map
+over the pod axis with `auto` in-pod axes); `apply_to_grads` wraps a whole
+gradient pytree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_fp8_block", "dequantize_fp8_block", "compressed_psum",
+           "apply_to_grads", "init_error_state"]
+
+FP8 = jnp.float8_e4m3fn
+FP8_MAX = 448.0
+BLOCK = 512
+
+
+def _pad_to(x: jax.Array, m: int):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % m
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def quantize_fp8_block(x: jax.Array, block: int = BLOCK):
+    """x -> (fp8 values (Nb, block), fp32 scales (Nb,), pad)."""
+    flat, pad = _pad_to(x.astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    amax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.maximum(amax / FP8_MAX, 1e-12)
+    q = (blocks / scale).astype(FP8)
+    return q, scale[:, 0], pad
+
+
+def dequantize_fp8_block(q, scale, pad, shape):
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape)
+
+
+def compressed_psum(x: jax.Array, axis: str, err: jax.Array,
+                    block: int = BLOCK):
+    """Sum x over `axis` with fp8 wire format + error feedback.
+
+    Semantics: each peer quantizes (x + err); the quantized blocks are
+    all-gathered (fp8 on the wire) and summed locally in fp32.  Returns
+    (sum, new_err) where new_err is this peer's quantization residual.
+    """
+    target = x.astype(jnp.float32) + err
+    q, scale, pad = quantize_fp8_block(target, block)
+    local_deq = dequantize_fp8_block(q, scale, pad, x.shape)
+    new_err = target - local_deq
+    q_all = jax.lax.all_gather(q, axis)          # (P, Nb, block) fp8 wire
+    s_all = jax.lax.all_gather(scale, axis)      # (P, Nb) fp32 (tiny)
+    total = jnp.einsum(
+        "pnb,pn->nb", q_all.astype(jnp.float32), s_all
+    ).reshape(-1)
+    if pad:
+        total = total[:-pad]
+    return total.reshape(x.shape).astype(x.dtype), new_err
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def apply_to_grads(grads, err_state, axis: str, block: int = BLOCK):
+    """Compressed-psum every leaf; returns (summed grads, new error state)."""
+    out = jax.tree.map(
+        lambda g, e: compressed_psum(g, axis, e, block), grads, err_state
+    )
+    summed = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    errs = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return summed, errs

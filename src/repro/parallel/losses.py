@@ -1,0 +1,92 @@
+"""Vocab-sharded, chunked cross-entropy.
+
+Never materializes the full (batch, seq, vocab) logits tensor: scans over
+sequence chunks, projecting each chunk onto the (embed, vocab) output matrix
+(vocab sharded over the model axis).  The log-sum-exp reduction over the
+sharded vocab axis lowers to an all-reduce that GSPMD inserts automatically.
+Padded vocab entries (vocab rounded up for even sharding) are masked out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import logical
+
+__all__ = ["chunked_cross_entropy", "cross_entropy_dense"]
+
+
+def _chunk_ce(h, labels, w_out, *, real_vocab: int, z_weight: float):
+    """h (B, C, D) f32/bf16, labels (B, C) int32, w_out (D, Vp)."""
+    logits = jnp.einsum(
+        "bcd,dv->bcv", h.astype(jnp.float32), w_out.astype(jnp.float32)
+    )
+    logits = logical(logits, ("batch", None, "vocab"))
+    vp = w_out.shape[1]
+    if real_vocab != vp:
+        pad_mask = jnp.arange(vp) >= real_vocab
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_weight:
+        nll = nll + z_weight * jnp.square(lse)  # z-loss (logit drift control)
+    return nll
+
+
+def chunked_cross_entropy(
+    h: jax.Array,
+    labels: jax.Array,
+    w_out: jax.Array,
+    *,
+    real_vocab: int,
+    chunk: int = 512,
+    z_weight: float = 0.0,
+    mask: jax.Array | None = None,
+) -> jax.Array:
+    """Mean token NLL of h (B, T, D) against labels (B, T) via w_out (D, Vp).
+
+    T is scanned in ``chunk``-sized slices so peak logits memory is
+    (B, chunk, Vp / tp) per device.
+    """
+    b, t, d = h.shape
+    chunk = min(chunk, t)
+    if t % chunk:
+        pad = chunk - t % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(
+            mask if mask is not None else jnp.ones((b, t), bool),
+            ((0, 0), (0, pad)),
+        )
+    tc = h.shape[1] // chunk
+    hs = h.reshape(b, tc, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, tc, chunk).transpose(1, 0, 2)
+    if mask is not None:
+        ms = mask.reshape(b, tc, chunk).transpose(1, 0, 2)
+    else:
+        ms = jnp.ones((tc, b, chunk), bool)
+
+    def step(carry, xs):
+        total, count = carry
+        hc, lc, mc = xs
+        nll = _chunk_ce(hc, lc, w_out, real_vocab=real_vocab, z_weight=z_weight)
+        total = total + jnp.sum(nll * mc)
+        count = count + jnp.sum(mc)
+        return (total, count), None
+
+    (total, count), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), (hs, ls, ms)
+    )
+    return total / jnp.maximum(count, 1.0)
+
+
+def cross_entropy_dense(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Plain CE for small-vocab models (CNN classifier, smoke tests)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(gold)

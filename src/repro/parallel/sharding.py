@@ -1,0 +1,184 @@
+"""Logical-axis sharding: one rules table maps model-code axis names to mesh axes.
+
+Model code never mentions mesh axes.  It annotates arrays with *logical* axis
+names (``('batch', 'seq', 'embed')``); the active `MeshRules` maps each name
+to a physical mesh axis (or None = replicated).  A shape-divisibility guard
+demotes any dim that does not divide evenly over its mesh axis to replicated,
+so e.g. 8 KV heads on a 16-way model axis degrade gracefully instead of
+failing to lower.
+
+Used three ways:
+  * activation constraints inside model code      -> `logical(x, axes)`
+  * param / optimizer-state shardings for jit     -> `sharding_tree(axes_tree)`
+  * input/output shardings for the dry-run        -> `named_sharding(axes)`
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = [
+    "MeshRules",
+    "MeshContext",
+    "use_mesh",
+    "current",
+    "logical",
+    "spec_for",
+    "named_sharding",
+    "sharding_tree",
+    "TRAIN_RULES",
+    "SERVE_RULES",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """logical axis name -> mesh axis name(s) or None (replicated).
+
+    The default tables implement the posture in DESIGN.md §6:
+      batch   -> ('pod', 'data')      DP across pods and in-pod data axis
+      heads   -> 'model'              TP attention (when divisible)
+      ff/vocab/expert -> 'model'      TP FFN / vocab-sharded logits / EP
+      fsdp    -> 'data'               ZeRO-3 param+state sharding dim
+      kv_seq  -> 'model'              sequence-sharded KV cache (decode)
+      seq_sp  -> 'model'              sequence-parallel attention activations
+    """
+
+    rules: tuple[tuple[str, object], ...]
+
+    def get(self, name: str):
+        for k, v in self.rules:
+            if k == name:
+                return v
+        return None
+
+    def replace(self, **updates) -> "MeshRules":
+        d = dict(self.rules)
+        d.update(updates)
+        return MeshRules(tuple(d.items()))
+
+
+def _mk(**kw) -> MeshRules:
+    return MeshRules(tuple(kw.items()))
+
+
+# Training posture: DP(+pod) x TP, FSDP over data.
+TRAIN_RULES = _mk(
+    batch=("pod", "data"),
+    seq=None,
+    seq_sp="model",
+    embed=None,
+    heads="model",
+    kv_heads="model",
+    head_dim=None,
+    ff="model",
+    vocab="model",
+    expert="model",
+    fsdp="data",
+    kv_seq="model",
+    stack=None,
+    conv=None,
+)
+
+# Serving posture: params stay sharded (TP + fsdp dim over data so 1T fits),
+# KV cache sequence-sharded over the model axis (flash-decoding layout).
+SERVE_RULES = TRAIN_RULES
+
+_local = threading.local()
+
+
+@dataclasses.dataclass
+class MeshContext:
+    mesh: Mesh
+    rules: MeshRules
+
+
+def current() -> MeshContext | None:
+    return getattr(_local, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh, rules: MeshRules = TRAIN_RULES):
+    """Activate (mesh, rules) for `logical` constraints, and enter the mesh."""
+    prev = current()
+    _local.ctx = MeshContext(mesh, rules)
+    try:
+        with mesh:
+            yield _local.ctx
+    finally:
+        _local.ctx = prev
+
+
+def _axis_size(mesh: Mesh, phys) -> int:
+    if phys is None:
+        return 1
+    if isinstance(phys, (tuple, list)):
+        n = 1
+        for p in phys:
+            n *= mesh.shape[p]
+        return n
+    return mesh.shape[phys]
+
+
+def spec_for(axes, *, mesh: Mesh, rules: MeshRules, shape=None) -> PartitionSpec:
+    """Logical axes -> PartitionSpec, demoting non-divisible dims to None.
+
+    ``axes`` may contain None entries (explicitly replicated dims).  If
+    ``shape`` is given, any dim whose size does not divide over its mapped
+    mesh axes is replicated instead (graceful GQA/odd-head degradation).
+    Mesh axes must not repeat within one spec; later occurrences demote.
+    """
+    used: set[str] = set()
+    out = []
+    for i, name in enumerate(axes):
+        phys = rules.get(name) if name is not None else None
+        if phys is not None:
+            flat = tuple(phys) if isinstance(phys, (tuple, list)) else (phys,)
+            # drop axes absent from this mesh (e.g. 'pod' on the single-pod mesh)
+            flat = tuple(p for p in flat if p in mesh.shape)
+            if not flat or any(p in used for p in flat):
+                phys = None
+            elif shape is not None and shape[i] % _axis_size(mesh, flat) != 0:
+                phys = None
+            else:
+                used.update(flat)
+                phys = flat if len(flat) > 1 else flat[0]
+        out.append(phys)
+    return PartitionSpec(*out)
+
+
+def named_sharding(axes, *, shape=None, ctx: MeshContext | None = None) -> NamedSharding:
+    ctx = ctx or current()
+    assert ctx is not None, "named_sharding requires an active use_mesh()"
+    return NamedSharding(ctx.mesh, spec_for(axes, mesh=ctx.mesh, rules=ctx.rules, shape=shape))
+
+
+def logical(x: jax.Array, axes) -> jax.Array:
+    """Constrain activation sharding by logical axes; no-op outside use_mesh."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = spec_for(axes, mesh=ctx.mesh, rules=ctx.rules, shape=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def sharding_tree(axes_tree, shape_tree=None, *, ctx: MeshContext | None = None):
+    """Tree of logical-axes tuples (+ optional matching shapes) -> NamedShardings."""
+    ctx = ctx or current()
+    assert ctx is not None
+
+    def one(axes, shape=None):
+        return named_sharding(axes, shape=shape, ctx=ctx)
+
+    if shape_tree is None:
+        return jax.tree.map(one, axes_tree, is_leaf=lambda t: isinstance(t, tuple))
+    return jax.tree.map(
+        lambda a, s: one(a, shape=s),
+        axes_tree,
+        shape_tree,
+        is_leaf=lambda t: isinstance(t, tuple),
+    )

@@ -1,0 +1,2 @@
+"""Analysis utilities: post-SPMD HLO cost analyzer + v5e roofline model."""
+from . import hlo, roofline

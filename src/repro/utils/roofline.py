@@ -1,0 +1,140 @@
+"""Roofline terms for TPU v5e from the dry-run's compiled artifact.
+
+    compute term    = device_FLOPs / peak_FLOP/s
+    memory term     = device_HBM_bytes / HBM_bw
+    collective term = device_wire_bytes / link_bw
+
+(Equivalent to the assignment's global formulation — the SPMD module is the
+per-device program, so device_X = global_X / chips.)  The dominant term is
+the bottleneck; step time >= max(terms); roofline fraction = compute term /
+max(terms) (how close the step is to pure-MXU-bound).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from .hlo import HloCost
+
+__all__ = ["HW", "V5E", "RooflineReport", "report"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float      # FLOP/s per chip (bf16)
+    hbm_bw: float          # bytes/s per chip
+    link_bw: float         # bytes/s per ICI link
+    hbm_bytes: float       # capacity per chip
+
+
+V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
+         hbm_bytes=16e9)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    device_flops: float
+    device_bytes: float
+    device_coll_bytes: float
+    model_flops: float            # 6*N*D useful-work reference (global)
+    arg_bytes: float              # per-device argument residency
+    temp_bytes: float
+    coll_by_kind: dict
+    notes: str = ""
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """compute term / max term — 1.0 means pure compute-bound."""
+        return self.compute_s / max(self.step_time_s, 1e-30)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / compiled FLOPs (remat/redundancy/attention waste)."""
+        global_flops = self.device_flops * self.chips
+        return self.model_flops / max(global_flops, 1e-30)
+
+    @property
+    def mfu(self) -> float:
+        """model FLOPs / (chips * peak * step_time) — the MFU the roofline
+        model predicts if the step ran exactly at its dominant bound."""
+        return self.model_flops / (self.chips * 197e12 * max(self.step_time_s, 1e-30))
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "compute_ms": self.compute_s * 1e3,
+            "memory_ms": self.memory_s * 1e3,
+            "collective_ms": self.collective_s * 1e3,
+            "dominant": self.dominant,
+            "roofline_fraction": self.roofline_fraction,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "predicted_mfu": self.mfu,
+            "device_flops": self.device_flops,
+            "device_bytes": self.device_bytes,
+            "device_coll_bytes": self.device_coll_bytes,
+            "model_flops": self.model_flops,
+            "arg_gb": self.arg_bytes / 1e9,
+            "temp_gb": self.temp_bytes / 1e9,
+            "coll_by_kind": {k: v for k, v in sorted(
+                self.coll_by_kind.items(), key=lambda kv: -kv[1])},
+            "notes": self.notes,
+        }
+
+    def summary(self) -> str:
+        r = self.row()
+        return (
+            f"{self.arch} x {self.shape} @ {self.mesh} ({self.chips} chips)\n"
+            f"  compute {r['compute_ms']:9.3f} ms | memory {r['memory_ms']:9.3f} ms"
+            f" | collective {r['collective_ms']:9.3f} ms  -> {self.dominant}-bound\n"
+            f"  roofline fraction {self.roofline_fraction:5.1%}"
+            f" | useful-FLOPs ratio {self.useful_flops_ratio:5.2f}"
+            f" | predicted MFU {self.mfu:5.1%}\n"
+            f"  per-device: {self.device_flops/1e12:.2f} TFLOP,"
+            f" {self.device_bytes/1e9:.2f} GB HBM, {self.device_coll_bytes/1e9:.3f} GB wire,"
+            f" args {self.arg_bytes/1e9:.2f} GB, temps {self.temp_bytes/1e9:.2f} GB"
+        )
+
+
+def report(*, arch: str, shape: str, mesh_name: str, chips: int, cost: HloCost,
+           model_flops: float, mem_stats=None, hw: HW = V5E,
+           notes: str = "") -> RooflineReport:
+    arg_b = getattr(mem_stats, "argument_size_in_bytes", 0) if mem_stats else 0
+    tmp_b = getattr(mem_stats, "temp_size_in_bytes", 0) if mem_stats else 0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        compute_s=cost.flops / hw.peak_flops,
+        memory_s=cost.bytes / hw.hbm_bw,
+        collective_s=cost.coll_bytes / hw.link_bw,
+        device_flops=cost.flops,
+        device_bytes=cost.bytes,
+        device_coll_bytes=cost.coll_bytes,
+        model_flops=model_flops,
+        arg_bytes=arg_b,
+        temp_bytes=tmp_b,
+        coll_by_kind=cost.coll_by_kind,
+        notes=notes,
+    )
+
+
+def save_rows(path: str, rows: list[dict]):
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)

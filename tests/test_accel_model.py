@@ -1,0 +1,111 @@
+"""Cycle-accurate PE-array model vs the paper's own numbers (Table I, §IV)."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    PEConfig, PE_4_14_3, PE_8_7_3, aggregate, conv_layer_cycles,
+)
+from repro.core.accel_model import table1_example
+
+
+class TestTable1:
+    def test_paper_table1_dense_15_cycles(self):
+        assert table1_example().dense == 15
+
+    def test_paper_table1_sparse_8_cycles(self):
+        assert table1_example().vscnn == 8
+
+    def test_paper_table1_saving_47pct(self):
+        r = table1_example()
+        assert (r.dense - r.vscnn) / r.dense == pytest.approx(0.4667, abs=0.01)
+
+
+class TestDenseCycleFormula:
+    def test_dense_cycles_5x5(self):
+        x = np.ones((5, 5, 1))
+        w = np.ones((3, 3, 1, 1))
+        r = conv_layer_cycles(x, w, PEConfig(blocks=1, rows=5, cols=3))
+        assert r.dense == 15  # ceil(5/5) * 5 * 3
+
+    def test_dense_scales_with_cin_cout(self):
+        x = np.ones((14, 14, 4))
+        w = np.ones((3, 3, 4, 8))
+        pe = PEConfig(blocks=4, rows=14, cols=3)
+        r = conv_layer_cycles(x, w, pe)
+        # ceil(14/14)=1 row grp * 14 cols * 3 kx * 4 cin * ceil(8/4)=2
+        assert r.dense == 1 * 14 * 3 * 4 * 2
+
+    def test_rows_padding(self):
+        x = np.ones((15, 5, 1))  # 15 rows on 14-row PE -> 2 row groups
+        w = np.ones((3, 3, 1, 1))
+        r = conv_layer_cycles(x, w, PEConfig(blocks=1, rows=14, cols=3))
+        assert r.dense == 2 * 5 * 3
+
+
+class TestSparseSkipping:
+    def test_zero_weight_column_skipped(self):
+        x = np.ones((5, 5, 1))
+        w = np.ones((3, 3, 1, 1))
+        w[:, 2] = 0.0  # kernel column WC pruned
+        r = conv_layer_cycles(x, w, PEConfig(blocks=1, rows=5, cols=3))
+        assert r.vscnn == 10  # 5 input cols x 2 nonzero weight cols
+
+    def test_zero_input_column_skipped(self):
+        x = np.ones((5, 5, 1))
+        x[:, 1] = 0.0  # input column B all zero
+        w = np.ones((3, 3, 1, 1))
+        r = conv_layer_cycles(x, w, PEConfig(blocks=1, rows=5, cols=3))
+        assert r.vscnn == 12  # 4 nonzero input cols x 3 weight cols
+
+    def test_dense_input_dense_weight_no_skip(self):
+        x = np.ones((5, 5, 2))
+        w = np.ones((3, 3, 2, 2))
+        r = conv_layer_cycles(x, w, PEConfig(blocks=2, rows=5, cols=3))
+        assert r.vscnn == r.dense
+
+    def test_all_zero_weight(self):
+        x = np.ones((5, 5, 1))
+        w = np.zeros((3, 3, 1, 1))
+        r = conv_layer_cycles(x, w, PEConfig(blocks=1, rows=5, cols=3))
+        assert r.vscnn == 0
+
+    def test_speedup_monotone_in_sparsity(self):
+        rng = np.random.default_rng(0)
+        x = np.abs(rng.standard_normal((14, 14, 8)))
+        pe = PE_4_14_3
+        speeds = []
+        for keep in (1.0, 0.6, 0.3):
+            w = rng.standard_normal((3, 3, 8, 16))
+            mask = rng.random((3, 8, 16)) < keep  # prune whole ky-columns
+            w = w * mask[None]
+            speeds.append(conv_layer_cycles(x, w, pe).speedup)
+        assert speeds[0] <= speeds[1] <= speeds[2]
+
+
+class TestIdealBounds:
+    def test_vscnn_never_beats_ideal_vector(self):
+        rng = np.random.default_rng(1)
+        for _ in range(5):
+            x = np.maximum(rng.standard_normal((28, 28, 4)), 0)
+            w = rng.standard_normal((3, 3, 4, 8))
+            w[:, :, :, rng.random(8) < 0.4] = 0
+            for pe in (PE_4_14_3, PE_8_7_3):
+                r = conv_layer_cycles(x, w, pe)
+                assert r.vscnn >= r.ideal_vector
+                assert r.ideal_vector >= r.ideal_fine or r.ideal_fine <= r.dense
+
+    def test_aggregate_sums(self):
+        x = np.ones((5, 5, 1))
+        w = np.ones((3, 3, 1, 1))
+        r = conv_layer_cycles(x, w, PEConfig(blocks=1, rows=5, cols=3))
+        agg = aggregate([r, r, r])
+        assert agg.dense == 3 * r.dense and agg.vscnn == 3 * r.vscnn
+
+
+class TestBlockMapWidth:
+    def test_width_mapping(self):
+        x = np.ones((5, 10, 1))
+        w = np.ones((3, 3, 1, 1))
+        pe = PEConfig(blocks=2, rows=5, cols=3, block_map="width")
+        r = conv_layer_cycles(x, w, pe)
+        assert r.dense == 1 * 5 * 3 * 1 * 1  # width 10 / 2 blocks = 5 groups

@@ -1,0 +1,178 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype/density sweeps.
+
+Kernels run interpret=True on CPU (the TPU lowering is exercised by the
+BlockSpecs themselves — identical index maps either way).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encode, prune_vectors_balanced
+from repro.kernels import vsmm, vsconv
+from repro.kernels.ref import vsmm_ref, vsconv_ref
+
+
+def _sparse(rng, k, n, vk, vn, density, dtype):
+    w = rng.standard_normal((k, n)).astype(np.float32)
+    wp, _ = prune_vectors_balanced(w, density, vk, vn)
+    return encode(jnp.asarray(wp, dtype), vk, vn)
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+class TestVsmm:
+    @pytest.mark.parametrize("m,k,n,vk,vn,density", [
+        (64, 256, 256, 32, 128, 0.25),
+        (100, 256, 512, 16, 128, 0.5),      # M padding path
+        (7, 128, 128, 128, 128, 1.0),       # dense special case, tiny M
+        (256, 512, 128, 64, 128, 0.125),
+        (32, 64, 128, 8, 128, 0.5),         # small vk
+    ])
+    def test_matches_ref_f32(self, m, k, n, vk, vn, density, rng):
+        vs = _sparse(rng, k, n, vk, vn, density, jnp.float32)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        assert _rel_err(vsmm(x, vs), vsmm_ref(x, vs)) < 1e-5
+
+    @pytest.mark.parametrize("dtype,tol", [(jnp.bfloat16, 3e-2), (jnp.float32, 1e-5)])
+    def test_dtypes(self, dtype, tol, rng):
+        vs = _sparse(rng, 256, 256, 32, 128, 0.5, dtype)
+        x = jnp.asarray(rng.standard_normal((64, 256)), dtype)
+        assert _rel_err(vsmm(x, vs), vsmm_ref(x, vs)) < tol
+
+    def test_zero_input_rows_skip_is_exact(self, rng):
+        """Runtime input skipping must not change results (zeros contribute
+        nothing) — the paper's input-side skip is exact, not approximate."""
+        vs = _sparse(rng, 256, 256, 32, 128, 0.5, jnp.float32)
+        x = np.maximum(rng.standard_normal((64, 256)), 0).astype(np.float32)
+        x[: 32] = 0.0  # a fully-zero activation block
+        x = jnp.asarray(x)
+        on = vsmm(x, vs, skip_zero_inputs=True)
+        off = vsmm(x, vs, skip_zero_inputs=False)
+        assert _rel_err(on, off) < 1e-6
+        assert np.asarray(on)[:32].max() == 0.0
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 64]),
+           st.sampled_from([1, 2, 4]))
+    def test_property_random_shapes(self, seed, vk, sfrac):
+        rng = np.random.default_rng(seed)
+        kb = 4
+        k, n = kb * vk, 256
+        vs = _sparse(rng, k, n, vk, 128, sfrac / 4, jnp.float32)
+        x = jnp.asarray(rng.standard_normal((48, k)), jnp.float32)
+        assert _rel_err(vsmm(x, vs), vsmm_ref(x, vs)) < 1e-5
+
+
+class TestVsconv:
+    @pytest.mark.parametrize("n,h,w,c,co,vk,vn,density", [
+        (2, 14, 14, 64, 128, 32, 128, 0.3),
+        (1, 7, 9, 128, 256, 64, 128, 0.5),   # odd spatial + bh padding
+        (1, 8, 8, 32, 128, 32, 128, 1.0),    # dense special case
+        (1, 16, 16, 32, 64, 32, 64, 0.25),   # vn < 128
+    ])
+    def test_matches_ref(self, n, h, w, c, co, vk, vn, density, rng):
+        wmat = rng.standard_normal((9 * c, co)).astype(np.float32)
+        wp, _ = prune_vectors_balanced(wmat, density, vk, vn)
+        vs = encode(jnp.asarray(wp), vk, vn)
+        x = jnp.asarray(
+            np.maximum(rng.standard_normal((n, h, w, c)), 0), jnp.float32)
+        assert _rel_err(vsconv(x, vs), vsconv_ref(x, vs)) < 1e-5
+
+    def test_post_relu_zero_planes(self, rng):
+        """Whole zero input row-blocks (the paper's dashed blocks)."""
+        c, co = 32, 128
+        wmat = rng.standard_normal((9 * c, co)).astype(np.float32)
+        wp, _ = prune_vectors_balanced(wmat, 0.5, 32, 128)
+        vs = encode(jnp.asarray(wp), 32, 128)
+        x = np.maximum(rng.standard_normal((1, 16, 8, c)), 0).astype(np.float32)
+        x[:, 4:12] = 0.0
+        x = jnp.asarray(x)
+        assert _rel_err(vsconv(x, vs), vsconv_ref(x, vs)) < 1e-5
+
+    def test_bf16(self, rng):
+        c, co = 32, 128
+        wmat = rng.standard_normal((9 * c, co)).astype(np.float32)
+        wp, _ = prune_vectors_balanced(wmat, 0.5, 32, 128)
+        vs = encode(jnp.asarray(wp, jnp.bfloat16), 32, 128)
+        x = jnp.asarray(np.maximum(rng.standard_normal((1, 8, 8, c)), 0),
+                        jnp.bfloat16)
+        assert _rel_err(vsconv(x, vs), vsconv_ref(x, vs)) < 5e-2
+
+
+class TestStructuralFlopSkip:
+    def test_sparse_grid_smaller_than_dense(self, rng):
+        """The kernel's grid (and its CostEstimate FLOPs) scale with density —
+        the zero weight vectors are structurally absent, like vectors absent
+        from the paper's SRAM."""
+        from repro.kernels.vsmm import vsmm_pallas
+        k = n = 256
+        x = jnp.asarray(rng.standard_normal((64, k)), jnp.float32)
+        flops = {}
+        for dens in (0.25, 1.0):
+            vs = _sparse(rng, k, n, 32, 128, dens, jnp.float32)
+            flops[dens] = 2 * 64 * vs.n_strips * vs.nnz_per_strip * vs.vk * vs.vn
+        assert flops[0.25] == flops[1.0] * 0.25
+
+
+class TestFlashKernel:
+    """Pallas flash-attention fwd vs naive softmax oracle."""
+
+    @staticmethod
+    def _naive(q, k, v, causal=True, window=None, q_offset=0):
+        import jax
+        bh, tq, hd = q.shape
+        tk = k.shape[1]
+        s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                       k.astype(jnp.float32)) * hd ** -0.5
+        qp = q_offset + jnp.arange(tq)[:, None]
+        kp = jnp.arange(tk)[None, :]
+        m = jnp.ones((tq, tk), bool)
+        if causal:
+            m &= qp >= kp
+        if window is not None:
+            m &= qp - kp < window
+        s = jnp.where(m[None], s, -1e30)
+        return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1),
+                          v.astype(jnp.float32))
+
+    @pytest.mark.parametrize("case", [
+        dict(bh=4, tq=128, tk=128, hd=64, bq=32, bk=32, causal=True),
+        dict(bh=2, tq=64, tk=128, hd=32, bq=32, bk=64, causal=False),
+        dict(bh=2, tq=128, tk=128, hd=64, bq=64, bk=32, causal=True, window=16),
+        dict(bh=1, tq=32, tk=256, hd=64, bq=32, bk=64, causal=True, q_offset=224),
+    ])
+    def test_matches_naive(self, case, rng):
+        from repro.kernels.flash import flash_fwd_pallas
+        bh, tq, tk, hd = case["bh"], case["tq"], case["tk"], case["hd"]
+        q = jnp.asarray(rng.standard_normal((bh, tq, hd)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((bh, tk, hd)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((bh, tk, hd)), jnp.float32)
+        kw = {k_: v_ for k_, v_ in case.items()
+              if k_ in ("causal", "window", "q_offset", "bq", "bk")}
+        out = flash_fwd_pallas(q, k, v, interpret=True, **kw)
+        ref = self._naive(q, k, v, case.get("causal", True),
+                          case.get("window"), case.get("q_offset", 0))
+        assert _rel_err(out, ref) < 2e-5
+
+    def test_bf16(self, rng):
+        from repro.kernels.flash import flash_fwd_pallas
+        q = jnp.asarray(rng.standard_normal((2, 64, 128)), jnp.bfloat16)
+        k = jnp.asarray(rng.standard_normal((2, 64, 128)), jnp.bfloat16)
+        v = jnp.asarray(rng.standard_normal((2, 64, 128)), jnp.bfloat16)
+        out = flash_fwd_pallas(q, k, v, bq=32, bk=32, interpret=True)
+        ref = self._naive(q, k, v)
+        assert _rel_err(out, ref) < 3e-2
+
+    def test_numerical_stability_large_logits(self, rng):
+        from repro.kernels.flash import flash_fwd_pallas
+        q = jnp.asarray(80 * rng.standard_normal((1, 32, 32)), jnp.float32)
+        k = jnp.asarray(80 * rng.standard_normal((1, 32, 32)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 32, 32)), jnp.float32)
+        out = flash_fwd_pallas(q, k, v, bq=16, bk=16, interpret=True)
+        assert np.isfinite(np.asarray(out)).all()

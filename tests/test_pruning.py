@@ -1,0 +1,77 @@
+"""Vector pruning (Mao-style) invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    element_density, prune_conv_columns, prune_vectors, prune_vectors_balanced,
+)
+from repro.core.pruning import vector_scores, prune_tree_balanced
+
+
+class TestGlobalPruning:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.1, 1.0))
+    def test_density_hit(self, seed, density):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((64, 64)).astype(np.float32)
+        wp = prune_vectors(w, density, 8, 8)
+        kept = (vector_scores(wp, 8, 8) > 0).mean()
+        assert abs(kept - density) < 0.15
+
+    def test_keeps_largest_vectors(self):
+        w = np.ones((16, 8), np.float32)
+        w[:8] *= 10  # top half has much larger norm
+        wp = prune_vectors(w, 0.5, 8, 8)
+        assert (wp[:8] != 0).all() and (wp[8:] == 0).all()
+
+
+class TestBalancedPruning:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.floats(0.15, 0.9))
+    def test_per_strip_quota_exact(self, seed, density):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((96, 32)).astype(np.float32)
+        _, mask = prune_vectors_balanced(w, density, 8, 8)
+        counts = mask.sum(axis=0)
+        assert (counts == counts[0]).all()
+
+    def test_balanced_close_to_global_mass(self):
+        rng = np.random.default_rng(7)
+        w = rng.standard_normal((128, 128)).astype(np.float32)
+        g = prune_vectors(w, 0.25, 16, 16)
+        b, _ = prune_vectors_balanced(w, 0.25, 16, 16)
+        mass = lambda a: np.square(a).sum()
+        # the DESIGN.md claim: balancing retains ~the same magnitude mass
+        assert mass(b) > 0.9 * mass(g)
+
+
+class TestConvColumnPruning:
+    def test_column_granularity(self):
+        rng = np.random.default_rng(8)
+        w = rng.standard_normal((3, 3, 4, 8)).astype(np.float32)
+        wp = prune_conv_columns(w, 0.5)
+        col_nz = (wp != 0).any(axis=0)  # (kx, cin, cout)
+        col_all = (wp != 0).all(axis=0)
+        # each kernel column is either fully kept or fully zero
+        assert (col_nz == col_all).all()
+
+    def test_density(self):
+        rng = np.random.default_rng(9)
+        w = rng.standard_normal((3, 3, 16, 16)).astype(np.float32)
+        wp = prune_conv_columns(w, 0.3)
+        assert abs(element_density(wp) - 0.3) < 0.05
+
+
+class TestTreePruning:
+    def test_only_large_matrices_pruned(self):
+        import jax.numpy as jnp
+        params = {
+            "big": jnp.ones((512, 512)),
+            "small": jnp.ones((8, 8)),
+            "vec": jnp.ones((512,)),
+        }
+        new, report = prune_tree_balanced(params, 0.5, 16, 128)
+        assert element_density(np.asarray(new["big"])) < 0.75
+        assert (np.asarray(new["small"]) == 1).all()
+        assert (np.asarray(new["vec"]) == 1).all()
+        assert len(report) == 1

@@ -1,0 +1,71 @@
+"""Structural sparse ops (jnp path) vs dense oracles."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    conv_weight_to_matrix, dense_conv2d_3x3, encode, im2col_3x3,
+    prune_vectors_balanced, vs_conv2d_3x3, vs_matmul,
+)
+
+
+def _rel(a, b):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+class TestVsMatmul:
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from([0.25, 0.5, 1.0]))
+    def test_vs_dense(self, seed, density):
+        rng = np.random.default_rng(seed)
+        w = rng.standard_normal((128, 256)).astype(np.float32)
+        wp, _ = prune_vectors_balanced(w, density, 16, 128)
+        vs = encode(jnp.asarray(wp), 16, 128)
+        x = jnp.asarray(rng.standard_normal((4, 9, 128)), np.float32)
+        assert _rel(vs_matmul(x, vs), x @ wp) < 1e-5
+
+    def test_batched_shapes_preserved(self):
+        rng = np.random.default_rng(2)
+        w = rng.standard_normal((64, 128)).astype(np.float32)
+        wp, _ = prune_vectors_balanced(w, 0.5, 16, 128)
+        vs = encode(jnp.asarray(wp), 16, 128)
+        x = jnp.ones((3, 5, 7, 64))
+        assert vs_matmul(x, vs).shape == (3, 5, 7, 128)
+
+
+class TestIm2col:
+    def test_matches_lax_conv(self):
+        rng = np.random.default_rng(3)
+        x = jnp.asarray(rng.standard_normal((2, 9, 11, 8)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((3, 3, 8, 16)), jnp.float32)
+        patches = im2col_3x3(x)
+        ref = dense_conv2d_3x3(x, w)
+        out = patches @ conv_weight_to_matrix(w)
+        assert _rel(out, ref) < 1e-4
+
+
+class TestVsConv:
+    @pytest.mark.parametrize("density", [0.25, 0.5, 1.0])
+    def test_vs_dense_conv(self, density):
+        rng = np.random.default_rng(4)
+        cin, cout = 32, 128
+        w = rng.standard_normal((3, 3, cin, cout)).astype(np.float32)
+        wm = conv_weight_to_matrix(jnp.asarray(w))
+        wp, _ = prune_vectors_balanced(np.asarray(wm), density, 32, 128)
+        vs = encode(jnp.asarray(wp), 32, 128)
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, cin)), jnp.float32)
+        ref = dense_conv2d_3x3(x, jnp.asarray(wp.reshape(3, 3, cin, cout)))
+        assert _rel(vs_conv2d_3x3(x, vs), ref) < 1e-4
+
+    def test_jnp_and_pallas_agree(self):
+        rng = np.random.default_rng(5)
+        cin, cout = 32, 128
+        wm = rng.standard_normal((9 * cin, cout)).astype(np.float32)
+        wp, _ = prune_vectors_balanced(wm, 0.5, 32, 128)
+        vs = encode(jnp.asarray(wp), 32, 128)
+        x = jnp.asarray(np.maximum(rng.standard_normal((1, 8, 8, cin)), 0),
+                        jnp.float32)
+        assert _rel(vs_conv2d_3x3(x, vs, impl="jnp"),
+                    vs_conv2d_3x3(x, vs, impl="pallas")) < 1e-5

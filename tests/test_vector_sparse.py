@@ -1,0 +1,86 @@
+"""VectorSparse format invariants (property-based)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    VectorSparse, decode, encode, from_mask, prune_vectors_balanced, tile_mask,
+)
+
+
+def _balanced_w(rng, kb, nb, vk, vn, s):
+    w = rng.standard_normal((kb * vk, nb * vn)).astype(np.float32)
+    wp, mask = prune_vectors_balanced(w, s / kb, vk, vn)
+    return wp, mask
+
+
+@st.composite
+def sparse_case(draw):
+    vk = draw(st.sampled_from([1, 2, 8, 16]))
+    vn = draw(st.sampled_from([1, 4, 8]))
+    kb = draw(st.integers(2, 6))
+    nb = draw(st.integers(1, 4))
+    s = draw(st.integers(1, kb))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return vk, vn, kb, nb, s, seed
+
+
+class TestEncodeDecode:
+    @settings(max_examples=40, deadline=None)
+    @given(sparse_case())
+    def test_roundtrip(self, case):
+        vk, vn, kb, nb, s, seed = case
+        rng = np.random.default_rng(seed)
+        wp, mask = _balanced_w(rng, kb, nb, vk, vn, s)
+        vs = encode(jnp.asarray(wp), vk, vn)
+        assert np.allclose(np.asarray(decode(vs)), wp)
+
+    @settings(max_examples=40, deadline=None)
+    @given(sparse_case())
+    def test_density_invariant(self, case):
+        vk, vn, kb, nb, s, seed = case
+        rng = np.random.default_rng(seed)
+        wp, mask = _balanced_w(rng, kb, nb, vk, vn, s)
+        vs = encode(jnp.asarray(wp), vk, vn)
+        # encode may keep more tiles than pruning if random zeros align, but
+        # never fewer than the mask kept and never more than kb
+        assert vs.nnz_per_strip <= kb
+        assert 0 < vs.density <= 1.0
+
+    def test_idx_sorted_and_in_range(self):
+        rng = np.random.default_rng(3)
+        wp, _ = _balanced_w(rng, 8, 4, 16, 8, 3)
+        vs = encode(jnp.asarray(wp), 16, 8)
+        idx = np.asarray(vs.idx)
+        assert (np.diff(idx, axis=1) > 0).all()  # strictly increasing
+        assert idx.min() >= 0 and idx.max() < 8
+
+    def test_unbalanced_mask_rejected(self):
+        w = np.ones((4, 4), np.float32)
+        mask = np.array([[True, False], [False, False]])
+        with pytest.raises(ValueError):
+            from_mask(jnp.asarray(w), mask, 2, 2)
+
+    def test_tile_mask_detects_any_nonzero(self):
+        w = np.zeros((4, 4), np.float32)
+        w[1, 3] = 7.0  # tile (0, 1) for vk=vn=2
+        m = np.asarray(tile_mask(jnp.asarray(w), 2, 2))
+        assert m.tolist() == [[False, True], [False, False]]
+
+    def test_pytree_roundtrip(self):
+        import jax
+        rng = np.random.default_rng(4)
+        wp, _ = _balanced_w(rng, 4, 2, 8, 8, 2)
+        vs = encode(jnp.asarray(wp), 8, 8)
+        leaves, treedef = jax.tree_util.tree_flatten(vs)
+        vs2 = jax.tree_util.tree_unflatten(treedef, leaves)
+        assert np.allclose(np.asarray(decode(vs2)), np.asarray(decode(vs)))
+
+    def test_dense_special_case(self):
+        # S == KB: the dense network as the same format (paper: one datapath)
+        rng = np.random.default_rng(5)
+        w = rng.standard_normal((64, 32)).astype(np.float32)
+        vs = encode(jnp.asarray(w), 16, 8)
+        assert vs.density == 1.0
+        assert np.allclose(np.asarray(decode(vs)), w)
