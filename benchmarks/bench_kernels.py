@@ -8,6 +8,10 @@
    claim — it demonstrates the cycle model's work∝density on a real
    backend).
 3. Pallas kernel allclose + grid-size-vs-density check (interpret mode).
+4. Generalized conv geometry sweep: per-(kernel, stride) speedup-vs-density
+   rows for the vsconv kernel family (1x1 / 3x3 / 5x5 / 7x7, stride 1-2),
+   reporting the structural FLOP ratio and jnp-path wall clock alongside the
+   existing 3x3 numbers.
 """
 from __future__ import annotations
 
@@ -17,9 +21,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import encode, prune_vectors_balanced, vs_matmul
-from repro.kernels import vsmm
-from repro.kernels.ref import vsmm_ref
+from repro.core import encode, prune_vectors_balanced, vs_conv2d, vs_matmul
+from repro.kernels import vsconv, vsmm
+from repro.kernels.ref import vsconv_ref, vsmm_ref
 
 
 def _sparse(rng, k, n, vk, vn, density, dtype=jnp.float32):
@@ -80,6 +84,69 @@ def run() -> list[dict]:
             "grid_sparse_steps": vs.nnz_per_strip,
             "grid_dense_steps": vs.kb,
         })
+
+    rows += run_conv_geometries()
+    return rows
+
+
+# (kh, kw, stride, h, w, cin, cout, vk, vn) — the generalized kernel family:
+# VGG's 3x3/s1 plus the ResNet vocabulary (7x7-s2 stem, 1x1 projection,
+# stride-2 downsample) and a 5x5 mid-size tap.
+CONV_GEOMETRIES = [
+    (1, 1, 1, 28, 28, 128, 128, 32, 128),
+    (1, 1, 2, 28, 28, 128, 128, 32, 128),
+    (3, 3, 1, 28, 28, 64, 128, 32, 128),
+    (3, 3, 2, 28, 28, 64, 128, 32, 128),
+    (5, 5, 1, 14, 14, 32, 128, 32, 128),
+    (7, 7, 2, 28, 28, 8, 64, 8, 64),
+]
+
+
+def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
+    """Per-geometry speedup-vs-density: structural FLOP ratio (the kernel's
+    grid shrinks with density), jnp-path wall clock, and Pallas interpret
+    parity vs the oracle."""
+    rng = np.random.default_rng(1)
+    rows = []
+    for kh, kw, stride, h, w, cin, cout, vk, vn in CONV_GEOMETRIES:
+        base_us = None
+        for density in densities:
+            wm = rng.standard_normal((kh * kw * cin, cout)).astype(np.float32)
+            wp, _ = prune_vectors_balanced(wm, density, vk, vn)
+            vs = encode(jnp.asarray(wp), vk, vn)
+            x = jnp.asarray(
+                np.maximum(rng.standard_normal((4, h, w, cin)), 0),
+                jnp.float32)
+            # structural work: sparse grid steps vs dense K-tiles
+            flop_ratio = vs.nnz_per_strip / vs.kb
+            # jnp structural path wall clock (CPU; demonstrates work∝density)
+            fn = jax.jit(lambda xx: vs_conv2d(
+                xx, vs, kh=kh, kw=kw, stride=stride, impl="jnp"))
+            fn(x).block_until_ready()
+            t0 = time.time()
+            for _ in range(5):
+                out = fn(x)
+            out.block_until_ready()
+            us = (time.time() - t0) / 5 * 1e6
+            if base_us is None:
+                base_us = us  # density 1.0 reference
+            # Pallas interpret parity at the smallest density only (slow)
+            rel = None
+            if density == densities[-1]:
+                out_p = vsconv(x, vs, kh=kh, kw=kw, stride=stride)
+                ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride)
+                rel = float(np.abs(np.asarray(out_p) - np.asarray(ref)).max()
+                            / np.abs(np.asarray(ref)).max())
+            row = {
+                "name": f"vsconv_{kh}x{kw}_s{stride}_density_{density}",
+                "us_per_call": round(us, 1),
+                "speedup_vs_dense": round(base_us / us, 3),
+                "structural_flops_vs_dense": round(flop_ratio, 4),
+                "expected": density,
+            }
+            if rel is not None:
+                row["pallas_rel_err_vs_ref"] = rel
+            rows.append(row)
     return rows
 
 

@@ -35,8 +35,9 @@ def main():
                          jax.random.PRNGKey(0), jnp.float32)
     sparse, pruned = sparsify_vgg16(params, CONFIG.weight_density,
                                     vk=CONFIG.vk, vn=CONFIG.vn)
-    print(f"sparsified {len(sparse)} layers "
-          f"(stem conv1 stays dense: 27-row K)")
+    n_conv = sum(1 for k in sparse if k.startswith("conv"))
+    print(f"sparsified {len(sparse)} layers — every conv ({n_conv}/13, stem "
+          f"included via channel padding) + FC runs the vector-sparse path")
 
     data = SyntheticImages(args.batch, size=args.size)
     imgs = jnp.asarray(data.batch_at(0)["images"])

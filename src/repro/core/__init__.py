@@ -15,10 +15,14 @@ from .pruning import (
 )
 from .sparse_ops import (
     vs_matmul,
+    vs_conv2d,
     vs_conv2d_3x3,
+    dense_conv2d,
     dense_conv2d_3x3,
+    im2col,
     im2col_3x3,
     conv_weight_to_matrix,
+    same_pads,
 )
 from .accel_model import (
     PEConfig,

@@ -20,6 +20,13 @@ issues only {A,C,D,E} x {WA,WB} = 8 cycles.)
 Sparse rule: a cycle is skipped iff its input vector is all-zero OR every
 weight column it would feed in the lockstep block group is all-zero — the
 vectors are simply absent from SRAM (paper Fig. 7 dashed blocks).
+
+The model generalizes beyond the paper's 3x3/s1 evaluation to arbitrary
+kh x kw kernels and strides (`conv_layer_cycles(..., stride=...)`): weight
+kernel columns become kh-element ky-runs for each of kw positions, and with
+stride s an input column vector only pairs with the weight columns whose
+output grid actually reads it (1/s of them), matching the generalized
+vector-sparse datapath in kernels/vsconv.
 """
 from __future__ import annotations
 
@@ -83,57 +90,103 @@ def _input_vector_occupancy(x_nz: np.ndarray, rows: int) -> np.ndarray:
     return x_nz.reshape(hc, rows, w, cin).any(axis=1)
 
 
-def conv_layer_cycles(x: np.ndarray, w: np.ndarray, pe: PEConfig) -> CycleReport:
-    """Cycle counts for one 3x3/s1/p1 conv layer.
+def _same_geometry(size: int, k: int, stride: int) -> tuple[int, int]:
+    """XLA-"SAME": (out_size, pad_low)."""
+    from .sparse_ops import same_pads  # lazy: keep accel_model numpy-only
+
+    out, lo, _ = same_pads(size, k, stride)
+    return out, lo
+
+
+def conv_layer_cycles(
+    x: np.ndarray, w: np.ndarray, pe: PEConfig, *, stride: int = 1
+) -> CycleReport:
+    """Cycle counts for one kh x kw / stride / SAME conv layer.
 
     x : (H, W, Cin) input activations (already post-ReLU: zeros are real)
-    w : (3, 3, Cin, Cout) possibly vector-pruned weights
+    w : (kh, kw, Cin, Cout) possibly vector-pruned weights
+
+    Generalized geometry: an input column vector broadcast into the array
+    pairs with weight kernel column ``kx`` only when some output column reads
+    it — i.e. when its column index is congruent to ``kx - pad_left`` mod
+    ``stride`` (for stride 1, every column pairs with every kx, the paper's
+    Table-I accounting).  Boundary partial sums are issued and discarded,
+    as in the paper.
     """
     x_nz = np.asarray(x) != 0
     w_nz = np.asarray(w) != 0
     h, width, cin = x_nz.shape
     kh, kw, wcin, cout = w_nz.shape
-    assert (kh, kw) == (3, 3) and wcin == cin
+    assert wcin == cin, (w_nz.shape, cin)
 
     iv = _input_vector_occupancy(x_nz, pe.rows)  # (HC, W, Cin)
-    wv = w_nz.any(axis=0)  # weight column occupancy: (kx, Cin, Cout)
+    wv = w_nz.any(axis=0)  # weight column occupancy: (kw, Cin, Cout)
 
     hc = iv.shape[0]
+    _, pad_l = _same_geometry(width, kw, stride)
+    # input columns compatible with weight column kx (see docstring)
+    col_sets = [
+        np.nonzero((np.arange(width) - (kx - pad_l)) % stride == 0)[0]
+        for kx in range(kw)
+    ]
+
     if pe.block_map == "cout":
         g = math.ceil(cout / pe.blocks)
         pad = g * pe.blocks - cout
-        wvp = np.concatenate([wv, np.zeros((3, cin, pad), bool)], -1) if pad else wv
-        gwv = wvp.reshape(3, cin, g, pe.blocks).any(-1)  # (kx, Cin, G)
-        iv_cnt = iv.sum(axis=(0, 1))  # (Cin,) issued input vectors
-        vscnn = int((iv_cnt * gwv.sum(axis=(0, 2))).sum())
-        dense = hc * width * 3 * cin * g
+        wvp = np.concatenate([wv, np.zeros((kw, cin, pad), bool)], -1) if pad else wv
+        gwv = wvp.reshape(kw, cin, g, pe.blocks).any(-1)  # (kx, Cin, G)
+        vscnn = dense = 0
+        for kx in range(kw):
+            iv_cnt = iv[:, col_sets[kx]].sum(axis=(0, 1))  # (Cin,) issued
+            vscnn += int((iv_cnt * gwv[kx].sum(axis=-1)).sum())
+            dense += hc * len(col_sets[kx]) * cin * g
     elif pe.block_map == "width":
-        wg = math.ceil(width / pe.blocks)
-        pad = wg * pe.blocks - width
-        ivp = np.concatenate([iv, np.zeros((hc, pad, cin), bool)], 1) if pad else iv
-        giv = ivp.reshape(hc, wg, pe.blocks, cin).any(2)  # (HC, WG, Cin)
-        vscnn = int((giv.sum(axis=(0, 1)) * wv.sum(axis=(0, 2))).sum())
-        dense = hc * wg * 3 * cin * cout
+        vscnn = dense = 0
+        for kx in range(kw):
+            cols = col_sets[kx]
+            wg = math.ceil(len(cols) / pe.blocks)
+            pad = wg * pe.blocks - len(cols)
+            ivk = iv[:, cols]
+            if pad:
+                ivk = np.concatenate(
+                    [ivk, np.zeros((hc, pad, cin), bool)], 1
+                )
+            giv = ivk.reshape(hc, wg, pe.blocks, cin).any(2)  # (HC, WG, Cin)
+            vscnn += int((giv.sum(axis=(0, 1)) * wv[kx].sum(axis=-1)).sum())
+            dense += hc * wg * cin * cout
     else:
         raise ValueError(pe.block_map)
 
     # Ideal vector-sparse: every truly-nonzero (input vec, weight col) pair
     # costs 1/B cycles (perfect packing over blocks, no lockstep loss).
-    pairs = int((iv.sum(axis=(0, 1)) * wv.sum(axis=(0, 2))).sum())
+    pairs = sum(
+        int((iv[:, col_sets[kx]].sum(axis=(0, 1)) * wv[kx].sum(axis=-1)).sum())
+        for kx in range(kw)
+    )
     ideal_vector = math.ceil(pairs / pe.blocks)
 
     # Ideal fine-grained: nonzero MACs / total PEs.
-    xp = np.pad(x_nz, ((1, 1), (1, 1), (0, 0)))
+    ho, pad_t = _same_geometry(h, kh, stride)
+    wo = math.ceil(width / stride)
+    pb = max(stride * (ho - 1) + kh - h - pad_t, 0)
+    pr = max(stride * (wo - 1) + kw - width - pad_l, 0)
+    xp = np.pad(x_nz, ((pad_t, pb), (pad_l, pr), (0, 0)))
     # hits[ky,kx,cin] = # output positions whose input tap is nonzero
     hits = np.stack(
         [
-            [xp[ky : ky + h, kx : kx + width].sum(axis=(0, 1)) for kx in range(3)]
-            for ky in range(3)
+            [
+                xp[
+                    ky : ky + stride * (ho - 1) + 1 : stride,
+                    kx : kx + stride * (wo - 1) + 1 : stride,
+                ].sum(axis=(0, 1))
+                for kx in range(kw)
+            ]
+            for ky in range(kh)
         ]
-    )  # (3,3,Cin)
-    w_cnt = w_nz.sum(axis=3)  # (3,3,Cin) nonzero couts per tap
+    )  # (kh,kw,Cin)
+    w_cnt = w_nz.sum(axis=3)  # (kh,kw,Cin) nonzero couts per tap
     macs_nonzero = int((hits * w_cnt).sum())
-    macs_dense = h * width * 9 * cin * cout
+    macs_dense = ho * wo * kh * kw * cin * cout
     ideal_fine = math.ceil(macs_nonzero / pe.n_pe)
 
     return CycleReport(

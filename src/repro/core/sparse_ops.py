@@ -19,7 +19,18 @@ import jax.numpy as jnp
 
 from .vector_sparse import VectorSparse
 
-__all__ = ["vs_matmul", "im2col_3x3", "vs_conv2d_3x3", "dense_conv2d_3x3"]
+__all__ = [
+    "vs_matmul", "im2col", "im2col_3x3", "vs_conv2d", "vs_conv2d_3x3",
+    "dense_conv2d", "dense_conv2d_3x3", "conv_weight_to_matrix", "same_pads",
+]
+
+
+def same_pads(size: int, k: int, stride: int) -> tuple[int, int, int]:
+    """XLA-"SAME" geometry: (out_size, pad_low, pad_high)."""
+    out = -(-size // stride)
+    total = max((out - 1) * stride + k - size, 0)
+    lo = total // 2
+    return out, lo, total - lo
 
 
 def _use_pallas(impl: str) -> bool:
@@ -73,46 +84,94 @@ def vs_matmul(
     return acc.reshape(*batch, nb * vn).astype(out_dtype)
 
 
-def im2col_3x3(x: jax.Array) -> jax.Array:
-    """NHWC, pad 1, stride 1 -> (N, H, W, 9*C) patches, (ky, kx) row-major."""
+def im2col(
+    x: jax.Array, *, kh: int = 3, kw: int = 3, stride: int = 1
+) -> jax.Array:
+    """NHWC, SAME padding -> (N, Hout, Wout, kh*kw*C) patches, (ky, kx)
+    row-major — the layout `conv_weight_to_matrix` flattens weights into."""
     n, h, w, c = x.shape
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    ho, pt, pb = same_pads(h, kh, stride)
+    wo, pl_, pr = same_pads(w, kw, stride)
+    xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
     cols = [
-        jax.lax.dynamic_slice(xp, (0, ky, kx, 0), (n, h, w, c))
-        for ky in range(3)
-        for kx in range(3)
+        jax.lax.slice(
+            xp,
+            (0, ky, kx, 0),
+            (n, ky + stride * (ho - 1) + 1, kx + stride * (wo - 1) + 1, c),
+            (1, stride, stride, 1),
+        )
+        for ky in range(kh)
+        for kx in range(kw)
     ]
     return jnp.concatenate(cols, axis=-1)
 
 
-def vs_conv2d_3x3(x: jax.Array, w_vs: VectorSparse, *, impl: str = "jnp") -> jax.Array:
-    """3x3/s1/p1 conv with vector-sparse weights.
+def im2col_3x3(x: jax.Array) -> jax.Array:
+    """3x3/s1/p1 patches (back-compat alias)."""
+    return im2col(x, kh=3, kw=3, stride=1)
 
-    Weight matrix layout: (9*Cin, Cout) with K ordered (ky, kx, cin) — a zero
-    K-tile is a pruned run of input channels for one kernel position, the TPU
-    analogue of the paper's pruned kernel columns.
+
+def vs_conv2d(
+    x: jax.Array,
+    w_vs: VectorSparse,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    bias: jax.Array | None = None,
+    fuse_relu: bool = False,
+    impl: str = "jnp",
+) -> jax.Array:
+    """kh x kw / stride / SAME conv with vector-sparse weights.
+
+    Weight matrix layout: (kh*kw*Cin, Cout) with K ordered (ky, kx, cin) — a
+    zero K-tile is a pruned run of input channels for one kernel position,
+    the TPU analogue of the paper's pruned kernel columns.  1x1 convs are the
+    sparse matmul over pixels (stride subsamples first).  ``bias`` and
+    ``fuse_relu`` run the epilogue fused in the Pallas path and in f32 before
+    the output cast in the jnp path — bit-identical math either way.
     """
-    n, h, w, c = x.shape
     if _use_pallas(impl):
-        from repro.kernels import ops as kops
+        from repro.kernels import ops as kops  # lazy: avoid import cycle
 
-        return kops.vsconv(x, w_vs)
-    patches = im2col_3x3(x)
-    return vs_matmul(patches, w_vs, impl="jnp")
+        return kops.vsconv(
+            x, w_vs, kh=kh, kw=kw, stride=stride, bias=bias,
+            fuse_relu=fuse_relu,
+        )
+    if kh == 1 and kw == 1:
+        patches = x[:, ::stride, ::stride] if stride != 1 else x
+    else:
+        patches = im2col(x, kh=kh, kw=kw, stride=stride)
+    y = vs_matmul(patches, w_vs, impl="jnp", out_dtype=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if fuse_relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
 
 
-def dense_conv2d_3x3(x: jax.Array, w: jax.Array) -> jax.Array:
-    """Dense oracle: w is (3, 3, Cin, Cout)."""
+def vs_conv2d_3x3(x: jax.Array, w_vs: VectorSparse, *, impl: str = "jnp") -> jax.Array:
+    """3x3/s1/p1 conv with vector-sparse weights (back-compat alias)."""
+    return vs_conv2d(x, w_vs, kh=3, kw=3, stride=1, impl=impl)
+
+
+def dense_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """Dense oracle: w is (kh, kw, Cin, Cout), SAME padding."""
     return jax.lax.conv_general_dilated(
         x,
         w,
-        window_strides=(1, 1),
+        window_strides=(stride, stride),
         padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
 
 
+def dense_conv2d_3x3(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Dense 3x3/s1 oracle (back-compat alias)."""
+    return dense_conv2d(x, w, stride=1)
+
+
 def conv_weight_to_matrix(w: jax.Array) -> jax.Array:
-    """(3,3,Cin,Cout) -> (9*Cin, Cout) in the im2col_3x3 (ky,kx,cin) order."""
+    """(kh,kw,Cin,Cout) -> (kh*kw*Cin, Cout) in the im2col (ky,kx,cin) order."""
     kh, kw, cin, cout = w.shape
     return w.reshape(kh * kw * cin, cout)

@@ -1,8 +1,11 @@
 """Pallas TPU kernels for the paper's compute hot-spot: sparse conv/matmul.
 
 - `vsmm`   -- vector-sparse matmul (scalar-prefetch block-CSR, the paper's
-             index system as BlockSpec.index_map, runtime input-vector skip)
-- `vsconv` -- direct 3x3 vector-sparse convolution (tap-granular weight skip)
+             index system as BlockSpec.index_map, runtime input-vector skip,
+             optional fused bias+ReLU epilogue)
+- `vsconv` -- direct KxK/stride vector-sparse convolution family
+             (tap-granular weight skip; 1x1 routes through vsmm over
+             pixels; fused bias+ReLU epilogue)
 - `flash`  -- flash-attention forward (VMEM-resident online softmax; the
              dominant HBM term of every train/prefill roofline cell)
 - `ref`    -- pure-jnp oracles

@@ -2,7 +2,21 @@
 
 Handle padding to kernel-friendly shapes, backend dispatch (interpret=True on
 CPU so kernels validate everywhere, compiled on real TPU), and layout prep
-(the vsconv row-tap stack).
+(the vsconv row-tap/phase stack).
+
+`vsconv` covers the generalized kernel family:
+
+  vsconv(x, vs, kh=3, kw=3, stride=1, bias=None, fuse_relu=False)
+
+  * arbitrary odd/even kh x kw taps, SAME padding for the given stride
+    (Hout = ceil(H/stride)) — the weight matrix is (kh*kw*Cin, Cout) with K
+    ordered (ky, kx, cin), i.e. `core.sparse_ops.conv_weight_to_matrix`;
+  * stride 1 and 2 (any stride the tap/phase stack supports, in fact);
+  * 1x1 convs route through `vsmm` over flattened pixels (a pointwise conv
+    *is* the sparse matmul; stride subsamples first) — ResNet projections;
+  * ``bias``/``fuse_relu`` run the epilogue inside the kernel, so the
+    post-ReLU zeros feeding the next layer's input-side skip are produced
+    on-chip for free.
 """
 from __future__ import annotations
 
@@ -11,7 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.vector_sparse import VectorSparse
 from .vsmm import vsmm_pallas
-from .vsconv import vsconv_pallas, build_row_tap_stack
+from .vsconv import vsconv_pallas, build_row_tap_stack, same_pads
 
 __all__ = ["vsmm", "vsconv"]
 
@@ -29,10 +43,16 @@ def vsmm(
     vs: VectorSparse,
     *,
     bm: int = 256,
+    bias: jax.Array | None = None,
     skip_zero_inputs: bool = True,
+    fuse_relu: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """x (M, K) @ vector-sparse W (K, N) -> (M, N); pads M to a bm multiple."""
+    """x (M, K) @ vector-sparse W (K, N) -> (M, N); pads M to a bm multiple.
+
+    Optional fused epilogue: ``bias`` (N,) add + ``fuse_relu`` inside the
+    kernel (f32 accumulator, one cast at flush).
+    """
     m, k = x.shape
     interpret = _interpret() if interpret is None else interpret
     bm = min(bm, _round_up(m, 8))
@@ -40,7 +60,8 @@ def vsmm(
     if mp != m:
         x = jnp.pad(x, ((0, mp - m), (0, 0)))
     out = vsmm_pallas(
-        x, vs, bm=bm, skip_zero_inputs=skip_zero_inputs, interpret=interpret
+        x, vs, bm=bm, bias=bias, skip_zero_inputs=skip_zero_inputs,
+        fuse_relu=fuse_relu, interpret=interpret
     )
     return out[:m] if mp != m else out
 
@@ -49,20 +70,42 @@ def vsconv(
     x: jax.Array,
     vs: VectorSparse,
     *,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    bias: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
+    fuse_relu: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """NHWC 3x3/s1/p1 conv with vector-sparse (9*Cin, Cout) weights."""
+    """NHWC kh x kw / stride / SAME conv with vector-sparse
+    (kh*kw*Cin, Cout) weights -> (N, ceil(H/stride), ceil(W/stride), Cout).
+
+    1x1 convs dispatch to the sparse matmul over flattened pixels (stride
+    subsamples first); everything else runs the direct tap-decomposed Pallas
+    kernel.  ``bias`` (Cout,) and ``fuse_relu`` fuse the epilogue in-kernel.
+    """
     n, h, w, c = x.shape
     interpret = _interpret() if interpret is None else interpret
-    bh = min(bh, h)
-    hp = _round_up(h, bh)
-    if hp != h:
-        x = jnp.pad(x, ((0, 0), (0, hp - h), (0, 0), (0, 0)))
-    xt = build_row_tap_stack(x)
+    if kh == 1 and kw == 1:
+        if stride != 1:
+            x = x[:, ::stride, ::stride]
+        _, ho, wo, _ = x.shape
+        out = vsmm(
+            x.reshape(-1, c), vs, bias=bias,
+            skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
+            interpret=interpret,
+        )
+        return out.reshape(n, ho, wo, -1)
+    ho, _, _ = same_pads(h, kh, stride)
+    wo, _, _ = same_pads(w, kw, stride)
+    bh = min(bh, ho)
+    hop = _round_up(ho, bh)
+    xt = build_row_tap_stack(x, kh=kh, kw=kw, stride=stride, h_out=hop)
     out = vsconv_pallas(
-        xt, vs, w_out=w, bh=bh, skip_zero_inputs=skip_zero_inputs,
+        xt, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias, bh=bh,
+        skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
         interpret=interpret,
     )
-    return out[:, :h] if hp != h else out
+    return out[:, :ho] if hop != ho else out

@@ -2,7 +2,7 @@
 
 Every kernel in this package has a reference here computing the *same
 mathematical function* with plain jnp ops (densify + dense compute).  Tests
-sweep shapes/dtypes and assert_allclose kernel-vs-ref.
+sweep shapes/dtypes/geometries and assert_allclose kernel-vs-ref.
 """
 from __future__ import annotations
 
@@ -11,37 +11,78 @@ import jax.numpy as jnp
 
 from repro.core.vector_sparse import VectorSparse, decode
 
-__all__ = ["vsmm_ref", "vsconv_ref", "conv3x3_ref"]
+__all__ = ["vsmm_ref", "vsconv_ref", "conv_ref", "conv3x3_ref"]
 
 
-def vsmm_ref(x: jax.Array, vs: VectorSparse) -> jax.Array:
-    """x (M, K) @ densify(vs) (K, N) -> (M, N), f32 accumulation."""
+def vsmm_ref(
+    x: jax.Array,
+    vs: VectorSparse,
+    *,
+    bias: jax.Array | None = None,
+    fuse_relu: bool = False,
+) -> jax.Array:
+    """x (M, K) @ densify(vs) (K, N) -> (M, N), f32 accumulation.
+
+    ``bias``/``fuse_relu`` mirror the kernel's fused epilogue (applied in
+    f32 before the output cast).
+    """
     w = decode(vs)
-    return jnp.dot(
+    y = jnp.dot(
         x.astype(jnp.float32), w.astype(jnp.float32),
         preferred_element_type=jnp.float32,
-    ).astype(x.dtype)
+    )
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if fuse_relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
 
 
-def conv3x3_ref(x: jax.Array, w: jax.Array) -> jax.Array:
-    """Dense 3x3/s1/p1 conv oracle. x NHWC, w (3,3,Cin,Cout)."""
+def conv_ref(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    """Dense kh x kw / stride / SAME conv oracle. x NHWC, w (kh,kw,Cin,Cout)."""
     return jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w.astype(jnp.float32),
-        window_strides=(1, 1),
+        window_strides=(stride, stride),
         padding="SAME",
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     ).astype(x.dtype)
 
 
-def vsconv_ref(x: jax.Array, w_vs: VectorSparse) -> jax.Array:
-    """3x3 conv against the densified vector-sparse weight.
+def conv3x3_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Dense 3x3/s1/p1 conv oracle (back-compat alias)."""
+    return conv_ref(x, w, stride=1)
 
-    w_vs shape is (9*Cin, Cout) with K ordered (ky, kx, cin) — the layout
-    produced by `core.sparse_ops.conv_weight_to_matrix`.
+
+def vsconv_ref(
+    x: jax.Array,
+    w_vs: VectorSparse,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    bias: jax.Array | None = None,
+    fuse_relu: bool = False,
+) -> jax.Array:
+    """kh x kw / stride / SAME conv against the densified vector-sparse weight.
+
+    w_vs shape is (kh*kw*Cin, Cout) with K ordered (ky, kx, cin) — the layout
+    produced by `core.sparse_ops.conv_weight_to_matrix`.  ``bias`` and
+    ``fuse_relu`` mirror the kernel's fused epilogue.
     """
     n, h, wdt, c = x.shape
     k, cout = w_vs.shape
-    assert k == 9 * c, (k, c)
-    w = decode(w_vs).reshape(3, 3, c, cout)
-    return conv3x3_ref(x, w)
+    assert k == kh * kw * c, (k, kh, kw, c)
+    w = decode(w_vs).reshape(kh, kw, c, cout)
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if fuse_relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)

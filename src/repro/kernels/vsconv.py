@@ -1,24 +1,46 @@
-"""vsconv — direct 3x3 vector-sparse convolution Pallas TPU kernel.
+"""vsconv — direct KxK vector-sparse convolution Pallas TPU kernel.
 
-The paper decomposes a 3x3 conv into kernel *columns* (WA/WB/WC in Fig. 6) and
+The paper decomposes a conv into kernel *columns* (WA/WB/WC in Fig. 6) and
 skips all-zero columns and all-zero input column vectors.  The TPU analogue
-decomposes the conv into kernel *taps* x input-channel tiles:
+decomposes an arbitrary ``kh x kw`` / stride-``s`` conv into kernel *taps*
+x input-channel tiles:
 
-    conv(x, w) = sum_{ky, kx} shift(x, ky, kx) @ w[ky, kx]       (9 matmuls)
-               = sum over K-tiles t=(ky, kx, cin-tile) of
-                 shift(x, ky, kx)[cin-tile] @ w_tile[t]
+    conv(x, w)[i, j] = sum_{ky, kx} x[s*i + ky - pt, s*j + kx - pl] @ w[ky, kx]
+                     = sum over K-tiles t = (ky*kw + kx, cin-tile) of
+                       gather(x, t)[i, j] @ w_tile[t]          (kh*kw*CB matmuls)
 
 A "weight vector" here is one (vk cin, vn cout) tile of one tap — pruned tiles
 are structurally absent from the balanced block-CSR, so their matmuls never
 enter the grid (the paper's weight-side skip).  An all-zero shifted-input row
 block is skipped at runtime with ``@pl.when`` (the input-side skip).
 
-Input layout: the `ops.vsconv` wrapper pre-builds a row-tap stack
-  XT (N, 3, H, bW, C)   with XT[:, ky] = pad(x)[:, ky : ky + H, :, :]
-so the ky shift becomes a unit-block index (selectable from the scalar-
-prefetched tap id), and the kx shift is a dynamic sublane slice inside the
-kernel.  This is the paper's "broadcast the right input column" realized as
-Pallas index_map arithmetic; bW = W+2 rounded up to the sublane multiple.
+Input layout — the generalized row-tap/phase stack built by
+``build_row_tap_stack``:
+
+  XT (N, kh*stride, Hout, bW, C)
+  XT[:, ky*stride + phase, i, j'] = pad(x)[:, stride*i + ky, phase + stride*j']
+
+Rows are pre-strided per tap row ``ky`` (so the ky shift *and* the row stride
+become a unit-block index selectable from the scalar-prefetched tap id), and
+the width axis is pre-split into its ``stride`` phases.  Writing
+``kx = stride*(kx//stride) + (kx % stride)``, output column ``j`` at tap
+``kx`` reads input column ``phase + stride*(j + kx//stride)`` with
+``phase = kx % stride`` — i.e. plane ``ky*stride + phase`` at column
+``j + kx//stride``.  So the whole tap select is BlockSpec index_map
+arithmetic plus one contiguous sublane slice of length ``w_out`` starting at
+``kx // stride`` inside the kernel (the paper's "broadcast the right input
+column" realized as index arithmetic).  For stride 1 this degenerates to the
+classic 3-plane row-tap stack; bW is Wout + (kw-1)//stride rounded up to the
+sublane multiple.
+
+Padding is XLA-"SAME" for the given stride (Hout = ceil(H/stride)); the
+`ops.vsconv` wrapper computes it and pads Hout to a ``bh`` multiple.
+
+Fused epilogue: optional per-cout ``bias`` add and ReLU run inside the
+kernel at flush time (f32 accumulator -> +bias -> max(0) -> cast).  Fusing
+the ReLU means the *next* layer's input zeros — the vectors its input-side
+skip elides — are produced on-chip for free, exactly the paper's post-ReLU
+input-zero-vector story.
 
 Grid: ``(NB, N * HB, S)`` — cout strip j, (image, row-block) m, sparse step s.
 """
@@ -31,25 +53,60 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.sparse_ops import same_pads
 from repro.core.vector_sparse import VectorSparse
 
-__all__ = ["vsconv_pallas", "build_row_tap_stack"]
+__all__ = ["vsconv_pallas", "build_row_tap_stack", "same_pads"]
 
 
-def build_row_tap_stack(x: jax.Array, *, sublane: int = 8) -> jax.Array:
-    """NHWC -> (N, 3, H, bW, C) row-tap stack of the pad-1 input.
+def build_row_tap_stack(
+    x: jax.Array,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    h_out: int | None = None,
+    sublane: int = 8,
+) -> jax.Array:
+    """NHWC -> (N, kh*stride, Hout, bW, C) row-tap/phase stack (SAME padding).
 
-    bW = W + 2 rounded up to ``sublane`` so the kernel's kx slice stays
-    in-bounds and sublane-aligned.
+    ``h_out`` lets the caller round Hout up to a row-block multiple (the
+    extra rows read zero padding).  bW = Wout + (kw-1)//stride rounded up to
+    ``sublane`` so the kernel's kx slice stays in-bounds and sublane-aligned.
     """
     n, h, w, c = x.shape
-    bw = -(-(w + 2) // sublane) * sublane
-    xp = jnp.pad(x, ((0, 0), (1, 1), (1, bw - w - 1), (0, 0)))
-    return jnp.stack([xp[:, ky : ky + h] for ky in range(3)], axis=1)
+    ho, pt, _ = same_pads(h, kh, stride)
+    wo, pl_, _ = same_pads(w, kw, stride)
+    ho = h_out or ho
+    bw = -(-(wo + (kw - 1) // stride) // sublane) * sublane
+    rows_needed = stride * (ho - 1) + kh  # padded-row index ceiling
+    cols_needed = stride * bw  # every phase plane must reach bw columns
+    xp = jnp.pad(
+        x,
+        (
+            (0, 0),
+            (pt, max(rows_needed - h - pt, 0)),
+            (pl_, max(cols_needed - w - pl_, 0)),
+            (0, 0),
+        ),
+    )
+    planes = [
+        xp[:, ky : ky + stride * (ho - 1) + 1 : stride, phase :: stride][
+            :, :, :bw
+        ]
+        for ky in range(kh)
+        for phase in range(stride)
+    ]
+    return jnp.stack(planes, axis=1)
 
 
-def _kernel(idx_ref, xt_ref, w_ref, o_ref, acc_ref, *, cb: int, w_out: int,
-             skip_zero_inputs: bool):
+def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
+            w_out: int, fuse_relu: bool, has_bias: bool,
+            skip_zero_inputs: bool):
+    if has_bias:
+        bias_ref, o_ref, acc_ref = refs
+    else:
+        bias_ref, (o_ref, acc_ref) = None, refs
     j = pl.program_id(0)
     s = pl.program_id(2)
 
@@ -57,13 +114,15 @@ def _kernel(idx_ref, xt_ref, w_ref, o_ref, acc_ref, *, cb: int, w_out: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # decode the K-tile id: t = (ky*3 + kx) * CB + cin_tile
+    # decode the K-tile id: t = (ky*kw + kx) * CB + cin_tile.  ky and the
+    # width phase (kx % stride) are already resolved by the index_map; only
+    # the in-plane column offset kx // stride remains.
     t = idx_ref[j, s]
-    kx = (t // cb) % 3
+    kx = (t // cb) % kw
 
-    xt = xt_ref[0, 0]  # (bh, bW, vk) — ky and cin-tile selected by index_map
-    xs = jax.lax.dynamic_slice_in_dim(xt, kx, w_out, axis=1)  # (bh, W, vk)
-    xs2 = xs.reshape(-1, xs.shape[-1])  # (bh*W, vk)
+    xt = xt_ref[0, 0]  # (bh, bW, vk) — plane and cin-tile selected by index_map
+    xs = jax.lax.dynamic_slice_in_dim(xt, kx // stride, w_out, axis=1)
+    xs2 = xs.reshape(-1, xs.shape[-1])  # (bh*w_out, vk)
 
     def _mac():
         acc_ref[...] += jnp.dot(
@@ -78,53 +137,79 @@ def _kernel(idx_ref, xt_ref, w_ref, o_ref, acc_ref, *, cb: int, w_out: int,
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].reshape(o_ref.shape).astype(o_ref.dtype)
+        acc = acc_ref[...].reshape(o_ref.shape)
+        if has_bias:
+            acc = acc + bias_ref[0].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("w_out", "bh", "skip_zero_inputs", "interpret", "out_dtype"),
+    static_argnames=(
+        "kh", "kw", "stride", "w_out", "bh", "skip_zero_inputs", "fuse_relu",
+        "interpret", "out_dtype",
+    ),
 )
 def vsconv_pallas(
     xt: jax.Array,
     vs: VectorSparse,
     *,
     w_out: int,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    bias: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
+    fuse_relu: bool = False,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """Row-tap stack xt (N, 3, H, bW, C) * sparse (9C, Cout) -> (N, H, W, Cout).
+    """Row-tap stack xt (N, kh*stride, H, bW, C) * sparse (kh*kw*C, Cout)
+    -> (N, H, w_out, Cout).
 
-    H must be a multiple of ``bh``; the `ops.vsconv` wrapper pads.
+    H (the stack's output-row count) must be a multiple of ``bh``; the
+    `ops.vsconv` wrapper pads.  ``bias`` (Cout,) and ``fuse_relu`` run the
+    epilogue inside the kernel at flush time.
     """
-    n, three, h, bw, c = xt.shape
-    assert three == 3
+    n, planes, h, bw, c = xt.shape
+    assert planes == kh * stride, (planes, kh, stride)
     nb, s_steps, vk, vn = vs.vals.shape
-    assert vs.shape[0] == 9 * c and c % vk == 0, (vs.shape, c, vk)
+    assert vs.shape[0] == kh * kw * c and c % vk == 0, (vs.shape, c, vk)
     assert h % bh == 0, (h, bh)
     cb = c // vk  # cin-tiles per tap
     hb = h // bh
     out_dtype = out_dtype or xt.dtype
+    has_bias = bias is not None
+
+    in_specs = [
+        # block: one image, one (ky, phase) plane, one row block, full width,
+        # one cin tile — the plane id is the generalized tap select:
+        #   plane = ky*stride + kx % stride,  tap = idx[j, s] // cb
+        pl.BlockSpec(
+            (1, 1, bh, bw, vk),
+            lambda j, m, s, idx: (
+                m // hb,                                      # image
+                (idx[j, s] // cb // kw) * stride
+                + ((idx[j, s] // cb) % kw) % stride,          # (ky, phase)
+                m % hb,                                       # row block
+                0,
+                idx[j, s] % cb,                               # cin tile
+            ),
+        ),
+        pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
+    ]
+    args = [vs.idx, xt, vs.vals]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, vn), lambda j, m, s, idx: (j, 0)))
+        args.append(bias.reshape(nb, vn))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, n * hb, s_steps),
-        in_specs=[
-            # block: one image, one ky tap, one row block, full width, one cin tile
-            pl.BlockSpec(
-                (1, 1, bh, bw, vk),
-                lambda j, m, s, idx: (
-                    m // hb,                      # image
-                    idx[j, s] // cb // 3,         # ky
-                    m % hb,                       # row block
-                    0,
-                    idx[j, s] % cb,               # cin tile
-                ),
-            ),
-            pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
         ),
@@ -132,7 +217,9 @@ def vsconv_pallas(
     )
     return pl.pallas_call(
         functools.partial(
-            _kernel, cb=cb, w_out=w_out, skip_zero_inputs=skip_zero_inputs
+            _kernel, cb=cb, kw=kw, stride=stride, w_out=w_out,
+            fuse_relu=fuse_relu, has_bias=has_bias,
+            skip_zero_inputs=skip_zero_inputs,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, h, w_out, nb * vn), out_dtype),
@@ -146,4 +233,4 @@ def vsconv_pallas(
             ),
             transcendentals=0,
         ),
-    )(vs.idx, xt, vs.vals)
+    )(*args)

@@ -42,7 +42,12 @@ from repro.core.vector_sparse import VectorSparse
 __all__ = ["vsmm_pallas"]
 
 
-def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, skip_zero_inputs: bool):
+def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_bias: bool,
+            skip_zero_inputs: bool):
+    if has_bias:
+        bias_ref, o_ref, acc_ref = refs
+    else:
+        bias_ref, (o_ref, acc_ref) = None, refs
     s = pl.program_id(2)
 
     @pl.when(s == 0)
@@ -67,19 +72,29 @@ def _kernel(idx_ref, x_ref, w_ref, o_ref, acc_ref, *, skip_zero_inputs: bool):
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        acc = acc_ref[...]
+        # fused epilogue: the ReLU zeros produced here are exactly the input
+        # vectors the *next* layer's input-side skip elides
+        if has_bias:
+            acc = acc + bias_ref[0].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "skip_zero_inputs", "interpret", "out_dtype"),
+    static_argnames=("bm", "skip_zero_inputs", "fuse_relu", "interpret",
+                     "out_dtype"),
 )
 def vsmm_pallas(
     x: jax.Array,
     vs: VectorSparse,
     *,
     bm: int = 256,
+    bias: jax.Array | None = None,
     skip_zero_inputs: bool = True,
+    fuse_relu: bool = False,
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
@@ -87,28 +102,37 @@ def vsmm_pallas(
 
     M must be a multiple of ``bm`` and K of ``vs.vk`` (the `ops.vsmm` wrapper
     pads).  FLOPs scale with vs.density — the zero weight vectors are
-    structurally absent from the grid.
+    structurally absent from the grid.  ``bias`` (N,) and ``fuse_relu`` run
+    the epilogue inside the kernel at flush time (f32 accumulator).
     """
     m, k = x.shape
     nb, s_steps, vk, vn = vs.vals.shape
     assert k == vs.shape[0] and k % vk == 0, (x.shape, vs.shape, vk)
     assert m % bm == 0, (m, bm)
     out_dtype = out_dtype or x.dtype
+    has_bias = bias is not None
+
+    in_specs = [
+        # activation K-tile gather: the paper's index system
+        pl.BlockSpec((bm, vk), lambda j, mi, s, idx: (mi, idx[j, s])),
+        # the s-th stored weight vector of strip j
+        pl.BlockSpec((1, 1, vk, vn), lambda j, mi, s, idx: (j, s, 0, 0)),
+    ]
+    args = [vs.idx, x, vs.vals]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, vn), lambda j, mi, s, idx: (j, 0)))
+        args.append(bias.reshape(nb, vn))
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, m // bm, s_steps),
-        in_specs=[
-            # activation K-tile gather: the paper's index system
-            pl.BlockSpec((bm, vk), lambda j, mi, s, idx: (mi, idx[j, s])),
-            # the s-th stored weight vector of strip j
-            pl.BlockSpec((1, 1, vk, vn), lambda j, mi, s, idx: (j, s, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, vn), lambda j, mi, s, idx: (mi, j)),
         scratch_shapes=[pltpu.VMEM((bm, vn), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, skip_zero_inputs=skip_zero_inputs),
+        functools.partial(_kernel, fuse_relu=fuse_relu, has_bias=has_bias,
+                          skip_zero_inputs=skip_zero_inputs),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nb * vn), out_dtype),
         interpret=interpret,
@@ -121,4 +145,4 @@ def vsmm_pallas(
             ),
             transcendentals=0,
         ),
-    )(vs.idx, x, vs.vals)
+    )(*args)

@@ -1,15 +1,25 @@
 """VGG-16 (the paper's evaluation model) with first-class vector sparsity.
 
-Dense path: jax.lax conv.  Sparse path: every 3x3 conv (except the 3-channel
-stem, whose 27-row K doesn't tile and whose FLOPs are negligible) and every
-FC layer can run through the vector-sparse ops — `impl='jnp'` for the
-structural GSPMD-friendly path, `impl='pallas'` for the TPU kernel.
+Dense path: jax.lax conv.  Sparse path: *every* conv — including the
+3-channel stem, whose input channels are zero-padded to a tileable K — and
+every FC layer can run through the vector-sparse ops: `impl='jnp'` for the
+structural GSPMD-friendly path, `impl='pallas'` for the TPU kernel.  Sparse
+convs use the kernel's fused bias+ReLU epilogue, so the post-ReLU zeros the
+next layer's input-side skip elides are produced in-kernel.
+
+A sparse conv layer is described by a `SparseConv` spec (VectorSparse weights
++ geometry + input-channel padding); `sparse_conv_from_dense` builds one from
+any dense (kh, kw, Cin, Cout) weight.  Besides VGG-16, a small ResNet-style
+stem (7x7/s2 conv -> 1x1 projection -> 3x3/s2 downsample) exercises the
+generalized kernel family end-to-end.
 
 `collect_conv_traffic` exposes per-layer (input activations, weights) so the
 cycle-accurate accelerator model (core.accel_model) can replay the paper's
 Figs 9-13 on real post-ReLU activation sparsity.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -18,9 +28,11 @@ import numpy as np
 from repro.core import (
     VectorSparse,
     encode,
+    from_mask,
     prune_vectors_balanced,
     vs_matmul,
-    vs_conv2d_3x3,
+    vs_conv2d,
+    dense_conv2d,
     dense_conv2d_3x3,
     conv_weight_to_matrix,
 )
@@ -28,7 +40,9 @@ from .layers import P
 
 __all__ = [
     "VGG16_LAYERS", "vgg16_schema", "vgg16_apply", "sparsify_vgg16",
-    "collect_conv_traffic", "conv_names",
+    "SparseConv", "sparse_conv_from_dense", "apply_sparse_conv",
+    "RESNET_STEM_LAYERS", "resnet_stem_schema", "resnet_stem_apply",
+    "sparsify_resnet_stem", "collect_conv_traffic", "conv_names",
 ]
 
 # channels per conv layer; 'M' = 2x2 max-pool
@@ -36,6 +50,81 @@ VGG16_LAYERS = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
                 512, 512, 512, "M", 512, 512, 512, "M"]
 
 FC_DIMS = [(512 * 7 * 7, 4096), (4096, 4096)]
+
+
+@dataclasses.dataclass
+class SparseConv:
+    """One vector-sparse conv layer: weights + geometry.
+
+    ``cin_pad`` zero channels are appended to the input before the conv —
+    how a non-tileable Cin (e.g. the 3-channel stem) becomes a multiple of
+    the K-tile length.  The padded weight rows are zero, so the math is
+    unchanged; the padded input vectors are all-zero and the kernel's
+    input-side skip elides them at runtime.
+    """
+
+    vs: VectorSparse
+    kh: int = 3
+    kw: int = 3
+    stride: int = 1
+    cin_pad: int = 0
+
+
+def sparse_conv_from_dense(
+    w,
+    density: float,
+    *,
+    vk: int = 32,
+    vn: int = 128,
+    stride: int = 1,
+    prune: bool = True,
+    dtype=None,
+):
+    """Dense (kh, kw, Cin, Cout) weight -> (SparseConv, pruned dense weight).
+
+    Handles non-tileable Cin by zero-padding channels to a multiple of a
+    reduced K-tile length (min(vk, 8)); handles non-tileable Cout by
+    shrinking the output strip to the largest divisor of Cout that is <= vn.
+    ``prune=False`` (or density >= 1) keeps every tile — the dense network
+    in the same format, the paper's single-datapath story.
+    """
+    w = np.asarray(w, np.float32)
+    kh, kw, cin, cout = w.shape
+    if cin % vk == 0:
+        vk_l, cp = vk, 0
+    else:
+        vk_l = min(vk, 8)
+        cp = -cin % vk_l
+    wpad = np.pad(w, ((0, 0), (0, 0), (0, cp), (0, 0))) if cp else w
+    wm = wpad.reshape(kh * kw * (cin + cp), cout)
+    vn_l = min(vn, cout)
+    while cout % vn_l:
+        vn_l -= 1
+    if prune and density < 1.0:
+        wp, mask = prune_vectors_balanced(wm, density, vk_l, vn_l)
+    else:
+        wp = wm
+        mask = np.ones((wm.shape[0] // vk_l, cout // vn_l), bool)
+    dtype = dtype or jnp.float32
+    vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
+    spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, cin_pad=cp)
+    wp_dense = wp.reshape(kh, kw, cin + cp, cout)[:, :, :cin]
+    return spec, wp_dense
+
+
+def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True,
+                      impl: str = "jnp"):
+    """Run one conv through the vector-sparse path.
+
+    ``entry`` is a `SparseConv` or a bare `VectorSparse` (legacy 3x3/s1).
+    """
+    spec = entry if isinstance(entry, SparseConv) else SparseConv(entry)
+    if spec.cin_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, spec.cin_pad)))
+    return vs_conv2d(
+        x, spec.vs, kh=spec.kh, kw=spec.kw, stride=spec.stride, bias=bias,
+        fuse_relu=fuse_relu, impl=impl,
+    )
 
 
 def conv_names():
@@ -77,9 +166,9 @@ def vgg16_apply(params, x, *, sparse: dict | None = None, impl: str = "jnp",
                 collect=None):
     """x (N, H, W, 3) -> logits (N, classes).
 
-    sparse: {layer_name: VectorSparse} — layers present run the paper's
-    vector-sparse path (weight-side structural skip + input-side skip);
-    absent layers run dense.
+    sparse: {layer_name: SparseConv | VectorSparse} — layers present run the
+    paper's vector-sparse path (weight-side structural skip + input-side skip,
+    bias+ReLU fused into the kernel epilogue); absent layers run dense.
     """
     sparse = sparse or {}
     names = iter(conv_names())
@@ -92,10 +181,10 @@ def vgg16_apply(params, x, *, sparse: dict | None = None, impl: str = "jnp",
         if collect is not None:
             collect.append((name, x, p["w"]))
         if name in sparse:
-            y = vs_conv2d_3x3(x, sparse[name], impl=impl)
+            x = apply_sparse_conv(x, sparse[name], bias=p["b"], impl=impl)
         else:
             y = dense_conv2d_3x3(x, p["w"].astype(x.dtype))
-        x = jax.nn.relu(y + p["b"].astype(y.dtype))
+            x = jax.nn.relu(y + p["b"].astype(y.dtype))
     n = x.shape[0]
     x = x.reshape(n, -1)
     for j in (1, 2, 3):
@@ -117,21 +206,20 @@ def sparsify_vgg16(params, density: float, *, vk: int = 32, vn: int = 128,
     """Vector-prune VGG-16 to `density` (fraction of nonzero weight vectors).
 
     Returns (sparse dict for vgg16_apply, pruned dense params for oracles).
-    The 3-channel stem conv stays dense (27-row K; negligible FLOPs), as in
-    standard pruning practice.
+    Every conv runs the sparse datapath: the 3-channel stem keeps its weights
+    (27-row K, negligible FLOPs — standard pruning practice) but is encoded
+    at density 1 with its input channels zero-padded to a tileable K, so even
+    conv1 exercises the kernel's index system and input-side skip.
     """
     sparse, pruned = {}, jax.tree.map(lambda a: a, params)
     for name, cin, cout in conv_names():
-        if cin < vk:  # conv1: K = 9*3 = 27, not tileable
-            continue
-        w = np.asarray(params[name]["w"], np.float32)
-        wm = w.reshape(9 * cin, cout)
-        vn_l = min(vn, cout)
-        wp, _ = prune_vectors_balanced(wm, density, vk, vn_l)
-        sparse[name] = encode(jnp.asarray(wp, params[name]["w"].dtype), vk, vn_l)
-        pruned[name]["w"] = jnp.asarray(
-            wp.reshape(3, 3, cin, cout), params[name]["w"].dtype
+        w = params[name]["w"]
+        spec, wp = sparse_conv_from_dense(
+            w, density, vk=vk, vn=vn, stride=1, prune=cin >= vk,
+            dtype=w.dtype,
         )
+        sparse[name] = spec
+        pruned[name]["w"] = jnp.asarray(wp, w.dtype)
     if include_fc:
         for j in (1, 2, 3):
             w = np.asarray(params[f"fc{j}"]["w"], np.float32)
@@ -144,6 +232,57 @@ def sparsify_vgg16(params, density: float, *, vk: int = 32, vn: int = 128,
                 jnp.asarray(wp, params[f"fc{j}"]["w"].dtype), vk, vn_l
             )
             pruned[f"fc{j}"]["w"] = jnp.asarray(wp, params[f"fc{j}"]["w"].dtype)
+    return sparse, pruned
+
+
+# -- ResNet-style stem: the geometries VGG doesn't exercise ------------------
+
+# (name, kh, kw, stride, cin, cout): 7x7/s2 stem, 1x1 projection, 3x3/s2
+# downsample — the conv vocabulary of every ResNet-family network.
+RESNET_STEM_LAYERS = (
+    ("stem7x7", 7, 7, 2, 3, 64),
+    ("proj1x1", 1, 1, 1, 64, 128),
+    ("down3x3", 3, 3, 2, 128, 128),
+)
+
+
+def resnet_stem_schema() -> dict:
+    s = {}
+    for name, kh, kw, _, cin, cout in RESNET_STEM_LAYERS:
+        s[name] = {
+            "w": P((kh, kw, cin, cout), (None, None, None, "ff"),
+                   fan_in=kh * kw * cin),
+            "b": P((cout,), ("ff",), init="zeros"),
+        }
+    return s
+
+
+def resnet_stem_apply(params, x, *, sparse: dict | None = None,
+                      impl: str = "jnp"):
+    """x (N, H, W, 3) -> (N, H/4, W/4, 128) feature map, ReLU after each conv."""
+    sparse = sparse or {}
+    for name, kh, kw, stride, cin, cout in RESNET_STEM_LAYERS:
+        p = params[name]
+        if name in sparse:
+            x = apply_sparse_conv(x, sparse[name], bias=p["b"], impl=impl)
+        else:
+            y = dense_conv2d(x, p["w"].astype(x.dtype), stride=stride)
+            x = jax.nn.relu(y + p["b"].astype(y.dtype))
+    return x
+
+
+def sparsify_resnet_stem(params, density: float, *, vk: int = 32,
+                         vn: int = 128):
+    """Vector-prune the ResNet-style stem; same contract as `sparsify_vgg16`."""
+    sparse, pruned = {}, jax.tree.map(lambda a: a, params)
+    for name, kh, kw, stride, cin, cout in RESNET_STEM_LAYERS:
+        w = params[name]["w"]
+        spec, wp = sparse_conv_from_dense(
+            w, density, vk=vk, vn=vn, stride=stride, prune=cin >= vk,
+            dtype=w.dtype,
+        )
+        sparse[name] = spec
+        pruned[name]["w"] = jnp.asarray(wp, w.dtype)
     return sparse, pruned
 
 

@@ -1,6 +1,6 @@
 """Vector pruning (Mao-style) invariants."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     element_density, prune_conv_columns, prune_vectors, prune_vectors_balanced,

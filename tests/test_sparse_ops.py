@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     conv_weight_to_matrix, dense_conv2d_3x3, encode, im2col_3x3,

@@ -2,7 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     VectorSparse, decode, encode, from_mask, prune_vectors_balanced, tile_mask,
@@ -84,3 +84,65 @@ class TestEncodeDecode:
         vs = encode(jnp.asarray(w), 16, 8)
         assert vs.density == 1.0
         assert np.allclose(np.asarray(decode(vs)), w)
+
+
+class TestEdgeCases:
+    """Deterministic edge cases that must hold even without hypothesis."""
+
+    @pytest.mark.parametrize("density", [0.125, 0.25, 0.5, 0.75, 1.0])
+    def test_roundtrip_density_sweep(self, density):
+        # encode -> decode is the identity on the pruned matrix for every
+        # density 0 < d <= 1
+        rng = np.random.default_rng(11)
+        w = rng.standard_normal((128, 64)).astype(np.float32)
+        wp, mask = prune_vectors_balanced(w, density, 16, 16)
+        vs = encode(jnp.asarray(wp), 16, 16)
+        assert np.allclose(np.asarray(decode(vs)), wp)
+        assert vs.nnz_per_strip == int(mask.sum(axis=0)[0])
+
+    def test_from_mask_unbalanced_counts_raise(self):
+        w = jnp.asarray(np.arange(64, dtype=np.float32).reshape(8, 8))
+        mask = np.zeros((4, 4), bool)
+        mask[0, 0] = mask[1, 0] = True  # strip 0 keeps 2 tiles
+        mask[2, 1] = True               # strip 1 keeps 1 tile
+        mask[:, 2] = True               # strip 2 keeps 4
+        mask[0, 3] = True               # strip 3 keeps 1
+        with pytest.raises(ValueError, match="unbalanced"):
+            from_mask(w, mask, 2, 2)
+
+    def test_from_mask_wrong_mask_shape_rejected(self):
+        w = jnp.ones((8, 8))
+        with pytest.raises(AssertionError):
+            from_mask(w, np.ones((2, 2), bool), 2, 2)  # should be (4, 4)
+
+    @pytest.mark.parametrize("src,dst", [
+        (jnp.float32, jnp.bfloat16),
+        (jnp.bfloat16, jnp.float32),
+        (jnp.float32, jnp.float16),
+    ])
+    def test_astype_preserves_structure(self, src, dst):
+        rng = np.random.default_rng(12)
+        wp, _ = _balanced_w(rng, 4, 2, 8, 8, 2)
+        vs = encode(jnp.asarray(wp, src), 8, 8)
+        vs2 = vs.astype(dst)
+        assert vs2.dtype == dst
+        assert vs2.vals.dtype == dst
+        # structure (index system, shape, density) untouched by the cast
+        assert vs2.shape == vs.shape
+        assert vs2.idx is vs.idx
+        assert vs2.density == vs.density
+        assert np.allclose(
+            np.asarray(decode(vs2), np.float32),
+            np.asarray(decode(vs), np.float32),
+            atol=1e-2,
+        )
+
+    def test_full_density_roundtrip_is_exact_per_dtype(self):
+        rng = np.random.default_rng(13)
+        w = rng.standard_normal((32, 16)).astype(np.float32)
+        for dt in (jnp.float32, jnp.bfloat16):
+            vs = encode(jnp.asarray(w, dt), 8, 8)
+            assert vs.dtype == dt
+            assert np.array_equal(
+                np.asarray(decode(vs)), np.asarray(jnp.asarray(w, dt))
+            )
