@@ -12,9 +12,15 @@
    rows for the vsconv kernel family (1x1 / 3x3 / 5x5 / 7x7, stride 1-2),
    reporting the structural FLOP ratio and jnp-path wall clock alongside the
    existing 3x3 numbers.
+5. ResNet-18 per-layer speedup-vs-density (``--resnet18``): the graph
+   executor + cycle model walked over every conv (residual blocks, BN
+   folded), emitting a ``BENCH_resnet18.json`` artifact so CI tracks the
+   perf trajectory.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
@@ -118,7 +124,7 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
                 np.maximum(rng.standard_normal((4, h, w, cin)), 0),
                 jnp.float32)
             # structural work: sparse grid steps vs dense K-tiles
-            flop_ratio = vs.nnz_per_strip / vs.kb
+            flop_ratio = vs.density
             # jnp structural path wall clock (CPU; demonstrates work∝density)
             fn = jax.jit(lambda xx: vs_conv2d(
                 xx, vs, kh=kh, kw=kw, stride=stride, impl="jnp"))
@@ -150,6 +156,99 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
     return rows
 
 
+def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
+                 num_classes: int = 200, batch: int = 1,
+                 out_path: str | None = None) -> list[dict]:
+    """ResNet-18 per-layer speedup-vs-density through the graph executor.
+
+    For each density: sparsify the whole network (BN folded, residuals
+    fused), time the jnp structural forward (whole-net wall clock; CPU
+    demonstrates work ∝ density, not the TPU claim), and walk the same
+    graph through the accelerator cycle model for per-layer VSCNN-vs-dense
+    cycle speedups.  ``out_path`` writes the rows as a JSON artifact.
+    """
+    from repro.core.accel_model import PE_4_14_3, aggregate, \
+        network_cycle_reports
+    from repro.models.graph import build_resnet18, collect_conv_traffic, \
+        net_apply, sparsify
+    from repro.models.layers import init_params
+
+    net = build_resnet18(num_classes, image_size=image_size)
+    params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((batch, image_size, image_size, 3)),
+                    jnp.float32)
+    pe = PE_4_14_3
+    rows = []
+    base_us = None
+    for density in densities:
+        sparse, pruned = sparsify(net, params, density)
+        fn = jax.jit(lambda xx: net_apply(net, params, xx, sparse=sparse,
+                                          impl="jnp"))
+        fn(x).block_until_ready()
+        t0 = time.time()
+        for _ in range(3):
+            out = fn(x)
+        out.block_until_ready()
+        us = (time.time() - t0) / 3 * 1e6
+        if base_us is None:
+            base_us = us  # density 1.0 reference
+        # cycle model on the pruned weights + real forward-pass activations
+        traffic = collect_conv_traffic(net, pruned, x[:1])
+        reports = network_cycle_reports(traffic, pe)
+        for name, rep in reports:
+            layer = next(l for l in net.conv_layers() if l.name == name)
+            rows.append({
+                "name": f"resnet18_{name}_density_{density}",
+                "layer": name,
+                "geometry": f"{layer.kh}x{layer.kw}_s{layer.stride}",
+                "density": density,
+                "cycle_speedup": round(rep.speedup, 3),
+                "vscnn_cycles": rep.vscnn,
+                "dense_cycles": rep.dense,
+                "structural_flops_vs_dense": round(
+                    sparse[name].vs.density, 4),
+            })
+        agg = aggregate([r for _, r in reports])
+        rows.append({
+            "name": f"resnet18_net_density_{density}",
+            "layer": "__net__",
+            "density": density,
+            "cycle_speedup": round(agg.speedup, 3),
+            "vscnn_cycles": agg.vscnn,
+            "dense_cycles": agg.dense,
+            "us_per_call": round(us, 1),
+            "wallclock_speedup_vs_dense": round(base_us / us, 3),
+        })
+    if out_path:
+        artifact = {
+            "bench": "resnet18_per_layer",
+            "image_size": image_size,
+            "num_classes": num_classes,
+            "pe": [pe.blocks, pe.rows, pe.cols],
+            "densities": list(densities),
+            "rows": rows,
+        }
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=1)
+    return rows
+
+
 if __name__ == "__main__":
-    for r in run():
-        print(r)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--resnet18", action="store_true",
+                    help="run the ResNet-18 per-layer table instead of the "
+                         "kernel micro-benches")
+    ap.add_argument("--size", type=int, default=32)
+    ap.add_argument("--classes", type=int, default=200)
+    ap.add_argument("--out", default=None,
+                    help="write rows as a JSON artifact "
+                         "(e.g. BENCH_resnet18.json)")
+    args = ap.parse_args()
+    if args.resnet18:
+        for r in run_resnet18(image_size=args.size, num_classes=args.classes,
+                              out_path=args.out):
+            print(r)
+    else:
+        for r in run():
+            print(r)

@@ -12,10 +12,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.vscnn_vgg16 import CONFIG
-from repro.core.accel_model import PE_4_14_3, PE_8_7_3, aggregate, conv_layer_cycles
+from repro.core.accel_model import PE_4_14_3, PE_8_7_3, aggregate
 from repro.data import SyntheticImages
 from repro.models.cnn import sparsify_vgg16, vgg16_apply, vgg16_schema
 from repro.models.layers import init_params
@@ -54,13 +53,14 @@ def main():
     print(f"sparse ({args.impl}) vs pruned-dense: rel err {rel:.2e}  "
           f"({dt*1e3:.0f} ms for batch {args.batch})")
 
-    # accelerator cycle accounting for the same traffic
-    from repro.models.cnn import collect_conv_traffic
-    rec = collect_conv_traffic(pruned, imgs[:1])
+    # accelerator cycle accounting for the same traffic — the per-layer
+    # graph walk shared with ResNet-18 (see resnet18_sparse_inference.py)
+    from repro.core.accel_model import network_cycle_reports
+    from repro.models.graph import build_vgg16, collect_conv_traffic
+    traffic = collect_conv_traffic(build_vgg16(), pruned, imgs[:1])
     for pe in (PE_4_14_3, PE_8_7_3):
-        reps = [conv_layer_cycles(np.asarray(x)[0], np.asarray(w), pe)
-                for _, x, w in rec]
-        agg = aggregate(reps)
+        reports = network_cycle_reports(traffic, pe)
+        agg = aggregate([r for _, r in reports])
         print(f"PE [{pe.blocks},{pe.rows},{pe.cols}]: "
               f"{agg.speedup:.2f}x speedup over dense "
               f"({agg.vscnn:,} vs {agg.dense:,} cycles; paper: 1.87-1.93x)")

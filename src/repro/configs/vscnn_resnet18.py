@@ -1,0 +1,33 @@
+"""ResNet-18 on the vector-sparse datapath — the credibility bar shared
+with SCNN (Parashar et al.) and the structured-sparse FPGA accelerator
+(Zhu et al.), both of which evaluate on ResNets.
+
+Same pruning recipe and PE configurations as the paper's VGG-16 setup;
+BN is folded into the conv weights/bias at sparsify time and residual
+adds ride the kernels' fused epilogue, so every conv and FC layer runs
+the single sparse datapath end-to-end (`models.graph.build_resnet18`).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.accel_model import PEConfig, PE_4_14_3, PE_8_7_3
+
+
+@dataclasses.dataclass(frozen=True)
+class VSCNNResNet18Config:
+    name: str = "vscnn-resnet18"
+    image_size: int = 224
+    num_classes: int = 1000
+    weight_density: float = 0.235   # the paper's vector-pruning operating point
+    vk: int = 32                    # TPU kernel vector length (K-tile)
+    vn: int = 128                   # output strip width
+    pe_configs: tuple[PEConfig, ...] = (PE_4_14_3, PE_8_7_3)
+
+    def reduce(self) -> "VSCNNResNet18Config":
+        # num_classes=200 keeps a non-tileable head (200 % 128 != 0): the
+        # FC remainder strip stays exercised even in the reduced config.
+        return dataclasses.replace(self, image_size=32, num_classes=200)
+
+
+CONFIG = VSCNNResNet18Config()

@@ -31,5 +31,6 @@ from .accel_model import (
     CycleReport,
     conv_layer_cycles,
     aggregate,
+    network_cycle_reports,
     table1_example,
 )

@@ -35,7 +35,8 @@ import math
 
 import numpy as np
 
-__all__ = ["PEConfig", "CycleReport", "conv_layer_cycles", "aggregate"]
+__all__ = ["PEConfig", "CycleReport", "conv_layer_cycles", "aggregate",
+           "network_cycle_reports"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -197,6 +198,26 @@ def conv_layer_cycles(
         macs_nonzero=macs_nonzero,
         macs_dense=macs_dense,
     )
+
+
+def network_cycle_reports(traffic, pe: PEConfig) -> list[tuple[str, CycleReport]]:
+    """Per-layer cycle reports for one network's conv traffic.
+
+    ``traffic`` is the record produced by `models.graph.collect_conv_traffic`
+    — (name, conv input, weight, stride) per conv layer, in execution order;
+    the input may be (N, H, W, Cin) (the leading image is used, matching the
+    paper's single-image accounting) or already (H, W, Cin).  VGG-16 and
+    ResNet-18 share this one analysis path: the same graph walk that runs
+    the forward feeds the cycle model, residual branches included.
+    """
+    reports = []
+    for name, x, w, stride in traffic:
+        x = np.asarray(x)
+        if x.ndim == 4:
+            x = x[0]
+        reports.append((name, conv_layer_cycles(x, np.asarray(w), pe,
+                                                stride=stride)))
+    return reports
 
 
 def aggregate(reports: list[CycleReport]) -> CycleReport:

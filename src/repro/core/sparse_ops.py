@@ -45,6 +45,9 @@ def vs_matmul(
     x: jax.Array,
     vs: VectorSparse,
     *,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    fuse_relu: bool = False,
     impl: str = "jnp",
     out_dtype=None,
     skip_zero_inputs: bool = True,
@@ -55,7 +58,10 @@ def vs_matmul(
     the paper's weight-side zero skipping).  ``skip_zero_inputs`` additionally
     skips dynamically-zero activation vectors in the Pallas path (the paper's
     input-side skipping; the jnp path cannot skip dynamically under XLA's
-    static schedules, matching a dense-issue accelerator).
+    static schedules, matching a dense-issue accelerator).  ``bias`` (N,),
+    ``residual`` (..., N) and ``fuse_relu`` run the epilogue fused in the
+    Pallas kernel and in f32 before the output cast in the jnp path
+    (residual added before the ReLU — the ResNet shortcut).
     """
     out_dtype = out_dtype or x.dtype
     *batch, k = x.shape
@@ -64,7 +70,11 @@ def vs_matmul(
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
         x2 = x.reshape(-1, k)
-        out = kops.vsmm(x2, vs, skip_zero_inputs=skip_zero_inputs)
+        res2 = (residual.reshape(-1, vs.shape[1])
+                if residual is not None else None)
+        out = kops.vsmm(x2, vs, bias=bias, residual=res2,
+                        fuse_relu=fuse_relu,
+                        skip_zero_inputs=skip_zero_inputs)
         return out.reshape(*batch, vs.shape[1]).astype(out_dtype)
 
     nb, s, vk, vn = vs.vals.shape
@@ -81,7 +91,14 @@ def vs_matmul(
 
     acc0 = jnp.zeros((x2.shape[0], nb, vn), jnp.float32)
     acc, _ = jax.lax.scan(step, acc0, (vs.idx.T, vs.vals.transpose(1, 0, 2, 3)))
-    return acc.reshape(*batch, nb * vn).astype(out_dtype)
+    y = acc.reshape(*batch, nb * vn)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
+    if fuse_relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(out_dtype)
 
 
 def im2col(
@@ -119,6 +136,7 @@ def vs_conv2d(
     kw: int = 3,
     stride: int = 1,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     fuse_relu: bool = False,
     impl: str = "jnp",
 ) -> jax.Array:
@@ -127,16 +145,17 @@ def vs_conv2d(
     Weight matrix layout: (kh*kw*Cin, Cout) with K ordered (ky, kx, cin) — a
     zero K-tile is a pruned run of input channels for one kernel position,
     the TPU analogue of the paper's pruned kernel columns.  1x1 convs are the
-    sparse matmul over pixels (stride subsamples first).  ``bias`` and
-    ``fuse_relu`` run the epilogue fused in the Pallas path and in f32 before
-    the output cast in the jnp path — bit-identical math either way.
+    sparse matmul over pixels (stride subsamples first).  ``bias``,
+    ``residual`` (the output-shaped ResNet shortcut, added before the ReLU)
+    and ``fuse_relu`` run the epilogue fused in the Pallas path and in f32
+    before the output cast in the jnp path — bit-identical math either way.
     """
     if _use_pallas(impl):
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
         return kops.vsconv(
             x, w_vs, kh=kh, kw=kw, stride=stride, bias=bias,
-            fuse_relu=fuse_relu,
+            residual=residual, fuse_relu=fuse_relu,
         )
     if kh == 1 and kw == 1:
         patches = x[:, ::stride, ::stride] if stride != 1 else x
@@ -145,6 +164,8 @@ def vs_conv2d(
     y = vs_matmul(patches, w_vs, impl="jnp", out_dtype=jnp.float32)
     if bias is not None:
         y = y + bias.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
     if fuse_relu:
         y = jnp.maximum(y, 0.0)
     return y.astype(x.dtype)

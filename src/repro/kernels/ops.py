@@ -44,13 +44,15 @@ def vsmm(
     *,
     bm: int = 256,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """x (M, K) @ vector-sparse W (K, N) -> (M, N); pads M to a bm multiple.
 
-    Optional fused epilogue: ``bias`` (N,) add + ``fuse_relu`` inside the
+    Optional fused epilogue: ``bias`` (N,) add + ``residual`` (M, N) add
+    (before the ReLU — the ResNet shortcut) + ``fuse_relu`` inside the
     kernel (f32 accumulator, one cast at flush).
     """
     m, k = x.shape
@@ -59,8 +61,11 @@ def vsmm(
     mp = _round_up(m, bm)
     if mp != m:
         x = jnp.pad(x, ((0, mp - m), (0, 0)))
+        if residual is not None:
+            residual = jnp.pad(residual, ((0, mp - m), (0, 0)))
     out = vsmm_pallas(
-        x, vs, bm=bm, bias=bias, skip_zero_inputs=skip_zero_inputs,
+        x, vs, bm=bm, bias=bias, residual=residual,
+        skip_zero_inputs=skip_zero_inputs,
         fuse_relu=fuse_relu, interpret=interpret
     )
     return out[:m] if mp != m else out
@@ -74,6 +79,7 @@ def vsconv(
     kw: int = 3,
     stride: int = 1,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
@@ -84,7 +90,9 @@ def vsconv(
 
     1x1 convs dispatch to the sparse matmul over flattened pixels (stride
     subsamples first); everything else runs the direct tap-decomposed Pallas
-    kernel.  ``bias`` (Cout,) and ``fuse_relu`` fuse the epilogue in-kernel.
+    kernel.  ``bias`` (Cout,), ``residual`` (the output-shaped ResNet
+    shortcut, added before the ReLU) and ``fuse_relu`` fuse the epilogue
+    in-kernel.
     """
     n, h, w, c = x.shape
     interpret = _interpret() if interpret is None else interpret
@@ -92,8 +100,10 @@ def vsconv(
         if stride != 1:
             x = x[:, ::stride, ::stride]
         _, ho, wo, _ = x.shape
+        res2 = (residual.reshape(n * ho * wo, -1)
+                if residual is not None else None)
         out = vsmm(
-            x.reshape(-1, c), vs, bias=bias,
+            x.reshape(-1, c), vs, bias=bias, residual=res2,
             skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
             interpret=interpret,
         )
@@ -103,8 +113,11 @@ def vsconv(
     bh = min(bh, ho)
     hop = _round_up(ho, bh)
     xt = build_row_tap_stack(x, kh=kh, kw=kw, stride=stride, h_out=hop)
+    if residual is not None and hop != ho:
+        residual = jnp.pad(residual, ((0, 0), (0, hop - ho), (0, 0), (0, 0)))
     out = vsconv_pallas(
-        xt, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias, bh=bh,
+        xt, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias,
+        residual=residual, bh=bh,
         skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
         interpret=interpret,
     )

@@ -19,12 +19,13 @@ def vsmm_ref(
     vs: VectorSparse,
     *,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     fuse_relu: bool = False,
 ) -> jax.Array:
     """x (M, K) @ densify(vs) (K, N) -> (M, N), f32 accumulation.
 
-    ``bias``/``fuse_relu`` mirror the kernel's fused epilogue (applied in
-    f32 before the output cast).
+    ``bias``/``residual``/``fuse_relu`` mirror the kernel's fused epilogue
+    (applied in f32, residual before ReLU, before the output cast).
     """
     w = decode(vs)
     y = jnp.dot(
@@ -33,6 +34,8 @@ def vsmm_ref(
     )
     if bias is not None:
         y = y + bias.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
     if fuse_relu:
         y = jnp.maximum(y, 0.0)
     return y.astype(x.dtype)
@@ -62,12 +65,14 @@ def vsconv_ref(
     kw: int = 3,
     stride: int = 1,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     fuse_relu: bool = False,
 ) -> jax.Array:
     """kh x kw / stride / SAME conv against the densified vector-sparse weight.
 
     w_vs shape is (kh*kw*Cin, Cout) with K ordered (ky, kx, cin) — the layout
-    produced by `core.sparse_ops.conv_weight_to_matrix`.  ``bias`` and
+    produced by `core.sparse_ops.conv_weight_to_matrix`.  ``bias``,
+    ``residual`` (output-shaped shortcut added before the ReLU) and
     ``fuse_relu`` mirror the kernel's fused epilogue.
     """
     n, h, wdt, c = x.shape
@@ -83,6 +88,8 @@ def vsconv_ref(
     )
     if bias is not None:
         y = y + bias.astype(jnp.float32)
+    if residual is not None:
+        y = y + residual.astype(jnp.float32)
     if fuse_relu:
         y = jnp.maximum(y, 0.0)
     return y.astype(x.dtype)

@@ -36,11 +36,13 @@ sublane multiple.
 Padding is XLA-"SAME" for the given stride (Hout = ceil(H/stride)); the
 `ops.vsconv` wrapper computes it and pads Hout to a ``bh`` multiple.
 
-Fused epilogue: optional per-cout ``bias`` add and ReLU run inside the
-kernel at flush time (f32 accumulator -> +bias -> max(0) -> cast).  Fusing
-the ReLU means the *next* layer's input zeros — the vectors its input-side
-skip elides — are produced on-chip for free, exactly the paper's post-ReLU
-input-zero-vector story.
+Fused epilogue: optional per-cout ``bias`` add, optional ``residual``
+(ResNet shortcut) add, and ReLU run inside the kernel at flush time
+(f32 accumulator -> +bias -> +residual -> max(0) -> cast).  Fusing the ReLU
+means the *next* layer's input zeros — the vectors its input-side skip
+elides — are produced on-chip for free, exactly the paper's post-ReLU
+input-zero-vector story; fusing the residual means a whole ResNet basic
+block retires with a single extra VMEM read, no extra HBM round-trip.
 
 Grid: ``(NB, N * HB, S)`` — cout strip j, (image, row-block) m, sparse step s.
 """
@@ -101,12 +103,13 @@ def build_row_tap_stack(
 
 
 def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
-            w_out: int, fuse_relu: bool, has_bias: bool,
+            w_out: int, fuse_relu: bool, has_bias: bool, has_residual: bool,
             skip_zero_inputs: bool):
-    if has_bias:
-        bias_ref, o_ref, acc_ref = refs
-    else:
-        bias_ref, (o_ref, acc_ref) = None, refs
+    it = iter(refs)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
     j = pl.program_id(0)
     s = pl.program_id(2)
 
@@ -140,6 +143,10 @@ def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
         acc = acc_ref[...].reshape(o_ref.shape)
         if has_bias:
             acc = acc + bias_ref[0].astype(jnp.float32)
+        if has_residual:
+            # ResNet shortcut fused at flush: add before the ReLU so the
+            # whole basic block retires with one on-chip epilogue
+            acc = acc + res_ref[...].astype(jnp.float32)
         if fuse_relu:
             acc = jnp.maximum(acc, 0.0)
         o_ref[...] = acc.astype(o_ref.dtype)
@@ -161,6 +168,7 @@ def vsconv_pallas(
     kw: int = 3,
     stride: int = 1,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
@@ -171,8 +179,9 @@ def vsconv_pallas(
     -> (N, H, w_out, Cout).
 
     H (the stack's output-row count) must be a multiple of ``bh``; the
-    `ops.vsconv` wrapper pads.  ``bias`` (Cout,) and ``fuse_relu`` run the
-    epilogue inside the kernel at flush time.
+    `ops.vsconv` wrapper pads.  ``bias`` (Cout,), ``residual``
+    (N, H, w_out, Cout) — the ResNet shortcut, added before the ReLU — and
+    ``fuse_relu`` run the epilogue inside the kernel at flush time.
     """
     n, planes, h, bw, c = xt.shape
     assert planes == kh * stride, (planes, kh, stride)
@@ -183,6 +192,7 @@ def vsconv_pallas(
     hb = h // bh
     out_dtype = out_dtype or xt.dtype
     has_bias = bias is not None
+    has_residual = residual is not None
 
     in_specs = [
         # block: one image, one (ky, phase) plane, one row block, full width,
@@ -205,6 +215,13 @@ def vsconv_pallas(
     if has_bias:
         in_specs.append(pl.BlockSpec((1, vn), lambda j, m, s, idx: (j, 0)))
         args.append(bias.reshape(nb, vn))
+    if has_residual:
+        assert residual.shape == (n, h, w_out, nb * vn), (
+            residual.shape, (n, h, w_out, nb * vn))
+        in_specs.append(pl.BlockSpec(
+            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ))
+        args.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -219,6 +236,7 @@ def vsconv_pallas(
         functools.partial(
             _kernel, cb=cb, kw=kw, stride=stride, w_out=w_out,
             fuse_relu=fuse_relu, has_bias=has_bias,
+            has_residual=has_residual,
             skip_zero_inputs=skip_zero_inputs,
         ),
         grid_spec=grid_spec,
@@ -230,6 +248,8 @@ def vsconv_pallas(
                 n * hb * nb * s_steps * bh * bw * vk * xt.dtype.itemsize
                 + vs.vals.size * vs.vals.dtype.itemsize
                 + n * h * w_out * nb * vn * jnp.dtype(out_dtype).itemsize
+                + (residual.size * residual.dtype.itemsize
+                   if has_residual else 0)
             ),
             transcendentals=0,
         ),

@@ -43,11 +43,12 @@ __all__ = ["vsmm_pallas"]
 
 
 def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_bias: bool,
-            skip_zero_inputs: bool):
-    if has_bias:
-        bias_ref, o_ref, acc_ref = refs
-    else:
-        bias_ref, (o_ref, acc_ref) = None, refs
+            has_residual: bool, skip_zero_inputs: bool):
+    it = iter(refs)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
     s = pl.program_id(2)
 
     @pl.when(s == 0)
@@ -74,9 +75,13 @@ def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_bias: bool,
     def _flush():
         acc = acc_ref[...]
         # fused epilogue: the ReLU zeros produced here are exactly the input
-        # vectors the *next* layer's input-side skip elides
+        # vectors the *next* layer's input-side skip elides.  The residual
+        # (ResNet shortcut) is added before the ReLU, so a whole basic block
+        # retires in-kernel with one HBM write.
         if has_bias:
             acc = acc + bias_ref[0].astype(jnp.float32)
+        if has_residual:
+            acc = acc + res_ref[...].astype(jnp.float32)
         if fuse_relu:
             acc = jnp.maximum(acc, 0.0)
         o_ref[...] = acc.astype(o_ref.dtype)
@@ -93,6 +98,7 @@ def vsmm_pallas(
     *,
     bm: int = 256,
     bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
     interpret: bool = False,
@@ -102,8 +108,9 @@ def vsmm_pallas(
 
     M must be a multiple of ``bm`` and K of ``vs.vk`` (the `ops.vsmm` wrapper
     pads).  FLOPs scale with vs.density — the zero weight vectors are
-    structurally absent from the grid.  ``bias`` (N,) and ``fuse_relu`` run
-    the epilogue inside the kernel at flush time (f32 accumulator).
+    structurally absent from the grid.  ``bias`` (N,), ``residual`` (M, N)
+    and ``fuse_relu`` run the epilogue inside the kernel at flush time
+    (f32 accumulator -> +bias -> +residual -> max(0) -> cast).
     """
     m, k = x.shape
     nb, s_steps, vk, vn = vs.vals.shape
@@ -111,6 +118,7 @@ def vsmm_pallas(
     assert m % bm == 0, (m, bm)
     out_dtype = out_dtype or x.dtype
     has_bias = bias is not None
+    has_residual = residual is not None
 
     in_specs = [
         # activation K-tile gather: the paper's index system
@@ -122,6 +130,11 @@ def vsmm_pallas(
     if has_bias:
         in_specs.append(pl.BlockSpec((1, vn), lambda j, mi, s, idx: (j, 0)))
         args.append(bias.reshape(nb, vn))
+    if has_residual:
+        assert residual.shape == (m, nb * vn), (residual.shape, m, nb * vn)
+        in_specs.append(
+            pl.BlockSpec((bm, vn), lambda j, mi, s, idx: (mi, j)))
+        args.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
@@ -132,6 +145,7 @@ def vsmm_pallas(
     )
     return pl.pallas_call(
         functools.partial(_kernel, fuse_relu=fuse_relu, has_bias=has_bias,
+                          has_residual=has_residual,
                           skip_zero_inputs=skip_zero_inputs),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nb * vn), out_dtype),
@@ -142,6 +156,8 @@ def vsmm_pallas(
                 m * nb * s_steps * vk * x.dtype.itemsize
                 + vs.vals.size * vs.vals.dtype.itemsize
                 + m * nb * vn * jnp.dtype(out_dtype).itemsize
+                + (residual.size * residual.dtype.itemsize
+                   if has_residual else 0)
             ),
             transcendentals=0,
         ),

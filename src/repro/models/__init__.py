@@ -1,2 +1,4 @@
-"""Model zoo: transformer stack (GQA/MoE/Mamba/RWKV patterns) + VGG-16."""
-from . import layers, attention, moe, mamba, rwkv, transformer, cnn, frontend
+"""Model zoo: transformer stack (GQA/MoE/Mamba/RWKV patterns) + the sparse
+CNN graph IR (`graph`: VGG-16, ResNet-18, and any `SparseNet` a builder
+expresses) with `cnn` keeping the legacy per-model entry points."""
+from . import layers, attention, moe, mamba, rwkv, transformer, graph, cnn, frontend

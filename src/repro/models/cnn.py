@@ -1,42 +1,27 @@
-"""VGG-16 (the paper's evaluation model) with first-class vector sparsity.
+"""VGG-16 / ResNet-stem entry points, now thin shims over `models.graph`.
 
-Dense path: jax.lax conv.  Sparse path: *every* conv — including the
-3-channel stem, whose input channels are zero-padded to a tileable K — and
-every FC layer can run through the vector-sparse ops: `impl='jnp'` for the
-structural GSPMD-friendly path, `impl='pallas'` for the TPU kernel.  Sparse
-convs use the kernel's fused bias+ReLU epilogue, so the post-ReLU zeros the
-next layer's input-side skip elides are produced in-kernel.
-
-A sparse conv layer is described by a `SparseConv` spec (VectorSparse weights
-+ geometry + input-channel padding); `sparse_conv_from_dense` builds one from
-any dense (kh, kw, Cin, Cout) weight.  Besides VGG-16, a small ResNet-style
-stem (7x7/s2 conv -> 1x1 projection -> 3x3/s2 downsample) exercises the
-generalized kernel family end-to-end.
-
-`collect_conv_traffic` exposes per-layer (input activations, weights) so the
-cycle-accurate accelerator model (core.accel_model) can replay the paper's
-Figs 9-13 on real post-ReLU activation sparsity.
+The model layer lives in `repro.models.graph`: a `SparseNet` IR + one
+`net_apply` walker covers VGG-16, ResNet-18 and any network a builder can
+express, with a single generic `sparsify` (BN folding + vector pruning +
+FC remainder strips).  This module keeps the PR-1-era entry points
+(`vgg16_apply`, `sparsify_vgg16`, `resnet_stem_apply`, ...) as delegations
+so existing callers and tests keep working; new code should target the
+graph API directly.
 """
 from __future__ import annotations
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import (
-    VectorSparse,
-    encode,
-    from_mask,
-    prune_vectors_balanced,
-    vs_matmul,
-    vs_conv2d,
-    dense_conv2d,
-    dense_conv2d_3x3,
-    conv_weight_to_matrix,
+from .graph import (  # noqa: F401  (re-exported layer-level helpers)
+    SparseConv,
+    SparseFC,
+    VGG16_LAYERS,
+    apply_sparse_conv,
+    apply_sparse_fc,
+    build_resnet_stem,
+    build_vgg16,
+    net_apply,
+    sparse_conv_from_dense,
+    sparsify,
 )
-from .layers import P
 
 __all__ = [
     "VGG16_LAYERS", "vgg16_schema", "vgg16_apply", "sparsify_vgg16",
@@ -45,245 +30,66 @@ __all__ = [
     "sparsify_resnet_stem", "collect_conv_traffic", "conv_names",
 ]
 
-# channels per conv layer; 'M' = 2x2 max-pool
-VGG16_LAYERS = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
-                512, 512, 512, "M", 512, 512, 512, "M"]
+# Layer names/geometry are size-agnostic: one net instance serves every
+# image_size/num_classes at apply time (dims only matter for the schema).
+_VGG16_NET = build_vgg16()
+_STEM_NET = build_resnet_stem()
 
-FC_DIMS = [(512 * 7 * 7, 4096), (4096, 4096)]
-
-
-@dataclasses.dataclass
-class SparseConv:
-    """One vector-sparse conv layer: weights + geometry.
-
-    ``cin_pad`` zero channels are appended to the input before the conv —
-    how a non-tileable Cin (e.g. the 3-channel stem) becomes a multiple of
-    the K-tile length.  The padded weight rows are zero, so the math is
-    unchanged; the padded input vectors are all-zero and the kernel's
-    input-side skip elides them at runtime.
-    """
-
-    vs: VectorSparse
-    kh: int = 3
-    kw: int = 3
-    stride: int = 1
-    cin_pad: int = 0
-
-
-def sparse_conv_from_dense(
-    w,
-    density: float,
-    *,
-    vk: int = 32,
-    vn: int = 128,
-    stride: int = 1,
-    prune: bool = True,
-    dtype=None,
-):
-    """Dense (kh, kw, Cin, Cout) weight -> (SparseConv, pruned dense weight).
-
-    Handles non-tileable Cin by zero-padding channels to a multiple of a
-    reduced K-tile length (min(vk, 8)); handles non-tileable Cout by
-    shrinking the output strip to the largest divisor of Cout that is <= vn.
-    ``prune=False`` (or density >= 1) keeps every tile — the dense network
-    in the same format, the paper's single-datapath story.
-    """
-    w = np.asarray(w, np.float32)
-    kh, kw, cin, cout = w.shape
-    if cin % vk == 0:
-        vk_l, cp = vk, 0
-    else:
-        vk_l = min(vk, 8)
-        cp = -cin % vk_l
-    wpad = np.pad(w, ((0, 0), (0, 0), (0, cp), (0, 0))) if cp else w
-    wm = wpad.reshape(kh * kw * (cin + cp), cout)
-    vn_l = min(vn, cout)
-    while cout % vn_l:
-        vn_l -= 1
-    if prune and density < 1.0:
-        wp, mask = prune_vectors_balanced(wm, density, vk_l, vn_l)
-    else:
-        wp = wm
-        mask = np.ones((wm.shape[0] // vk_l, cout // vn_l), bool)
-    dtype = dtype or jnp.float32
-    vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
-    spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, cin_pad=cp)
-    wp_dense = wp.reshape(kh, kw, cin + cp, cout)[:, :, :cin]
-    return spec, wp_dense
-
-
-def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True,
-                      impl: str = "jnp"):
-    """Run one conv through the vector-sparse path.
-
-    ``entry`` is a `SparseConv` or a bare `VectorSparse` (legacy 3x3/s1).
-    """
-    spec = entry if isinstance(entry, SparseConv) else SparseConv(entry)
-    if spec.cin_pad:
-        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, spec.cin_pad)))
-    return vs_conv2d(
-        x, spec.vs, kh=spec.kh, kw=spec.kw, stride=spec.stride, bias=bias,
-        fuse_relu=fuse_relu, impl=impl,
-    )
+# (name, kh, kw, stride, cin, cout) — kept for back-compat introspection.
+RESNET_STEM_LAYERS = tuple(
+    (l.name, l.kh, l.kw, l.stride, l.cin, l.cout)
+    for l in _STEM_NET.conv_layers()
+)
 
 
 def conv_names():
-    names, cin = [], 3
-    i = 1
-    for c in VGG16_LAYERS:
-        if c == "M":
-            continue
-        names.append((f"conv{i}", cin, c))
-        cin = c
-        i += 1
-    return names
+    """[(name, cin, cout)] for VGG-16's 13 convs."""
+    return [(l.name, l.cin, l.cout) for l in _VGG16_NET.conv_layers()]
 
 
 def vgg16_schema(num_classes: int = 1000, *, image_size: int = 224) -> dict:
-    s = {}
-    for name, cin, cout in conv_names():
-        s[name] = {
-            "w": P((3, 3, cin, cout), (None, None, None, "ff"), fan_in=9 * cin),
-            "b": P((cout,), ("ff",), init="zeros"),
-        }
-    fc_in = 512 * (image_size // 32) ** 2
-    dims = [(fc_in, 4096), (4096, 4096), (4096, num_classes)]
-    for j, (din, dout) in enumerate(dims, start=1):
-        s[f"fc{j}"] = {
-            "w": P((din, dout), ("fsdp", "ff"), fan_in=din),
-            "b": P((dout,), ("ff",), init="zeros"),
-        }
-    return s
-
-
-def _maxpool2(x):
-    return jax.lax.reduce_window(
-        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
-    )
+    return build_vgg16(num_classes, image_size=image_size).schema()
 
 
 def vgg16_apply(params, x, *, sparse: dict | None = None, impl: str = "jnp",
                 collect=None):
-    """x (N, H, W, 3) -> logits (N, classes).
+    """x (N, H, W, 3) -> logits (N, classes).  See `graph.net_apply`.
 
-    sparse: {layer_name: SparseConv | VectorSparse} — layers present run the
-    paper's vector-sparse path (weight-side structural skip + input-side skip,
-    bias+ReLU fused into the kernel epilogue); absent layers run dense.
+    ``collect`` keeps the PR-1 contract: (name, conv input, weight) triples.
     """
-    sparse = sparse or {}
-    names = iter(conv_names())
-    for c in VGG16_LAYERS:
-        if c == "M":
-            x = _maxpool2(x)
-            continue
-        name, cin, cout = next(names)
-        p = params[name]
-        if collect is not None:
-            collect.append((name, x, p["w"]))
-        if name in sparse:
-            x = apply_sparse_conv(x, sparse[name], bias=p["b"], impl=impl)
-        else:
-            y = dense_conv2d_3x3(x, p["w"].astype(x.dtype))
-            x = jax.nn.relu(y + p["b"].astype(y.dtype))
-    n = x.shape[0]
-    x = x.reshape(n, -1)
-    for j in (1, 2, 3):
-        p = params[f"fc{j}"]
-        key = f"fc{j}"
-        if key in sparse:
-            x = vs_matmul(x, sparse[key], impl=impl)
-        else:
-            x = jnp.dot(x, p["w"].astype(x.dtype),
-                        preferred_element_type=jnp.float32).astype(x.dtype)
-        x = x + p["b"].astype(x.dtype)
-        if j < 3:
-            x = jax.nn.relu(x)
-    return x
+    rec = [] if collect is not None else None
+    out = net_apply(_VGG16_NET, params, x, sparse=sparse, impl=impl,
+                    collect=rec)
+    if collect is not None:
+        collect.extend((n, xi, w) for n, xi, w, _ in rec)
+    return out
 
 
 def sparsify_vgg16(params, density: float, *, vk: int = 32, vn: int = 128,
                    include_fc: bool = True):
-    """Vector-prune VGG-16 to `density` (fraction of nonzero weight vectors).
+    """Vector-prune VGG-16 to `density`; see `graph.sparsify`.
 
-    Returns (sparse dict for vgg16_apply, pruned dense params for oracles).
-    Every conv runs the sparse datapath: the 3-channel stem keeps its weights
-    (27-row K, negligible FLOPs — standard pruning practice) but is encoded
-    at density 1 with its input channels zero-padded to a tileable K, so even
-    conv1 exercises the kernel's index system and input-side skip.
+    Unlike PR 1, FC layers whose Cout doesn't tile (the 1000-class head)
+    now run sparse via a zero-padded remainder strip.
     """
-    sparse, pruned = {}, jax.tree.map(lambda a: a, params)
-    for name, cin, cout in conv_names():
-        w = params[name]["w"]
-        spec, wp = sparse_conv_from_dense(
-            w, density, vk=vk, vn=vn, stride=1, prune=cin >= vk,
-            dtype=w.dtype,
-        )
-        sparse[name] = spec
-        pruned[name]["w"] = jnp.asarray(wp, w.dtype)
-    if include_fc:
-        for j in (1, 2, 3):
-            w = np.asarray(params[f"fc{j}"]["w"], np.float32)
-            dout = w.shape[1]
-            vn_l = min(vn, dout)
-            if w.shape[0] % vk or dout % vn_l:
-                continue
-            wp, _ = prune_vectors_balanced(w, density, vk, vn_l)
-            sparse[f"fc{j}"] = encode(
-                jnp.asarray(wp, params[f"fc{j}"]["w"].dtype), vk, vn_l
-            )
-            pruned[f"fc{j}"]["w"] = jnp.asarray(wp, params[f"fc{j}"]["w"].dtype)
-    return sparse, pruned
-
-
-# -- ResNet-style stem: the geometries VGG doesn't exercise ------------------
-
-# (name, kh, kw, stride, cin, cout): 7x7/s2 stem, 1x1 projection, 3x3/s2
-# downsample — the conv vocabulary of every ResNet-family network.
-RESNET_STEM_LAYERS = (
-    ("stem7x7", 7, 7, 2, 3, 64),
-    ("proj1x1", 1, 1, 1, 64, 128),
-    ("down3x3", 3, 3, 2, 128, 128),
-)
+    return sparsify(_VGG16_NET, params, density, vk=vk, vn=vn,
+                    include_fc=include_fc)
 
 
 def resnet_stem_schema() -> dict:
-    s = {}
-    for name, kh, kw, _, cin, cout in RESNET_STEM_LAYERS:
-        s[name] = {
-            "w": P((kh, kw, cin, cout), (None, None, None, "ff"),
-                   fan_in=kh * kw * cin),
-            "b": P((cout,), ("ff",), init="zeros"),
-        }
-    return s
+    return _STEM_NET.schema()
 
 
 def resnet_stem_apply(params, x, *, sparse: dict | None = None,
                       impl: str = "jnp"):
     """x (N, H, W, 3) -> (N, H/4, W/4, 128) feature map, ReLU after each conv."""
-    sparse = sparse or {}
-    for name, kh, kw, stride, cin, cout in RESNET_STEM_LAYERS:
-        p = params[name]
-        if name in sparse:
-            x = apply_sparse_conv(x, sparse[name], bias=p["b"], impl=impl)
-        else:
-            y = dense_conv2d(x, p["w"].astype(x.dtype), stride=stride)
-            x = jax.nn.relu(y + p["b"].astype(y.dtype))
-    return x
+    return net_apply(_STEM_NET, params, x, sparse=sparse, impl=impl)
 
 
 def sparsify_resnet_stem(params, density: float, *, vk: int = 32,
                          vn: int = 128):
     """Vector-prune the ResNet-style stem; same contract as `sparsify_vgg16`."""
-    sparse, pruned = {}, jax.tree.map(lambda a: a, params)
-    for name, kh, kw, stride, cin, cout in RESNET_STEM_LAYERS:
-        w = params[name]["w"]
-        spec, wp = sparse_conv_from_dense(
-            w, density, vk=vk, vn=vn, stride=stride, prune=cin >= vk,
-            dtype=w.dtype,
-        )
-        sparse[name] = spec
-        pruned[name]["w"] = jnp.asarray(wp, w.dtype)
-    return sparse, pruned
+    return sparsify(_STEM_NET, params, density, vk=vk, vn=vn)
 
 
 def collect_conv_traffic(params, x):

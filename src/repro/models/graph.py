@@ -1,0 +1,601 @@
+"""Network IR + graph executor: whole networks on the vector-sparse datapath.
+
+VSCNN's claim is that *one* vector-sparse datapath serves whole networks.
+This module is the model-side half of that claim: instead of a hand-written
+apply function per network, a network is data — a `SparseNet` holding a flat
+tuple of `LayerSpec`s — and one walker (`net_apply`) runs any of them dense
+or sparse, with one generic `sparsify` that vector-prunes every conv and FC
+layer (BN folded into the conv weights/bias first, so batch-norm costs
+nothing at inference).
+
+LayerSpec vocabulary
+--------------------
+  Conv(name, cin, cout, kh, kw, stride, bn, relu, residual, src, dst)
+      kh x kw / stride / SAME conv.  ``bn=True`` gives the layer inference
+      batch-norm parameters (scale/offset/mean/var) instead of a bias; at
+      sparsify time BN is folded into the weights and a bias, so the sparse
+      path never sees it.  ``residual`` names a saved slot whose tensor is
+      added *before* the ReLU — on the sparse path this rides the kernels'
+      fused epilogue (one extra VMEM read, no extra HBM round trip).
+      ``src`` reads the layer input from a saved slot instead of the stream
+      and ``dst`` writes the output to a slot without touching the stream —
+      together they express shortcut branches (the ResNet downsample
+      projection) without a general DAG.
+  FC(name, din, dout, relu)      dense/sparse fully-connected (+bias, ReLU).
+  Classifier(name, din, dout)    FC with relu=False — the logits head.
+  Pool(kind, size, stride, padding)   'max' | 'avg' window pool or 'gap'
+      (global average pool, the ResNet head).
+  ResidualAdd(key, relu)         explicit unfused shortcut add (for graphs
+      whose producer layer can't absorb it; builders prefer the fused
+      Conv(residual=...) form).
+  Save(key)                      checkpoint the stream into a named slot.
+  Flatten()                      NHWC -> (N, features).
+
+Adding a new network = writing a builder that returns a `SparseNet` (see
+`build_vgg16` / `build_resnet18`); schema, forward, sparsification, traffic
+collection and the accelerator cycle model all come for free from the
+walker.
+
+Sparse layer specs
+------------------
+`sparsify(net, params, density)` returns ``(sparse, pruned)``: a dict
+mapping layer name -> `SparseConv` / `SparseFC` (balanced block-CSR weights
++ geometry + folded bias), and a pruned *dense* param tree computing the
+identical function (BN folded, remainders intact) for oracle comparison.
+FC layers whose Cout doesn't tile (e.g. a 1000-class head) are zero-padded
+to the strip width and the padded columns are sliced off after the kernel —
+the remainder strip, so every FC runs sparse.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    VectorSparse,
+    from_mask,
+    prune_vectors_balanced,
+    vs_matmul,
+    vs_conv2d,
+    dense_conv2d,
+)
+from .layers import P
+
+__all__ = [
+    "Conv", "FC", "Classifier", "Pool", "ResidualAdd", "Save", "Flatten",
+    "SparseNet", "SparseConv", "SparseFC",
+    "sparse_conv_from_dense", "apply_sparse_conv", "apply_sparse_fc",
+    "net_schema", "net_apply", "sparsify", "collect_conv_traffic",
+    "build_vgg16", "build_resnet18", "build_resnet_stem",
+    "VGG16_LAYERS", "RESNET18_STAGES", "BN_EPS",
+]
+
+BN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Layer specs (the IR)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    """kh x kw / stride / SAME conv (+BN) (+residual) (+ReLU)."""
+
+    name: str
+    cin: int
+    cout: int
+    kh: int = 3
+    kw: int = 3
+    stride: int = 1
+    bn: bool = False
+    relu: bool = True
+    residual: str | None = None  # slot added before ReLU (fused epilogue)
+    src: str | None = None       # read input from slot, not the stream
+    dst: str | None = None       # write output to slot, leave stream as-is
+
+
+@dataclasses.dataclass(frozen=True)
+class FC:
+    """Fully-connected layer: x @ W + b (+ReLU)."""
+
+    name: str
+    din: int
+    dout: int
+    relu: bool = True
+
+
+def Classifier(name: str, din: int, dout: int) -> FC:
+    """The logits head: an FC without the ReLU."""
+    return FC(name, din, dout, relu=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    """'max' | 'avg' window pool, or 'gap' (global average pool)."""
+
+    kind: str = "max"
+    size: int = 2
+    stride: int | None = None  # None -> size
+    padding: str = "VALID"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResidualAdd:
+    """Explicit (unfused) shortcut add: x = [relu](x + saved[key])."""
+
+    key: str
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Save:
+    """Checkpoint the stream into a named slot."""
+
+    key: str
+
+
+@dataclasses.dataclass(frozen=True)
+class Flatten:
+    """NHWC -> (N, features)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SparseNet:
+    """A network as data: a name and a flat tuple of LayerSpecs."""
+
+    name: str
+    layers: tuple
+
+    def schema(self) -> dict:
+        return net_schema(self)
+
+    def apply(self, params, x, *, sparse=None, impl: str = "jnp",
+              collect=None):
+        return net_apply(self, params, x, sparse=sparse, impl=impl,
+                         collect=collect)
+
+    def sparsify(self, params, density: float, *, vk: int = 32,
+                 vn: int = 128, include_fc: bool = True):
+        return sparsify(self, params, density, vk=vk, vn=vn,
+                        include_fc=include_fc)
+
+    def conv_layers(self) -> list[Conv]:
+        return [l for l in self.layers if isinstance(l, Conv)]
+
+    def fc_layers(self) -> list[FC]:
+        return [l for l in self.layers if isinstance(l, FC)]
+
+
+# --------------------------------------------------------------------------
+# Sparse layer entries (what `sparsify` produces, what the walker consumes)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SparseConv:
+    """One vector-sparse conv layer: weights + geometry.
+
+    ``cin_pad`` zero channels are appended to the input before the conv —
+    how a non-tileable Cin (e.g. the 3-channel stem) becomes a multiple of
+    the K-tile length.  The padded weight rows are zero, so the math is
+    unchanged; the padded input vectors are all-zero and the kernel's
+    input-side skip elides them at runtime.  ``bias`` (when set) overrides
+    the param-tree bias — this is where the BN-folded bias lives.
+    """
+
+    vs: VectorSparse
+    kh: int = 3
+    kw: int = 3
+    stride: int = 1
+    cin_pad: int = 0
+    bias: jax.Array | None = None
+
+
+@dataclasses.dataclass
+class SparseFC:
+    """One vector-sparse FC layer.
+
+    ``dout`` is the true output width; the encoded matrix may be zero-padded
+    to a strip multiple (the remainder strip for non-tileable heads, e.g.
+    1000 classes) — the walker slices the pad columns off after the kernel.
+    ``bias`` (when set) overrides the param-tree bias.
+    """
+
+    vs: VectorSparse
+    dout: int | None = None
+    bias: jax.Array | None = None
+
+
+def sparse_conv_from_dense(
+    w,
+    density: float,
+    *,
+    vk: int = 32,
+    vn: int = 128,
+    stride: int = 1,
+    prune: bool = True,
+    dtype=None,
+):
+    """Dense (kh, kw, Cin, Cout) weight -> (SparseConv, pruned dense weight).
+
+    Handles non-tileable Cin by zero-padding channels to a multiple of a
+    reduced K-tile length (min(vk, 8)); handles non-tileable Cout by
+    shrinking the output strip to the largest divisor of Cout that is <= vn.
+    ``prune=False`` (or density >= 1) keeps every tile — the dense network
+    in the same format, the paper's single-datapath story.
+    """
+    w = np.asarray(w, np.float32)
+    kh, kw, cin, cout = w.shape
+    if cin % vk == 0:
+        vk_l, cp = vk, 0
+    else:
+        vk_l = min(vk, 8)
+        cp = -cin % vk_l
+    wpad = np.pad(w, ((0, 0), (0, 0), (0, cp), (0, 0))) if cp else w
+    wm = wpad.reshape(kh * kw * (cin + cp), cout)
+    vn_l = min(vn, cout)
+    while cout % vn_l:
+        vn_l -= 1
+    if prune and density < 1.0:
+        wp, mask = prune_vectors_balanced(wm, density, vk_l, vn_l)
+    else:
+        wp = wm
+        mask = np.ones((wm.shape[0] // vk_l, cout // vn_l), bool)
+    dtype = dtype or jnp.float32
+    vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
+    spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, cin_pad=cp)
+    wp_dense = wp.reshape(kh, kw, cin + cp, cout)[:, :, :cin]
+    return spec, wp_dense
+
+
+def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True, residual=None,
+                      impl: str = "jnp"):
+    """Run one conv through the vector-sparse path.
+
+    ``entry`` is a `SparseConv` or a bare `VectorSparse` (legacy 3x3/s1).
+    ``residual`` is the output-shaped shortcut added before the ReLU in the
+    kernels' fused epilogue.
+    """
+    spec = entry if isinstance(entry, SparseConv) else SparseConv(entry)
+    if spec.cin_pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, spec.cin_pad)))
+    return vs_conv2d(
+        x, spec.vs, kh=spec.kh, kw=spec.kw, stride=spec.stride, bias=bias,
+        residual=residual, fuse_relu=fuse_relu, impl=impl,
+    )
+
+
+def apply_sparse_fc(x, entry, *, bias=None, fuse_relu=False, residual=None,
+                    impl: str = "jnp"):
+    """Run one FC layer through the vector-sparse path.
+
+    ``entry`` is a `SparseFC` or a bare `VectorSparse`.  The encoded matrix
+    may carry remainder-strip zero columns; bias/residual are padded to the
+    encoded width and the pad columns sliced off after the kernel.
+    """
+    spec = entry if isinstance(entry, SparseFC) else SparseFC(entry)
+    n_enc = spec.vs.shape[1]
+    dout = spec.dout or n_enc
+    if bias is not None and bias.shape[-1] != n_enc:
+        bias = jnp.pad(bias, (0, n_enc - bias.shape[-1]))
+    if residual is not None and residual.shape[-1] != n_enc:
+        residual = jnp.pad(
+            residual,
+            [(0, 0)] * (residual.ndim - 1) + [(0, n_enc - residual.shape[-1])],
+        )
+    y = vs_matmul(x, spec.vs, bias=bias, residual=residual,
+                  fuse_relu=fuse_relu, impl=impl)
+    return y[..., :dout] if dout != n_enc else y
+
+
+# --------------------------------------------------------------------------
+# Schema
+# --------------------------------------------------------------------------
+
+def net_schema(net: SparseNet) -> dict:
+    """P-schema for `models.layers.init_params` from the layer specs.
+
+    BN convs get inference batch-norm parameters (scale/offset/mean/var,
+    identity-initialized) instead of a bias; `sparsify` folds them away.
+    """
+    s = {}
+    for l in net.layers:
+        if isinstance(l, Conv):
+            e = {
+                "w": P((l.kh, l.kw, l.cin, l.cout), (None, None, None, "ff"),
+                       fan_in=l.kh * l.kw * l.cin),
+            }
+            if l.bn:
+                e["scale"] = P((l.cout,), ("ff",), init="ones")
+                e["offset"] = P((l.cout,), ("ff",), init="zeros")
+                e["mean"] = P((l.cout,), ("ff",), init="zeros")
+                e["var"] = P((l.cout,), ("ff",), init="ones")
+            else:
+                e["b"] = P((l.cout,), ("ff",), init="zeros")
+            s[l.name] = e
+        elif isinstance(l, FC):
+            s[l.name] = {
+                "w": P((l.din, l.dout), ("fsdp", "ff"), fan_in=l.din),
+                "b": P((l.dout,), ("ff",), init="zeros"),
+            }
+    return s
+
+
+# --------------------------------------------------------------------------
+# Executor
+# --------------------------------------------------------------------------
+
+def _bn_fold(p) -> tuple[np.ndarray, np.ndarray]:
+    """Inference BN -> (per-cout scale g, bias b): y*g + b == BN(y)."""
+    g = (np.asarray(p["scale"], np.float32)
+         / np.sqrt(np.asarray(p["var"], np.float32) + BN_EPS))
+    b = (np.asarray(p["offset"], np.float32)
+         - np.asarray(p["mean"], np.float32) * g)
+    return g, b
+
+
+def _dense_conv(l: Conv, p, x, res):
+    """Dense oracle for one Conv layer (BN applied explicitly if present)."""
+    w = p["w"].astype(jnp.float32)
+    y = dense_conv2d(x.astype(jnp.float32), w, stride=l.stride)
+    if "scale" in p:
+        g = p["scale"].astype(jnp.float32) * jax.lax.rsqrt(
+            p["var"].astype(jnp.float32) + BN_EPS)
+        y = (y - p["mean"].astype(jnp.float32)) * g \
+            + p["offset"].astype(jnp.float32)
+    elif "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    if res is not None:
+        y = y + res.astype(jnp.float32)
+    if l.relu:
+        y = jnp.maximum(y, 0.0)
+    return y.astype(x.dtype)
+
+
+def _pool(l: Pool, x):
+    if l.kind == "gap":
+        return jnp.mean(x, axis=(1, 2), keepdims=True)
+    stride = l.stride or l.size
+    window = (1, l.size, l.size, 1)
+    strides = (1, stride, stride, 1)
+    if l.kind == "max":
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, window, strides, l.padding)
+    if l.kind == "avg":
+        s = jax.lax.reduce_window(
+            x, 0.0, jax.lax.add, window, strides, l.padding)
+        return s / (l.size * l.size)
+    raise ValueError(l.kind)
+
+
+def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "jnp",
+              collect=None):
+    """Walk the graph: x (N, H, W, C) -> logits / features.
+
+    sparse: {layer_name: SparseConv | SparseFC | VectorSparse} — layers
+    present run the paper's vector-sparse path (weight-side structural skip
+    + input-side skip, bias + residual + ReLU fused into the kernel
+    epilogue); absent layers run dense.  ``collect`` (a list) records
+    (name, layer input NHWC, weight, stride) per conv for the accelerator
+    cycle model.
+    """
+    sparse = sparse or {}
+    saved: dict[str, jax.Array] = {}
+    for l in net.layers:
+        if isinstance(l, Save):
+            saved[l.key] = x
+        elif isinstance(l, Conv):
+            xin = saved[l.src] if l.src else x
+            res = saved[l.residual] if l.residual else None
+            p = params[l.name]
+            if collect is not None:
+                collect.append((l.name, xin, p["w"], l.stride))
+            if l.name in sparse:
+                entry = sparse[l.name]
+                spec = (entry if isinstance(entry, SparseConv)
+                        else SparseConv(entry))
+                bias = spec.bias if spec.bias is not None else p.get("b")
+                if l.bn and spec.bias is None:
+                    # a bare entry can't carry the folded scale/bias — running
+                    # it would silently drop batch-norm; demand `sparsify`'s
+                    # folded SparseConv instead of computing wrong activations
+                    raise ValueError(
+                        f"sparse entry for BN conv {l.name!r} has no folded "
+                        f"bias; build it with graph.sparsify (which folds BN "
+                        f"into the weights and bias) rather than encoding "
+                        f"raw weights")
+                y = apply_sparse_conv(xin, spec, bias=bias,
+                                      fuse_relu=l.relu, residual=res,
+                                      impl=impl)
+            else:
+                y = _dense_conv(l, p, xin, res)
+            if l.dst:
+                saved[l.dst] = y
+            else:
+                x = y
+        elif isinstance(l, ResidualAdd):
+            y = x.astype(jnp.float32) + saved[l.key].astype(jnp.float32)
+            if l.relu:
+                y = jnp.maximum(y, 0.0)
+            x = y.astype(x.dtype)
+        elif isinstance(l, Pool):
+            x = _pool(l, x)
+        elif isinstance(l, Flatten):
+            x = x.reshape(x.shape[0], -1)
+        elif isinstance(l, FC):
+            p = params[l.name]
+            if l.name in sparse:
+                entry = sparse[l.name]
+                spec = (entry if isinstance(entry, SparseFC)
+                        else SparseFC(entry))
+                bias = spec.bias if spec.bias is not None else p["b"]
+                x = apply_sparse_fc(x, spec, bias=bias,
+                                    fuse_relu=l.relu, impl=impl)
+            else:
+                y = jnp.dot(x, p["w"].astype(x.dtype),
+                            preferred_element_type=jnp.float32
+                            ).astype(x.dtype)
+                y = y + p["b"].astype(y.dtype)
+                x = jax.nn.relu(y) if l.relu else y
+        else:
+            raise TypeError(f"unknown layer spec: {l!r}")
+    return x
+
+
+def collect_conv_traffic(net: SparseNet, params, x):
+    """Forward pass recording (name, conv input NHWC, weight, stride) per
+    conv layer — the input of `core.accel_model.network_cycle_reports`."""
+    rec: list = []
+    net_apply(net, params, x, collect=rec)
+    return rec
+
+
+# --------------------------------------------------------------------------
+# Generic sparsification (BN folding + vector pruning + remainder strips)
+# --------------------------------------------------------------------------
+
+def sparsify(net: SparseNet, params, density: float, *, vk: int = 32,
+             vn: int = 128, include_fc: bool = True):
+    """Vector-prune a whole network to `density` (fraction of kept vectors).
+
+    Returns ``(sparse, pruned)``:
+
+    * ``sparse`` — {layer name: SparseConv | SparseFC} for `net_apply`.
+      Every conv runs the sparse datapath — BN is folded into the weights
+      and a bias *before* pruning (so pruning scores see the true inference
+      magnitudes), small-Cin stems keep their weights (density 1, standard
+      pruning practice) with input channels zero-padded to a tileable K,
+      and non-tileable FC heads get a zero-padded remainder strip.
+    * ``pruned`` — a dense param tree computing the identical function
+      (folded weights + bias; BN entries replaced by a plain bias), the
+      oracle for parity tests.
+    """
+    sparse: dict = {}
+    pruned = {name: dict(entry) for name, entry in params.items()}
+    for l in net.layers:
+        if isinstance(l, Conv):
+            p = params[l.name]
+            wdt = p["w"].dtype
+            w = np.asarray(p["w"], np.float32)
+            cin = w.shape[2]
+            if l.bn:
+                g, b = _bn_fold(p)
+                w = w * g  # scale per cout (last axis)
+            elif "b" in p:
+                b = np.asarray(p["b"], np.float32)
+            else:
+                b = np.zeros((w.shape[3],), np.float32)
+            spec, wp = sparse_conv_from_dense(
+                w, density, vk=vk, vn=vn, stride=l.stride,
+                prune=cin >= vk, dtype=wdt,
+            )
+            spec.bias = jnp.asarray(b, wdt)
+            sparse[l.name] = spec
+            pruned[l.name] = {"w": jnp.asarray(wp, wdt),
+                              "b": jnp.asarray(b, wdt)}
+        elif isinstance(l, FC) and include_fc:
+            p = params[l.name]
+            wdt = p["w"].dtype
+            w = np.asarray(p["w"], np.float32)
+            din, dout = w.shape
+            if din % vk:
+                continue  # non-tileable K: stays dense (none of our nets)
+            vn_l = min(vn, dout)
+            pad = -dout % vn_l
+            wpad = np.pad(w, ((0, 0), (0, pad))) if pad else w
+            wp, mask = prune_vectors_balanced(wpad, density, vk, vn_l)
+            vs = from_mask(jnp.asarray(wp, wdt), mask, vk, vn_l)
+            sparse[l.name] = SparseFC(vs, dout=dout, bias=p["b"])
+            pruned[l.name] = {"w": jnp.asarray(wp[:, :dout], wdt),
+                              "b": p["b"]}
+    return sparse, pruned
+
+
+# --------------------------------------------------------------------------
+# Builders
+# --------------------------------------------------------------------------
+
+# channels per conv layer; 'M' = 2x2 max-pool
+VGG16_LAYERS = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+                512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def build_vgg16(num_classes: int = 1000, *, image_size: int = 224) -> SparseNet:
+    """The paper's evaluation model: 13 convs + 3 FC, classic VGG (no BN)."""
+    layers: list = []
+    cin, i = 3, 1
+    for c in VGG16_LAYERS:
+        if c == "M":
+            layers.append(Pool("max", 2))
+        else:
+            layers.append(Conv(f"conv{i}", cin, c))
+            cin, i = c, i + 1
+    fc_in = 512 * (image_size // 32) ** 2
+    layers += [
+        Flatten(),
+        FC("fc1", fc_in, 4096),
+        FC("fc2", 4096, 4096),
+        Classifier("fc3", 4096, num_classes),
+    ]
+    return SparseNet("vgg16", tuple(layers))
+
+
+# (channels, blocks) per stage — the ResNet-18 basic-block plan.
+RESNET18_STAGES = ((64, 2), (128, 2), (256, 2), (512, 2))
+
+
+def _basic_block(layers: list, prefix: str, cin: int, cout: int,
+                 stride: int) -> None:
+    """Append one ResNet basic block: conv-BN-ReLU -> conv-BN -> (+id) ReLU.
+
+    The shortcut is the saved block input, or a stride-matched 1x1
+    BN-projection of it when the shape changes; either way it is added in
+    conv2's fused epilogue (Conv.residual), before the final ReLU.
+    """
+    inkey = f"{prefix}_in"
+    layers.append(Save(inkey))
+    idkey = inkey
+    if stride != 1 or cin != cout:
+        idkey = f"{prefix}_id"
+        layers.append(Conv(f"{prefix}_down", cin, cout, 1, 1, stride,
+                           bn=True, relu=False, src=inkey, dst=idkey))
+    layers.append(Conv(f"{prefix}_conv1", cin, cout, 3, 3, stride, bn=True))
+    layers.append(Conv(f"{prefix}_conv2", cout, cout, 3, 3, 1, bn=True,
+                       residual=idkey))
+
+
+def build_resnet18(num_classes: int = 1000, *,
+                   image_size: int = 224) -> SparseNet:
+    """ResNet-18: 7x7/s2 BN stem, 3x3/s2 max-pool, 4 stages x 2 basic
+    blocks (stride-2 1x1 BN-projection downsamples), GAP, 512-d classifier.
+
+    Every conv geometry here — 7x7/s2, 3x3/s1, 3x3/s2, 1x1/s2 — maps onto
+    the generalized vector-sparse kernel family; residual adds ride the
+    fused epilogue and BN folds away at sparsify time, so the whole network
+    runs end-to-end on the paper's single sparse datapath.
+    """
+    del image_size  # geometry is size-agnostic; kept for config symmetry
+    layers: list = [
+        Conv("conv1", 3, 64, 7, 7, 2, bn=True),
+        Pool("max", 3, stride=2, padding="SAME"),
+    ]
+    cin = 64
+    for si, (c, blocks) in enumerate(RESNET18_STAGES):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            _basic_block(layers, f"layer{si + 1}_{bi}", cin, c, stride)
+            cin = c
+    layers += [Pool("gap"), Flatten(), Classifier("fc", 512, num_classes)]
+    return SparseNet("resnet18", tuple(layers))
+
+
+def build_resnet_stem() -> SparseNet:
+    """The PR-1 ResNet-style stem (7x7/s2 -> 1x1 -> 3x3/s2), kept as the
+    minimal geometry-coverage network (no BN, plain biases)."""
+    return SparseNet("resnet_stem", (
+        Conv("stem7x7", 3, 64, 7, 7, 2),
+        Conv("proj1x1", 64, 128, 1, 1, 1),
+        Conv("down3x3", 128, 128, 3, 3, 2),
+    ))

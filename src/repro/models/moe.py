@@ -186,8 +186,12 @@ def _moe_body_resident(
     if batch_axes:
         flat = tuple(batch_axes) if isinstance(batch_axes, (tuple, list)) else (batch_axes,)
         my = jnp.int32(0)
+        # jax.lax.axis_size appeared after 0.4.37; psum(1, axis) is the
+        # long-standing equivalent (constant-folded to the static size)
+        axis_size = getattr(jax.lax, "axis_size",
+                            lambda a: jax.lax.psum(1, a))
         for a in flat:
-            my = my * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            my = my * axis_size(a) + jax.lax.axis_index(a)
         out = jax.lax.dynamic_slice_in_dim(out, my * (bl * t), bl * t, axis=0)
     return out.reshape(bl, t, d), aux
 

@@ -170,8 +170,10 @@ def _group_size(rest: str) -> int:
 
 
 def _operand_names(rest: str):
-    # operands are the leading %refs inside the parens (up to matching close)
-    depth, out, cur = 1, [], ""
+    # operands are the leading %refs inside the parens (up to matching
+    # close); commas inside shape brackets or layout braces
+    # ('f32[64,128]{1,0}') don't split
+    depth, nest, out, cur = 1, 0, [], ""
     for ch in rest:
         if ch == "(":
             depth += 1
@@ -180,9 +182,13 @@ def _operand_names(rest: str):
             if depth == 0:
                 out.append(cur)
                 break
+        elif ch in "{[":
+            nest += 1
+        elif ch in "}]":
+            nest -= 1
         if depth >= 1 and ch not in "()":
             cur += ch
-        if ch == "," and depth == 1:
+        if ch == "," and depth == 1 and nest == 0:
             out.append(cur[:-1])
             cur = ""
     names = []

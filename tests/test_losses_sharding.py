@@ -10,6 +10,15 @@ from repro.parallel import sharding as shd
 from repro.parallel.losses import chunked_cross_entropy, cross_entropy_dense
 
 
+def _abstract_mesh(sizes, names):
+    """AbstractMesh ctor compat: new jax takes (sizes, names), 0.4.37 takes
+    a tuple of (name, size) pairs."""
+    try:
+        return jax.sharding.AbstractMesh(sizes, names)
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(zip(names, sizes)))
+
+
 class TestChunkedCE:
     @pytest.mark.parametrize("t,chunk", [(16, 4), (16, 16), (15, 4)])
     def test_matches_dense(self, t, chunk, rng):
@@ -84,7 +93,7 @@ class TestMeshRules:
 
     def test_divisibility_guard(self):
         # AbstractMesh: spec_for only consults mesh.shape (no devices needed)
-        mesh = jax.sharding.AbstractMesh((1, 2), ("data", "model"))
+        mesh = _abstract_mesh((1, 2), ("data", "model"))
         spec = shd.spec_for(("ff",), mesh=mesh, rules=shd.TRAIN_RULES,
                             shape=(7,))  # 7 % 2 != 0 -> replicate
         assert spec == PS(None)
@@ -93,7 +102,7 @@ class TestMeshRules:
         assert spec2 == PS("model")
 
     def test_kv_heads_demoted_on_16way_axis(self):
-        mesh = jax.sharding.AbstractMesh((16, 16), ("data", "model"))
+        mesh = _abstract_mesh((16, 16), ("data", "model"))
         spec = shd.spec_for(("batch", None, "kv_heads", "head_dim"),
                             mesh=mesh, rules=shd.TRAIN_RULES,
                             shape=(256, 4096, 8, 128))

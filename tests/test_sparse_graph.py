@@ -1,0 +1,359 @@
+"""Unified sparse-graph executor: residual epilogue, BN folding, ResNet-18.
+
+Covers the network IR (`models.graph`): the fused residual epilogue in the
+kernels (vsmm/vsconv, jnp + pallas-interpret), BN folding exactness, ResNet
+basic-block parity sweeps (stride 1/2, with/without projection), ResNet-18
+end-to-end with every conv and FC on the vector-sparse path, the FC
+remainder strip for non-tileable heads, delegation of the PR-1 entry
+points, and the shared per-layer cycle-report walk.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encode, prune_vectors_balanced, vs_conv2d, vs_matmul
+from repro.kernels import vsmm, vsconv
+from repro.kernels.ref import vsmm_ref, vsconv_ref
+from repro.models import graph as G
+from repro.models.layers import init_params
+
+
+def _rel(a, b):
+    a, b = np.asarray(a, np.float32), np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+def _sparse_conv_weight(rng, kh, kw, c, co, vk, vn, density):
+    wm = rng.standard_normal((kh * kw * c, co)).astype(np.float32)
+    wp, _ = prune_vectors_balanced(wm, density, vk, vn)
+    return encode(jnp.asarray(wp), vk, vn)
+
+
+def _randomize_bn(params, rng):
+    """Non-identity BN stats so folding is actually exercised."""
+    out = {}
+    for name, p in params.items():
+        p = dict(p)
+        if "scale" in p:
+            c = p["scale"].shape[0]
+            p["scale"] = jnp.asarray(
+                1 + 0.3 * rng.standard_normal(c), jnp.float32)
+            p["offset"] = jnp.asarray(
+                0.2 * rng.standard_normal(c), jnp.float32)
+            p["mean"] = jnp.asarray(0.1 * rng.standard_normal(c), jnp.float32)
+            p["var"] = jnp.asarray(
+                np.abs(1 + 0.3 * rng.standard_normal(c)) + 0.1, jnp.float32)
+        out[name] = p
+    return out
+
+
+class TestResidualEpilogue:
+    """The fused residual add (before ReLU, at flush) in both kernels."""
+
+    def test_vsmm_residual_matches_ref(self, rng):
+        wp, _ = prune_vectors_balanced(
+            rng.standard_normal((256, 256)).astype(np.float32), 0.5, 32, 128)
+        vs = encode(jnp.asarray(wp), 32, 128)
+        x = jnp.asarray(rng.standard_normal((100, 256)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+        res = jnp.asarray(rng.standard_normal((100, 256)), jnp.float32)
+        out = vsmm(x, vs, bias=b, residual=res, fuse_relu=True)
+        ref = vsmm_ref(x, vs, bias=b, residual=res, fuse_relu=True)
+        assert _rel(out, ref) < 1e-5
+        assert np.asarray(out).min() >= 0.0
+
+    @pytest.mark.parametrize("kh,kw,stride,h,w",
+                             [(3, 3, 1, 8, 8), (3, 3, 2, 13, 15),
+                              (1, 1, 2, 13, 7), (7, 7, 2, 11, 9)])
+    def test_vsconv_residual_matches_ref(self, kh, kw, stride, h, w, rng):
+        c, co, vk, vn = 16, 128, 16, 128
+        vs = _sparse_conv_weight(rng, kh, kw, c, co, vk, vn, 0.5)
+        x = jnp.asarray(
+            np.maximum(rng.standard_normal((2, h, w, c)), 0), jnp.float32)
+        ho, wo = -(-h // stride), -(-w // stride)
+        res = jnp.asarray(rng.standard_normal((2, ho, wo, co)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((co,)), jnp.float32)
+        out = vsconv(x, vs, kh=kh, kw=kw, stride=stride, bias=b,
+                     residual=res, fuse_relu=True)
+        ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride, bias=b,
+                         residual=res, fuse_relu=True)
+        assert _rel(out, ref) < 1e-5
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_residual_added_before_relu(self, impl, rng):
+        """relu(conv + res) != relu(conv) + res — the order must be fused."""
+        c, co, vk, vn = 32, 128, 32, 128
+        vs = _sparse_conv_weight(rng, 3, 3, c, co, vk, vn, 0.5)
+        x = jnp.asarray(rng.standard_normal((1, 8, 8, c)), jnp.float32)
+        res = jnp.asarray(-1e4 * np.ones((1, 8, 8, co)), jnp.float32)
+        out = vs_conv2d(x, vs, residual=res, fuse_relu=True, impl=impl)
+        # a large negative shortcut drives everything through the ReLU to 0
+        assert float(np.abs(np.asarray(out)).max()) == 0.0
+
+    def test_vs_matmul_epilogue_jnp_matches_pallas(self, rng):
+        wp, _ = prune_vectors_balanced(
+            rng.standard_normal((128, 256)).astype(np.float32), 0.5, 32, 128)
+        vs = encode(jnp.asarray(wp), 32, 128)
+        x = jnp.asarray(rng.standard_normal((10, 128)), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((256,)), jnp.float32)
+        res = jnp.asarray(rng.standard_normal((10, 256)), jnp.float32)
+        a = vs_matmul(x, vs, bias=b, residual=res, fuse_relu=True, impl="jnp")
+        p = vs_matmul(x, vs, bias=b, residual=res, fuse_relu=True,
+                      impl="pallas")
+        assert _rel(a, p) < 1e-5
+
+
+class TestBNFolding:
+    def test_fold_matches_explicit_bn(self, rng):
+        """Folded conv(w*g)+b == BN(conv(w)) for one layer, within fp32."""
+        net = G.SparseNet("one", (G.Conv("c", 32, 64, 3, 3, 1, bn=True),))
+        params = _randomize_bn(
+            init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32),
+            np.random.default_rng(3))
+        x = jnp.asarray(rng.standard_normal((2, 9, 9, 32)), jnp.float32)
+        ref = G.net_apply(net, params, x)  # explicit BN
+        sparse, pruned = G.sparsify(net, params, 1.0)  # fold, keep all tiles
+        folded_dense = G.net_apply(net, pruned, x)
+        folded_sparse = G.net_apply(net, params, x, sparse=sparse)
+        assert _rel(folded_dense, ref) < 1e-4   # folding exact up to rounding
+        assert _rel(folded_sparse, ref) < 1e-4
+        assert "b" in pruned["c"] and "scale" not in pruned["c"]
+
+    def test_bare_entry_for_bn_conv_rejected(self, rng):
+        """A raw-encoded entry can't carry the folded BN scale/bias: running
+        it would silently drop batch-norm, so the walker must refuse."""
+        net = G.SparseNet("one", (G.Conv("c", 32, 64, 3, 3, 1, bn=True),))
+        params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+        bare = _sparse_conv_weight(rng, 3, 3, 32, 64, 32, 64, 1.0)
+        x = jnp.asarray(rng.standard_normal((1, 8, 8, 32)), jnp.float32)
+        with pytest.raises(ValueError, match="folded"):
+            G.net_apply(net, params, x, sparse={"c": bare})
+
+    def test_pruning_scores_see_folded_magnitudes(self, rng):
+        """A huge BN scale on one channel must protect its vectors."""
+        net = G.SparseNet("one", (G.Conv("c", 32, 64, 3, 3, 1, bn=True),))
+        params = init_params(net.schema(), jax.random.PRNGKey(1), jnp.float32)
+        p = dict(params["c"])
+        scale = np.ones(64, np.float32)
+        scale[:32] = 100.0  # first strip-half channels hugely amplified
+        p["scale"] = jnp.asarray(scale)
+        params = {"c": p}
+        sparse, _ = G.sparsify(net, params, 0.25, vk=32, vn=32)
+        vs = sparse["c"].vs
+        # strips covering the amplified channels keep the same quota but the
+        # *weights stored* are the folded (scaled) ones
+        assert float(jnp.abs(vs.vals[0]).max()) > 10.0
+
+
+def _block_net(cin, cout, stride):
+    """A single ResNet basic block as a SparseNet (the IR doc example)."""
+    layers = []
+    G._basic_block(layers, "b", cin, cout, stride)
+    return G.SparseNet("block", tuple(layers))
+
+
+class TestBasicBlockParity:
+    """Stride 1/2, with/without projection, jnp + pallas-interpret."""
+
+    CASES = [
+        (64, 64, 1),    # identity shortcut
+        (64, 128, 2),   # stride-2 projection downsample
+        (64, 128, 1),   # channel-change projection at stride 1
+    ]
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    @pytest.mark.parametrize("cin,cout,stride", CASES)
+    def test_sparse_matches_folded_dense(self, cin, cout, stride, impl, rng):
+        net = _block_net(cin, cout, stride)
+        params = _randomize_bn(
+            init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32),
+            np.random.default_rng(5))
+        x = jnp.asarray(
+            np.maximum(rng.standard_normal((2, 9, 11, cin)), 0), jnp.float32)
+        sparse, pruned = G.sparsify(net, params, 0.5)
+        ref = G.net_apply(net, pruned, x)
+        out = G.net_apply(net, params, x, sparse=sparse, impl=impl)
+        assert out.shape == (2, -(-9 // stride), -(-11 // stride), cout)
+        assert _rel(out, ref) < 1e-4
+
+    @pytest.mark.parametrize("cin,cout,stride", CASES)
+    def test_sparse_matches_unfolded_dense(self, cin, cout, stride, rng):
+        """vs the original (explicit-BN) dense net at density 1."""
+        net = _block_net(cin, cout, stride)
+        params = _randomize_bn(
+            init_params(net.schema(), jax.random.PRNGKey(2), jnp.float32),
+            np.random.default_rng(6))
+        x = jnp.asarray(
+            np.maximum(rng.standard_normal((1, 8, 8, cin)), 0), jnp.float32)
+        sparse, _ = G.sparsify(net, params, 1.0)
+        ref = G.net_apply(net, params, x)
+        out = G.net_apply(net, params, x, sparse=sparse, impl="jnp")
+        assert _rel(out, ref) < 1e-3
+
+    def test_projection_only_when_needed(self):
+        assert not any(l.name.endswith("_down")
+                       for l in _block_net(64, 64, 1).conv_layers())
+        assert any(l.name.endswith("_down")
+                   for l in _block_net(64, 128, 2).conv_layers())
+
+
+class TestResidualAddSpec:
+    def test_explicit_residual_add_layer(self, rng):
+        """The unfused ResidualAdd spec == the fused Conv(residual=...)."""
+        cin = 32
+        fused = G.SparseNet("f", (
+            G.Save("in"),
+            G.Conv("c1", cin, cin, 3, 3, 1),
+            G.Conv("c2", cin, cin, 3, 3, 1, relu=False, residual="in"),
+        ))
+        # same convs, shortcut applied by an explicit layer + final relu off
+        unfused = G.SparseNet("u", (
+            G.Save("in"),
+            G.Conv("c1", cin, cin, 3, 3, 1),
+            G.Conv("c2", cin, cin, 3, 3, 1, relu=False),
+            G.ResidualAdd("in", relu=False),
+        ))
+        params = init_params(fused.schema(), jax.random.PRNGKey(0),
+                             jnp.float32)
+        x = jnp.asarray(rng.standard_normal((1, 8, 8, cin)), jnp.float32)
+        a = G.net_apply(fused, params, x)
+        b = G.net_apply(unfused, params, x)
+        assert _rel(a, b) < 1e-6
+
+
+class TestResNet18EndToEnd:
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_every_layer_sparse_matches_dense(self, impl, rng):
+        """The acceptance bar: all 20 convs + the FC head on the sparse
+        path, residuals fused, BN folded, vs the folded-pruned oracle."""
+        net = G.build_resnet18(num_classes=200, image_size=32)
+        params = _randomize_bn(
+            init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32),
+            np.random.default_rng(9))
+        x = jnp.asarray(rng.standard_normal((1, 32, 32, 3)), jnp.float32)
+        sparse, pruned = G.sparsify(net, params, 0.5)
+        # every conv AND the non-tileable 200-class head runs sparse
+        assert set(sparse) == (
+            {l.name for l in net.conv_layers()}
+            | {l.name for l in net.fc_layers()})
+        assert len(net.conv_layers()) == 20  # stem + 16 block + 3 downsample
+        ref = G.net_apply(net, pruned, x)
+        out = G.net_apply(net, params, x, sparse=sparse, impl=impl)
+        assert out.shape == (1, 200)
+        assert np.isfinite(np.asarray(out)).all()
+        assert _rel(out, ref) < 1e-3
+
+    def test_structure(self):
+        net = G.build_resnet18()
+        convs = net.conv_layers()
+        assert [l.name for l in convs][:6] == [
+            "conv1", "layer1_0_conv1", "layer1_0_conv2",
+            "layer1_1_conv1", "layer1_1_conv2", "layer2_0_down"]
+        # stride-2 downsamples exactly at stages 2-4
+        downs = [l for l in convs if l.name.endswith("_down")]
+        assert [(l.kh, l.kw, l.stride) for l in downs] == [(1, 1, 2)] * 3
+        # all residual shortcuts fuse into the second conv of each block
+        fused = [l for l in convs if l.residual]
+        assert len(fused) == 8 and all(l.name.endswith("conv2")
+                                       for l in fused)
+        assert all(l.bn for l in convs)
+
+
+class TestFCRemainderStrip:
+    def test_1000_class_head_runs_sparse(self, rng):
+        """Cout=1000 doesn't tile by vn=128: pad to 1024, slice back."""
+        net = G.SparseNet("head", (G.Classifier("fc", 512, 1000),))
+        params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+        sparse, pruned = G.sparsify(net, params, 0.5)
+        assert "fc" in sparse
+        assert sparse["fc"].vs.shape == (512, 1024)
+        assert sparse["fc"].dout == 1000
+        x = jnp.asarray(rng.standard_normal((4, 512)), jnp.float32)
+        ref = G.net_apply(net, pruned, x)
+        for impl in ("jnp", "pallas"):
+            out = G.net_apply(net, params, x, sparse=sparse, impl=impl)
+            assert out.shape == (4, 1000)
+            assert _rel(out, ref) < 1e-5
+
+    def test_vgg16_fc3_no_longer_skipped(self):
+        """The PR-1 gap: sparsify_vgg16 must now cover the 1000-class head."""
+        from repro.models.cnn import sparsify_vgg16, vgg16_schema
+        params = init_params(vgg16_schema(1000, image_size=32),
+                             jax.random.PRNGKey(0), jnp.float32)
+        sparse, _ = sparsify_vgg16(params, 0.25)
+        assert "fc3" in sparse
+        assert sparse["fc3"].dout == 1000
+
+
+class TestLegacyDelegation:
+    """PR-1 entry points must reproduce through the graph executor."""
+
+    def test_vgg16_sparse_parity(self, rng):
+        from repro.models.cnn import sparsify_vgg16, vgg16_apply, vgg16_schema
+        params = init_params(vgg16_schema(16, image_size=32),
+                             jax.random.PRNGKey(0), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((2, 32, 32, 3)), jnp.float32)
+        sparse, pruned = sparsify_vgg16(params, 0.25)
+        ref = vgg16_apply(pruned, x)
+        out = vgg16_apply(params, x, sparse=sparse, impl="jnp")
+        assert out.shape == (2, 16)
+        assert _rel(out, ref) < 1e-4
+
+    def test_collect_traffic_triples(self):
+        from repro.models.cnn import collect_conv_traffic, vgg16_schema
+        params = init_params(vgg16_schema(16, image_size=32),
+                             jax.random.PRNGKey(0), jnp.float32)
+        rec = collect_conv_traffic(params, jnp.ones((1, 32, 32, 3)))
+        assert len(rec) == 13
+        assert all(len(t) == 3 for t in rec)
+
+    def test_resnet_stem_parity(self, rng):
+        from repro.models.cnn import (
+            RESNET_STEM_LAYERS, resnet_stem_apply, resnet_stem_schema,
+            sparsify_resnet_stem,
+        )
+        assert [n for n, *_ in RESNET_STEM_LAYERS] == [
+            "stem7x7", "proj1x1", "down3x3"]
+        params = init_params(resnet_stem_schema(), jax.random.PRNGKey(0),
+                             jnp.float32)
+        sparse, pruned = sparsify_resnet_stem(params, 0.5)
+        x = jnp.asarray(rng.standard_normal((2, 28, 30, 3)), jnp.float32)
+        dense = resnet_stem_apply(pruned, x)
+        assert dense.shape == (2, 7, 8, 128)
+        out = resnet_stem_apply(params, x, sparse=sparse, impl="jnp")
+        assert _rel(out, dense) < 1e-3
+
+
+class TestGraphCycleReports:
+    def test_resnet18_per_layer_walk(self, rng):
+        """VGG and ResNet share one analysis path: traffic -> per-layer
+        reports, residual-branch convs included."""
+        from repro.core.accel_model import (
+            PE_4_14_3, aggregate, network_cycle_reports,
+        )
+        net = G.build_resnet18(num_classes=16, image_size=32)
+        params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+        x = jnp.asarray(rng.standard_normal((1, 32, 32, 3)), jnp.float32)
+        traffic = G.collect_conv_traffic(net, params, x)
+        assert len(traffic) == 20
+        reports = network_cycle_reports(traffic, PE_4_14_3)
+        names = [n for n, _ in reports]
+        assert "layer2_0_down" in names  # the projection branch is counted
+        agg = aggregate([r for _, r in reports])
+        assert agg.dense > 0 and agg.vscnn <= agg.dense
+        # pruning must reduce cycles through the same walk
+        _, pruned = G.sparsify(net, params, 0.25)
+        rep_p = network_cycle_reports(
+            G.collect_conv_traffic(net, pruned, x), PE_4_14_3)
+        agg_p = aggregate([r for _, r in rep_p])
+        assert agg_p.vscnn < agg.vscnn
+
+    def test_vgg16_same_walk(self, rng):
+        from repro.core.accel_model import PE_8_7_3, network_cycle_reports
+        net = G.build_vgg16(16, image_size=32)
+        params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+        traffic = G.collect_conv_traffic(
+            net, params, jnp.ones((1, 32, 32, 3)))
+        reports = network_cycle_reports(traffic, PE_8_7_3)
+        assert len(reports) == 13
