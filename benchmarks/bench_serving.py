@@ -1,0 +1,113 @@
+"""CNN serving-path benchmark: images/s vs density vs batch size.
+
+Drives the batched CNN backend (`launch.serve.CNNServer`) end to end —
+queue, bucketing, slot retirement, backfill, jit-cached `SparseNet.apply` —
+and reports steady-state throughput for the dense-jnp baseline (plain XLA
+convs) and the vector-sparse structural path at several densities.  CPU
+numbers demonstrate work ∝ density and batch amortization on a real
+backend, not the TPU claim (same caveat as bench_kernels).
+
+Each (path, density, batch) cell serves a warmup wave first so the compile
+cost of the batch bucket is off the clock — the steady state is what a
+serving deployment sees.
+
+Writes a ``BENCH_serving.json`` artifact (--out) with per-cell rows plus a
+summary checking that batched sparse throughput >= batch-1 throughput at
+equal density.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serving.py --arch vscnn-vgg16
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import CNNServer, ImageRequest
+
+
+def _requests(rng, n: int, size: int) -> list[ImageRequest]:
+    return [ImageRequest(rid=i,
+                         image=rng.standard_normal((size, size, 3))
+                                  .astype(np.float32))
+            for i in range(n)]
+
+
+def _throughput(srv: CNNServer, rng, n: int, size: int, batch: int) -> dict:
+    srv.serve(_requests(rng, batch, size))          # warmup: compile bucket
+    stats = srv.serve(_requests(rng, n, size))
+    run_s = sum(s["run_s"] for s in stats)
+    return {
+        "images_per_s": round(n / max(run_s, 1e-9), 2),
+        "run_s": round(run_s, 4),
+        "runs": len(stats),
+        "steps": sum(s["steps"] for s in stats),
+        "backfills": sum(s["backfills"] for s in stats),
+        "compiles": srv.backend.apply.compiles,
+    }
+
+
+def run(arch: str = "vscnn-vgg16", *, densities=(1.0, 0.5, 0.235),
+        batches=(1, 4, 8), images: int = 24, size: int | None = None,
+        out_path: str | None = None) -> dict:
+    cfg = get_config(arch).reduce()
+    size = size or cfg.image_size
+    rng = np.random.default_rng(0)
+    rows = []
+    for batch in batches:
+        srv = CNNServer(cfg, batch=batch, sparse=False)
+        rows.append({"path": "dense-jnp", "density": 1.0, "batch": batch,
+                     **_throughput(srv, rng, images, size, batch)})
+        for density in densities:
+            srv = CNNServer(cfg, batch=batch, density=density)
+            rows.append({"path": "sparse-jnp", "density": density,
+                         "batch": batch,
+                         **_throughput(srv, rng, images, size, batch)})
+    # batched throughput must beat (or match) batch-1 at equal density
+    summary = {}
+    max_batch = max(batches)
+    for density in densities:
+        cells = {r["batch"]: r["images_per_s"] for r in rows
+                 if r["path"] == "sparse-jnp" and r["density"] == density}
+        summary[str(density)] = {
+            "batch1_images_per_s": cells.get(1),
+            "batched_images_per_s": cells.get(max_batch),
+            "batched_ge_batch1": (cells.get(max_batch, 0.0)
+                                  >= cells.get(1, float("inf"))),
+        }
+    artifact = {
+        "bench": "cnn_serving",
+        "arch": arch,
+        "image_size": size,
+        "images": images,
+        "batches": list(batches),
+        "densities": list(densities),
+        "rows": rows,
+        "summary": summary,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=1)
+    return artifact
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="vscnn-vgg16")
+    ap.add_argument("--images", type=int, default=24)
+    ap.add_argument("--size", type=int, default=None,
+                    help="override the reduced config's image size")
+    ap.add_argument("--batches", type=int, nargs="+", default=[1, 4, 8])
+    ap.add_argument("--densities", type=float, nargs="+",
+                    default=[1.0, 0.5, 0.235])
+    ap.add_argument("--out", default=None,
+                    help="write the artifact (e.g. BENCH_serving.json)")
+    args = ap.parse_args()
+    art = run(args.arch, densities=tuple(args.densities),
+              batches=tuple(args.batches), images=args.images,
+              size=args.size, out_path=args.out)
+    for r in art["rows"]:
+        print(r)
+    print("summary:", art["summary"])

@@ -1,7 +1,15 @@
-"""Architecture registry: --arch <id> resolution for launch/bench tooling."""
+"""Architecture registry: --arch <id> resolution for launch/bench tooling.
+
+Two registries share one `get_config` namespace: the LM stack's
+`ArchConfig`s (trainable, token-input — what `list_archs` returns, and what
+train/dryrun iterate) and the VSCNN CNN configs (`list_cnn_archs`) served
+through the batched CNN backend.  Dispatch on ``cfg.modality`` ("lm" is the
+default for ArchConfig) when a tool accepts both.
+"""
 from . import (
     internvl2_26b, gemma3_12b, nemotron_4_340b, qwen15_4b, phi3_medium_14b,
     jamba_v01_52b, granite_moe_3b, kimi_k2_1t, hubert_xlarge, rwkv6_3b,
+    vscnn_vgg16, vscnn_resnet18,
 )
 from .base import ArchConfig, LayerSpec, Segment, ShapeSpec, SparsityConfig, SHAPES
 
@@ -12,12 +20,26 @@ _MODULES = [
 
 REGISTRY = {m.CONFIG.name: m.CONFIG for m in _MODULES}
 
+# CNN serving archs (VSCNN): separate registry so LM-only iterators
+# (train, dryrun, models smoke) keep seeing homogeneous ArchConfigs.
+CNN_REGISTRY = {m.CONFIG.name: m.CONFIG
+                for m in [vscnn_vgg16, vscnn_resnet18]}
 
-def get_config(name: str) -> ArchConfig:
-    if name not in REGISTRY:
-        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
-    return REGISTRY[name]
+
+def get_config(name: str):
+    if name in REGISTRY:
+        return REGISTRY[name]
+    if name in CNN_REGISTRY:
+        return CNN_REGISTRY[name]
+    raise KeyError(f"unknown arch {name!r}; have "
+                   f"{sorted(REGISTRY) + sorted(CNN_REGISTRY)}")
 
 
 def list_archs() -> list[str]:
+    """LM (token-input) archs only — the train/dryrun iteration set."""
     return sorted(REGISTRY)
+
+
+def list_cnn_archs() -> list[str]:
+    """CNN serving archs (image-input, `CNNServer`-servable)."""
+    return sorted(CNN_REGISTRY)

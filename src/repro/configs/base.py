@@ -72,6 +72,7 @@ class ArchConfig:
     d_ff: int
     vocab: int
     segments: tuple[Segment, ...]
+    modality: str = "lm"              # serving dispatch; CNN configs say "cnn"
     moe: MoEConfig | None = None
     activation: str = "swiglu"
     head_dim_override: int | None = None

@@ -11,11 +11,15 @@ from repro.core.accel_model import PEConfig, PE_4_14_3, PE_8_7_3
 @dataclasses.dataclass(frozen=True)
 class VSCNNConfig:
     name: str = "vscnn-vgg16"
+    modality: str = "cnn"           # servable arch: image requests, not tokens
     image_size: int = 224
     num_classes: int = 1000
     weight_density: float = 0.235   # paper: 23.5% after vector pruning
     vk: int = 32                    # TPU kernel vector length (K-tile)
     vn: int = 128                   # output strip width
+    # the Flatten head ties fc1's fan-in to image_size: serving batches must
+    # pad every image up to exactly (image_size, image_size)
+    fixed_image_size: bool = True
     pe_configs: tuple[PEConfig, ...] = (PE_4_14_3, PE_8_7_3)
     # paper-reported reference points (Figs 12/13, §IV)
     paper_speedup: tuple[float, ...] = (1.871, 1.93)
@@ -24,6 +28,11 @@ class VSCNNConfig:
 
     def reduce(self) -> "VSCNNConfig":
         return dataclasses.replace(self, image_size=32, num_classes=16)
+
+    def build(self):
+        """The servable network: `models.graph.SparseNet` for this config."""
+        from repro.models.graph import build_vgg16
+        return build_vgg16(self.num_classes, image_size=self.image_size)
 
 
 CONFIG = VSCNNConfig()

@@ -1,0 +1,128 @@
+"""Model-agnostic lockstep scheduler: queue, batch bucketing, slot
+retirement, backfill.
+
+The scheduler owns *when* things run — admission from the queue, bucketing
+requests that may share a batch, the slot lifecycle (live -> retired ->
+backfilled) — and a backend owns *what* runs (the model math).  The LM
+prefill/decode stack and the CNN `SparseNet.apply` path both plug in here
+(`launch.serve.LMBackend` / `launch.serve.CNNBackend`), so retirement and
+backfill are one tested code path instead of per-model loop bodies.
+
+Backend protocol (duck-typed)
+-----------------------------
+  bucket_key(req) -> hashable
+      Requests sharing a key may share a lockstep batch (LM: prompt-length
+      bucket; CNN: padded image shape).
+  sort_key(req) -> sortable
+      Admission order within a bucket (LM: longest prompt first, so every
+      later backfill fits the already-grown context).
+  context() -> context manager
+      Entered around one whole lockstep run (mesh/sharding scope).
+  start(reqs, width) -> (state, emissions | None)
+      Admit the first wave into a width-slot batch (LM: prefill, emitting
+      each slot's first token; CNN: nothing to emit before the first step).
+  step(state, slots) -> (state, emissions)
+      One lockstep step over all slots; ``slots`` is the width-long list of
+      in-flight requests (None = idle lane).  Emissions is per-slot.
+  append(req, emission) -> bool
+      Record one emission on the request; True means the request finished
+      (EOS, token budget, or — for one-shot image requests — always).
+  can_backfill(state, req) -> bool
+      May ``req`` join this in-flight run?  (LM: its prompt fits the
+      current context length and capacity; CNN: same shape bucket.)
+  backfill(state, slot, req) -> (state, emission | None)
+      Admit ``req`` into freed slot ``slot`` mid-run (LM: prefill padded to
+      the current context and merge its cache rows into the live batch).
+  finish(state) -> dict
+      Backend-specific stats merged into the run's stats dict.
+
+A finished request frees its slot *immediately*: the scheduler scans the
+bucket queue first-fit and backfills in the same delivery pass, chaining if
+the newcomer itself finishes instantly (e.g. ``max_new=1``: its admission
+emission already completes it).  A run ends when every slot is idle; a
+bucket's leftover requests that never fit an in-flight run (capacity,
+context length) get a fresh lockstep run of their own.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+__all__ = ["LockstepScheduler"]
+
+
+class LockstepScheduler:
+    """Generic lockstep serving loop over a pluggable model backend."""
+
+    def __init__(self, backend, *, batch: int):
+        assert batch >= 1
+        self.backend = backend
+        self.batch = batch
+
+    def serve(self, requests: list) -> list[dict]:
+        """Bucket the queue, then run lockstep batches until it drains.
+
+        Returns one stats dict per lockstep run (see `run_lockstep`).
+        """
+        buckets: dict = {}
+        for r in requests:
+            buckets.setdefault(self.backend.bucket_key(r), []).append(r)
+        stats = []
+        for queue in buckets.values():
+            queue.sort(key=self.backend.sort_key)
+            while queue:
+                stats.append(self.run_lockstep(queue))
+        return stats
+
+    def run_lockstep(self, queue: list) -> dict:
+        """One lockstep run: admit up to ``batch`` requests, step until every
+        slot retires, backfilling freed slots from ``queue`` (consumed in
+        place).  Stats: steps, finished, backfills, emissions, start_s,
+        run_s, plus whatever `backend.finish` adds.
+        """
+        be = self.backend
+        assert queue, "run_lockstep needs at least one request"
+        width = self.batch
+        admitted = [queue.pop(0) for _ in range(min(width, len(queue)))]
+        slots: list = admitted + [None] * (width - len(admitted))
+        steps = finished = backfills = emitted = 0
+        ctx = getattr(be, "context", None)
+        with (ctx() if ctx else contextlib.nullcontext()):
+            t0 = time.time()
+            state, emis = be.start(admitted, width)
+            start_s = time.time() - t0
+            t1 = time.time()
+            while True:
+                for j in range(width):
+                    req = slots[j]
+                    e = None if emis is None else emis[j]
+                    while req is not None and e is not None:
+                        done = be.append(req, e)
+                        emitted += 1
+                        e = None
+                        if not done:
+                            break
+                        finished += 1
+                        req = None
+                        for qi, cand in enumerate(queue):
+                            if be.can_backfill(state, cand):
+                                req = queue.pop(qi)
+                                backfills += 1
+                                state, e = be.backfill(state, j, req)
+                                break
+                    slots[j] = req
+                if all(s is None for s in slots):
+                    break
+                state, emis = be.step(state, slots)
+                steps += 1
+            run_s = time.time() - t1
+        out = {
+            "steps": steps,
+            "finished": finished,
+            "backfills": backfills,
+            "emissions": emitted,
+            "start_s": start_s,
+            "run_s": run_s,
+        }
+        out.update(be.finish(state) or {})
+        return out

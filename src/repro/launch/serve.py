@@ -1,14 +1,35 @@
-"""Batched inference driver: continuous-batching style serving loop.
+"""Model-agnostic batched serving: one lockstep scheduler, two backends.
 
-Runs end-to-end on CPU with reduced configs; the same prefill/decode jits
-lower on the production mesh (that is what decode_32k / long_500k dry-run
-cells prove).  Requests arrive with different prompt lengths; the scheduler
-left-pads to the batch bucket, prefills once, then decodes the whole batch
-in lockstep, retiring sequences that emit EOS and backfilling from the
-queue (slot reuse — the KV cache is donated and updated in place).
+`launch.scheduler.LockstepScheduler` owns the queue, batch bucketing, slot
+retirement and backfill; this module plugs in the model math:
 
-Usage (CPU example):
+* `LMBackend` / `Server` — the production prefill/decode jits with working
+  continuous batching.  A sequence retires the moment it emits ``eos_id``
+  (or exhausts its ``max_new`` budget) and its slot is backfilled from the
+  queue in the same run: the newcomer is prefilled left-padded to the
+  current context length and its cache rows are merged into the live batch
+  (the KV/state cache is donated and updated in place).  A uniform batch
+  with no EOS spends exactly ``max_new - 1`` decode steps — the prefill
+  emits each slot's first token, so there is no trailing wasted decode.
+  Admission prompt lengths are bucketed (``len_bucket``) so first-wave
+  prefill compile shapes stay bounded; a backfill prefill is shaped by the
+  exact current context length (positions must line up), so it compiles
+  per distinct retirement step — see the ROADMAP serving follow-ups.
+
+* `CNNBackend` / `CNNServer` — CNN inference traffic through
+  `SparseNet.apply`: requests carry images, batches pad/bucket on image
+  shape, every request finishes in one lockstep step, and freed slots are
+  refilled from the queue so the compiled batch shape is reused wave after
+  wave.  A jit cache keyed on (net, density, impl, batch bucket) — see
+  `models.graph.BatchedApply` — keeps recompiles off the hot path.
+
+Both run end-to-end on CPU with reduced configs; the LM jits are the same
+step functions the decode_32k / long_500k dry-run cells lower on the
+production mesh.
+
+Usage (CPU examples):
   python -m repro.launch.serve --arch rwkv6-3b --requests 16 --tokens 32
+  python -m repro.launch.serve --cnn vscnn-vgg16 --requests 16 --batch 8
 """
 from __future__ import annotations
 
@@ -21,25 +42,151 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.mesh import make_local_mesh
+from repro.launch.scheduler import LockstepScheduler
 from repro.models import transformer as tfm
 from repro.models.layers import init_params
-from repro.launch.mesh import make_local_mesh
 from repro.parallel import sharding as shd
 
-__all__ = ["Server", "main"]
+__all__ = [
+    "Request", "ImageRequest", "LMBackend", "CNNBackend",
+    "Server", "CNNServer", "random_prompt_lengths", "main",
+]
+
+
+def _round_up(n: int, m: int) -> int:
+    return -(-n // m) * m
 
 
 @dataclasses.dataclass
 class Request:
+    """One LM generation request."""
+
     rid: int
     prompt: np.ndarray           # (L,) int32
     max_new: int
     out: list = dataclasses.field(default_factory=list)
 
 
+@dataclasses.dataclass
+class ImageRequest:
+    """One CNN inference request."""
+
+    rid: int
+    image: np.ndarray            # (H, W, C) float
+    max_new: int = 1             # one-shot: a single emission finishes it
+    out: list = dataclasses.field(default_factory=list)  # [predicted class]
+    logits: np.ndarray | None = None
+
+
+# --------------------------------------------------------------------------
+# LM backend: prefill/decode lockstep with EOS retirement + cache-merge
+# backfill
+# --------------------------------------------------------------------------
+
+class LMBackend:
+    """Continuous-batching backend over the transformer prefill/decode jits.
+
+    Backfill prefills the newcomer at the full batch width (idle lanes
+    zeroed) and merges only its cache rows: the wasted lanes buy two things
+    — the prefill compile shape family stays the same as admission's, and a
+    backfilled request computes bit-identically to the same request served
+    alone at that context length (regression-tested).
+    """
+
+    def __init__(self, cfg, params, mesh, *, capacity: int,
+                 eos_id: int | None = None, len_bucket: int = 16):
+        self.cfg = cfg
+        self.params = params
+        self.mesh = mesh
+        self.capacity = capacity
+        self.eos_id = eos_id
+        self.len_bucket = max(1, len_bucket)
+        self._prefill = jax.jit(
+            lambda p, b: tfm.prefill(p, b, cfg, capacity=capacity))
+        self._decode = jax.jit(
+            lambda p, c, t, pos: tfm.decode_step(p, c, t, pos, cfg),
+            donate_argnums=(1,))
+        # scatter one prefilled request's cache rows into the live batch;
+        # cache leaves are (repeat, batch, ...) so batch is axis 1
+        self._merge = jax.jit(
+            lambda caches, new, j: jax.tree.map(
+                lambda c, n: c.at[:, j].set(n[:, j]), caches, new),
+            donate_argnums=(0,))
+
+    # -- scheduler protocol -------------------------------------------------
+
+    def bucket_key(self, req: Request):
+        return _round_up(max(len(req.prompt), 1), self.len_bucket)
+
+    def sort_key(self, req: Request):
+        # longest prompts first: every later backfill then fits the
+        # already-grown context (can_backfill below)
+        return -len(req.prompt)
+
+    def context(self):
+        return shd.use_mesh(self.mesh, shd.SERVE_RULES)
+
+    def start(self, requests: list[Request], width: int):
+        lens = [len(r.prompt) for r in requests]
+        max_len = _round_up(max(max(lens), 1), self.len_bucket)
+        if max_len >= self.capacity:
+            raise ValueError(
+                f"padded prompt length {max_len} >= capacity {self.capacity}")
+        toks = np.zeros((width, max_len), np.int32)
+        for i, r in enumerate(requests):  # left-pad
+            toks[i, max_len - len(r.prompt):] = r.prompt
+        logits, caches = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)})
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        state = {"caches": caches, "nxt": nxt, "len": max_len, "i": 0}
+        first = np.asarray(nxt[:, 0])
+        emis = [int(first[j]) if j < len(requests) else None
+                for j in range(width)]
+        return state, emis
+
+    def step(self, state, slots):
+        logits, caches = self._decode(
+            self.params, state["caches"], state["nxt"],
+            jnp.int32(state["len"] + state["i"]))
+        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        state.update(caches=caches, nxt=nxt, i=state["i"] + 1)
+        toks = np.asarray(nxt[:, 0])
+        return state, [int(toks[j]) for j in range(len(slots))]
+
+    def can_backfill(self, state, req: Request) -> bool:
+        cur = state["len"] + state["i"]
+        return (len(req.prompt) <= cur
+                and cur + req.max_new <= self.capacity)
+
+    def backfill(self, state, slot: int, req: Request):
+        cur = state["len"] + state["i"]
+        width = int(state["nxt"].shape[0])
+        toks = np.zeros((width, cur), np.int32)
+        toks[slot, cur - len(req.prompt):] = req.prompt
+        logits, caches1 = self._prefill(
+            self.params, {"tokens": jnp.asarray(toks)})
+        tok = int(jnp.argmax(logits[slot], -1))
+        state["caches"] = self._merge(state["caches"], caches1, slot)
+        state["nxt"] = state["nxt"].at[slot, 0].set(tok)
+        return state, tok
+
+    def append(self, req: Request, tok: int) -> bool:
+        req.out.append(tok)
+        if self.eos_id is not None and tok == self.eos_id:
+            return True
+        return len(req.out) >= req.max_new
+
+    def finish(self, state) -> dict:
+        jax.block_until_ready(state["nxt"])
+        return {}
+
+
 class Server:
+    """Batched LM serving: prefill/decode behind the lockstep scheduler."""
+
     def __init__(self, cfg, *, batch: int, capacity: int, seed: int = 0,
-                 mesh=None):
+                 mesh=None, eos_id: int | None = None, len_bucket: int = 16):
         assert cfg.embed_inputs, "serving driver expects token-input archs"
         self.cfg = cfg
         self.batch = batch
@@ -48,93 +195,216 @@ class Server:
         with shd.use_mesh(self.mesh, shd.SERVE_RULES):
             self.params = init_params(
                 tfm.lm_schema(cfg), jax.random.PRNGKey(seed), cfg.dtype)
-        self._prefill = jax.jit(
-            lambda p, b: tfm.prefill(p, b, cfg, capacity=capacity))
-        self._decode = jax.jit(
-            lambda p, c, t, pos: tfm.decode_step(p, c, t, pos, cfg),
-            donate_argnums=(1,))
+        self.backend = LMBackend(cfg, self.params, self.mesh,
+                                 capacity=capacity, eos_id=eos_id,
+                                 len_bucket=len_bucket)
+        self.scheduler = LockstepScheduler(self.backend, batch=batch)
 
-    def run_batch(self, requests: list[Request]) -> dict:
-        """Prefill + decode one lockstep batch. Returns timing stats."""
-        cfg = self.cfg
-        assert len(requests) <= self.batch
-        lens = [len(r.prompt) for r in requests]
-        max_len = max(lens)
-        toks = np.zeros((self.batch, max_len), np.int32)
-        for i, r in enumerate(requests):  # left-pad
-            toks[i, max_len - len(r.prompt):] = r.prompt
-        with shd.use_mesh(self.mesh, shd.SERVE_RULES):
-            t0 = time.time()
-            logits, caches = self._prefill(
-                self.params, {"tokens": jnp.asarray(toks)})
-            logits.block_until_ready()
-            t_prefill = time.time() - t0
-            nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            max_new = max(r.max_new for r in requests)
-            live = np.array([True] * len(requests) +
-                            [False] * (self.batch - len(requests)))
-            t1 = time.time()
-            steps = 0
-            for i in range(max_new):
-                for j, r in enumerate(requests):
-                    if live[j] and len(r.out) < r.max_new:
-                        r.out.append(int(nxt[j, 0]))
-                    elif live[j]:
-                        live[j] = False  # retired; slot idles until backfill
-                if not live.any():
-                    break
-                logits, caches = self._decode(
-                    self.params, caches, nxt, jnp.int32(max_len + i))
-                nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-                steps += 1
-            jax.block_until_ready(nxt)
-            t_decode = time.time() - t1
-        new_tokens = sum(len(r.out) for r in requests)
+    @staticmethod
+    def _legacy_stats(s: dict) -> dict:
         return {
-            "prefill_s": t_prefill,
-            "decode_s": t_decode,
-            "decode_steps": steps,
-            "new_tokens": new_tokens,
-            "decode_tok_s": new_tokens / max(t_decode, 1e-9),
+            "prefill_s": s["start_s"],
+            "decode_s": s["run_s"],
+            "decode_steps": s["steps"],
+            "new_tokens": s["emissions"],
+            "decode_tok_s": s["emissions"] / max(s["run_s"], 1e-9),
+            "finished": s["finished"],
+            "backfills": s["backfills"],
         }
 
-    def serve(self, requests: list[Request]) -> list[dict]:
-        """Bucket the queue into lockstep batches (continuous batching lite)."""
-        stats = []
+    def run_batch(self, requests: list[Request]) -> dict:
+        """One lockstep run: the first ``batch`` requests are admitted, the
+        rest backfill retired slots.  Returns timing stats.  Raises if a
+        request can never join this run (capacity/context limits) — use
+        `serve`, which gives leftovers a fresh run, for the general case."""
         queue = list(requests)
-        while queue:
-            batch, queue = queue[: self.batch], queue[self.batch:]
-            stats.append(self.run_batch(batch))
+        stats = self.scheduler.run_lockstep(queue)
+        if queue:
+            raise ValueError(
+                f"{len(queue)} request(s) could not backfill into this "
+                f"lockstep run (capacity/context limits); use serve()")
+        return self._legacy_stats(stats)
+
+    def serve(self, requests: list[Request]) -> list[dict]:
+        """Bucket the queue by prompt length, then run lockstep batches with
+        retirement + backfill until it drains (continuous batching)."""
+        return [self._legacy_stats(s)
+                for s in self.scheduler.serve(list(requests))]
+
+
+# --------------------------------------------------------------------------
+# CNN backend: SparseNet.apply on padded image batches
+# --------------------------------------------------------------------------
+
+class CNNBackend:
+    """One-shot image backend: a request finishes in a single lockstep step.
+
+    Slot reuse across waves is the batch-reuse story — the compiled
+    (width, H, W, C) executable from `models.graph.BatchedApply` serves
+    every wave of a bucket.  ``image_size`` pins the bucket to the net's
+    fixed input (Flatten-head nets like VGG); when None the bucket pads
+    each image's H/W up to ``pad_multiple`` (size-agnostic nets like the
+    GAP-headed ResNets).
+    """
+
+    def __init__(self, net, params, *, sparse=None, impl: str = "jnp",
+                 density: float | None = None, image_size: int | None = None,
+                 pad_multiple: int = 8):
+        from repro.models.graph import BatchedApply
+        self.image_size = image_size
+        self.pad_multiple = pad_multiple
+        self.apply = BatchedApply(net, params, sparse=sparse, impl=impl,
+                                  key=(density,))
+
+    # -- scheduler protocol -------------------------------------------------
+
+    def bucket_key(self, req: ImageRequest):
+        h, w, c = req.image.shape
+        if self.image_size is not None:
+            if max(h, w) > self.image_size:
+                raise ValueError(
+                    f"image {h}x{w} exceeds the net's fixed input size "
+                    f"{self.image_size}")
+            return (self.image_size, self.image_size, c)
+        m = self.pad_multiple
+        return (_round_up(h, m), _round_up(w, m), c)
+
+    def sort_key(self, req: ImageRequest):
+        return req.rid  # arrival order; all images in a bucket are equal
+
+    def start(self, requests: list[ImageRequest], width: int):
+        return {"width": width, "bucket": self.bucket_key(requests[0])}, None
+
+    def step(self, state, slots):
+        hb, wb, c = state["bucket"]
+        x = np.zeros((state["width"], hb, wb, c), np.float32)
+        for j, r in enumerate(slots):
+            if r is not None:
+                h, w, _ = r.image.shape
+                x[j, :h, :w] = r.image
+        y = np.asarray(self.apply(jnp.asarray(x)))
+        return state, [y[j] if slots[j] is not None else None
+                       for j in range(state["width"])]
+
+    def can_backfill(self, state, req: ImageRequest) -> bool:
+        return self.bucket_key(req) == state["bucket"]
+
+    def backfill(self, state, slot: int, req: ImageRequest):
+        return state, None  # computed on the next lockstep step
+
+    def append(self, req: ImageRequest, logits) -> bool:
+        req.logits = np.asarray(logits)
+        req.out.append(int(req.logits.argmax()))
+        return True
+
+    def finish(self, state) -> dict:
+        return {"compiles": self.apply.compiles}
+
+
+class CNNServer:
+    """Batched CNN serving: `SparseNet.apply` behind the lockstep scheduler.
+
+    ``cfg`` is a VSCNN config (`configs.vscnn_vgg16` / `vscnn_resnet18`):
+    ``cfg.build()`` gives the `SparseNet`, ``cfg.weight_density`` the
+    default pruning point.  ``sparse=False`` serves the dense jnp path (the
+    XLA conv baseline the benchmarks compare against).
+    """
+
+    def __init__(self, cfg, *, batch: int, impl: str = "jnp",
+                 density: float | None = None, sparse: bool = True,
+                 seed: int = 0, pad_multiple: int = 8):
+        self.cfg = cfg
+        self.net = cfg.build()
+        self.params = init_params(
+            self.net.schema(), jax.random.PRNGKey(seed), jnp.float32)
+        self.density = cfg.weight_density if density is None else density
+        self.sparse = None
+        if sparse:
+            self.sparse, _ = self.net.sparsify(
+                self.params, self.density, vk=cfg.vk, vn=cfg.vn)
+        image_size = cfg.image_size if cfg.fixed_image_size else None
+        self.backend = CNNBackend(
+            self.net, self.params, sparse=self.sparse, impl=impl,
+            density=self.density if sparse else None,
+            image_size=image_size, pad_multiple=pad_multiple)
+        self.scheduler = LockstepScheduler(self.backend, batch=batch)
+
+    def serve(self, requests: list[ImageRequest]) -> list[dict]:
+        stats = self.scheduler.serve(list(requests))
+        for s in stats:
+            s["images"] = s.pop("emissions")
+            s["images_per_s"] = s["images"] / max(s["run_s"], 1e-9)
         return stats
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+def random_prompt_lengths(rng, n: int, max_len: int, lo: int = 8) -> list[int]:
+    """n prompt lengths in [lo', max_len) with lo' clamped so the range is
+    never empty — ``--prompt-len 8`` used to crash on integers(8, 8)."""
+    if max_len < 2:
+        raise ValueError(f"--prompt-len must be >= 2, got {max_len}")
+    lo = max(1, min(lo, max_len - 1))
+    return [int(rng.integers(lo, max_len)) for _ in range(n)]
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None, help="LM arch to serve")
+    ap.add_argument("--cnn", default=None,
+                    help="CNN arch to serve (e.g. vscnn-vgg16) instead of "
+                         "an LM")
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--eos-id", type=int, default=None)
     args = ap.parse_args()
+    if (args.arch is None) == (args.cnn is None):
+        ap.error("choose exactly one of --arch (LM) or --cnn")
+
+    rng = np.random.default_rng(0)
+    if args.cnn:
+        cfg = get_config(args.cnn).reduce()
+        if getattr(cfg, "modality", "lm") != "cnn":
+            ap.error(f"{cfg.name} is an LM arch; serve it with --arch")
+        s = cfg.image_size
+        reqs = [ImageRequest(
+                    rid=i,
+                    image=rng.standard_normal((s, s, 3)).astype(np.float32))
+                for i in range(args.requests)]
+        srv = CNNServer(cfg, batch=args.batch)
+        t0 = time.time()
+        stats = srv.serve(reqs)
+        wall = time.time() - t0
+        tot = sum(st["images"] for st in stats)
+        print(f"served {tot} images in {len(stats)} lockstep runs, "
+              f"{tot / max(wall, 1e-9):.1f} img/s "
+              f"(density {srv.density}, batch {args.batch})")
+        for st in stats:
+            print("  ", {k: (round(v, 4) if isinstance(v, float) else v)
+                         for k, v in st.items()})
+        return
 
     cfg = get_config(args.arch).reduce()
-    rng = np.random.default_rng(0)
+    if getattr(cfg, "modality", "lm") != "lm":
+        ap.error(f"{cfg.name} is a CNN arch; serve it with --cnn")
+    lens = random_prompt_lengths(rng, args.requests, args.prompt_len)
     reqs = [
-        Request(
-            rid=i,
-            prompt=rng.integers(0, cfg.vocab,
-                                rng.integers(8, args.prompt_len),
-                                dtype=np.int32),
-            max_new=args.tokens,
-        )
+        Request(rid=i,
+                prompt=rng.integers(0, cfg.vocab, lens[i], dtype=np.int32),
+                max_new=args.tokens)
         for i in range(args.requests)
     ]
     srv = Server(cfg, batch=args.batch,
-                 capacity=args.prompt_len + args.tokens + 8)
+                 capacity=_round_up(args.prompt_len, 16) + args.tokens + 8,
+                 eos_id=args.eos_id)
     stats = srv.serve(reqs)
     tot_new = sum(s["new_tokens"] for s in stats)
     tot_dec = sum(s["decode_s"] for s in stats)
-    print(f"served {len(reqs)} requests in {len(stats)} batches: "
+    print(f"served {len(reqs)} requests in {len(stats)} lockstep runs: "
           f"{tot_new} tokens, {tot_new/max(tot_dec,1e-9):.1f} tok/s decode")
     for s in stats:
         print("  ", {k: (round(v, 4) if isinstance(v, float) else v)

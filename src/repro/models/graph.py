@@ -66,7 +66,7 @@ from .layers import P
 
 __all__ = [
     "Conv", "FC", "Classifier", "Pool", "ResidualAdd", "Save", "Flatten",
-    "SparseNet", "SparseConv", "SparseFC",
+    "SparseNet", "SparseConv", "SparseFC", "BatchedApply",
     "sparse_conv_from_dense", "apply_sparse_conv", "apply_sparse_fc",
     "net_schema", "net_apply", "sparsify", "collect_conv_traffic",
     "build_vgg16", "build_resnet18", "build_resnet_stem",
@@ -161,6 +161,14 @@ class SparseNet:
                  vn: int = 128, include_fc: bool = True):
         return sparsify(self, params, density, vk=vk, vn=vn,
                         include_fc=include_fc)
+
+    def batched_apply(self, params, *, sparse=None, impl: str = "jnp",
+                      key: tuple = (), cache: dict | None = None
+                      ) -> "BatchedApply":
+        """Serving entry point: jit-compiled apply with a compile cache
+        keyed on (net, weight-set key, impl, batch bucket)."""
+        return BatchedApply(self, params, sparse=sparse, impl=impl, key=key,
+                            cache=cache if cache is not None else {})
 
     def conv_layers(self) -> list[Conv]:
         return [l for l in self.layers if isinstance(l, Conv)]
@@ -442,6 +450,50 @@ def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "jnp",
         else:
             raise TypeError(f"unknown layer spec: {l!r}")
     return x
+
+
+@dataclasses.dataclass
+class BatchedApply:
+    """Batched serving entry point: `net_apply` behind a jit-compile cache.
+
+    One compiled executable per (net, weight set, impl, input-shape
+    bucket): the serving scheduler pads request batches onto a small set of
+    shape buckets, so steady-state traffic never recompiles — the cache hit
+    is the hot path.  The key includes the identity of the closed-over
+    params/sparse trees (two nets sharing a name never alias each other's
+    weights); ``key`` adds a readable variant tag (e.g. ``(density,)``) so
+    one *shared* ``cache`` dict can hold several sparsified nets side by
+    side.  By default each instance gets its own cache.
+    """
+
+    net: SparseNet
+    params: dict
+    sparse: dict | None = None
+    impl: str = "jnp"
+    key: tuple = ()
+    cache: dict = dataclasses.field(default_factory=dict)
+
+    def cache_key(self, shape) -> tuple:
+        # id() is stable and unique here: self (and every cached closure)
+        # keeps the weight trees alive
+        return (self.net.name, id(self.params), id(self.sparse), self.key,
+                self.impl, tuple(shape))
+
+    def __call__(self, x):
+        k = self.cache_key(x.shape)
+        fn = self.cache.get(k)
+        if fn is None:
+            net, params = self.net, self.params
+            sparse, impl = self.sparse, self.impl
+            fn = jax.jit(lambda xx: net_apply(net, params, xx, sparse=sparse,
+                                              impl=impl))
+            self.cache[k] = fn
+        return fn(x)
+
+    @property
+    def compiles(self) -> int:
+        """Distinct compiled entries in the cache (all variants)."""
+        return len(self.cache)
 
 
 def collect_conv_traffic(net: SparseNet, params, x):

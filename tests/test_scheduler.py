@@ -1,0 +1,150 @@
+"""Lockstep scheduler unit tests (no jax): bucketing, retirement order,
+backfill (including instant-finish chaining), can_backfill refusal.
+
+A scripted pure-python backend stands in for the model: each request
+carries the emission stream its slot will produce, so slot lifecycle logic
+is pinned independently of prefill/decode numerics.
+"""
+import dataclasses
+
+from repro.launch.scheduler import LockstepScheduler
+
+
+@dataclasses.dataclass
+class Req:
+    rid: int
+    script: list            # emissions this request's slot produces, in order
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+
+
+class ScriptBackend:
+    """Emits each request's scripted stream; finishes on eos or max_new."""
+
+    def __init__(self, *, eos=None, len_bucket=4, admit=None):
+        self.eos = eos
+        self.len_bucket = len_bucket
+        self.admit = admit or (lambda req: True)  # can_backfill predicate
+        self.started = []                          # audit: admission waves
+
+    def bucket_key(self, req):
+        return -(-len(req.script) // self.len_bucket)
+
+    def sort_key(self, req):
+        return -len(req.script)
+
+    def start(self, reqs, width):
+        self.started.append([r.rid for r in reqs])
+        state = {"cur": [None] * width}
+        emis = [None] * width
+        for j, r in enumerate(reqs):
+            state["cur"][j] = iter(r.script)
+            emis[j] = next(state["cur"][j])
+        return state, emis
+
+    def step(self, state, slots):
+        return state, [next(state["cur"][j], 0) if r is not None else None
+                       for j, r in enumerate(slots)]
+
+    def can_backfill(self, state, req):
+        return self.admit(req)
+
+    def backfill(self, state, slot, req):
+        state["cur"][slot] = iter(req.script)
+        return state, next(state["cur"][slot])
+
+    def append(self, req, e):
+        req.out.append(e)
+        if self.eos is not None and e == self.eos:
+            return True
+        return len(req.out) >= req.max_new
+
+    def finish(self, state):
+        return {"custom": 1}
+
+
+def _sched(be, batch):
+    return LockstepScheduler(be, batch=batch)
+
+
+class TestLockstep:
+    def test_exact_steps_no_trailing_step(self):
+        """Uniform batch: start emits token 1, so max_new tokens need
+        exactly max_new - 1 steps — the off-by-one regression pin."""
+        be = ScriptBackend()
+        reqs = [Req(i, list(range(10, 16)), 4) for i in range(2)]
+        stats = _sched(be, 2).serve(reqs)
+        assert len(stats) == 1
+        s = stats[0]
+        assert s["steps"] == 3
+        assert s["emissions"] == 8 and s["finished"] == 2
+        assert all(r.out == [10, 11, 12, 13] for r in reqs)
+        assert s["custom"] == 1  # backend.finish merged in
+
+    def test_retired_slot_backfilled_same_run(self):
+        """A short sequence frees its slot for a queued request within the
+        same lockstep run."""
+        be = ScriptBackend()
+        reqs = [Req(0, [1] * 8, 2), Req(1, [2] * 8, 6), Req(2, [3] * 8, 3)]
+        stats = _sched(be, 2).serve(reqs)
+        assert len(stats) == 1
+        s = stats[0]
+        assert s["backfills"] == 1 and s["finished"] == 3
+        assert [len(r.out) for r in reqs] == [2, 6, 3]
+        # r0 retires after step 1; r2 rides its slot; the run is bounded by
+        # the longest request: 6 tokens -> 5 steps
+        assert s["steps"] == 5
+        assert s["emissions"] == 11
+
+    def test_eos_retires_early(self):
+        be = ScriptBackend(eos=99)
+        r = Req(0, [5, 99, 7, 7], 4)
+        stats = _sched(be, 1).serve([r])
+        assert r.out == [5, 99]          # eos recorded, then retired
+        assert stats[0]["steps"] == 1    # no steps wasted past the eos
+
+    def test_backfill_chain_instant_finish(self):
+        """A backfilled max_new=1 request finishes on its admission emission
+        and must chain straight into the next backfill."""
+        be = ScriptBackend()
+        reqs = [Req(0, [1, 1], 2), Req(1, [2], 1), Req(2, [3, 3], 2)]
+        stats = _sched(be, 1).serve(reqs)
+        assert len(stats) == 1
+        s = stats[0]
+        assert s["backfills"] == 2 and s["finished"] == 3
+        assert reqs[1].out == [2] and reqs[2].out == [3, 3]
+        assert s["steps"] == 2  # r0: 1 step; r2: 1 step; r1 rides admissions
+
+    def test_bucketing_splits_and_sorts(self):
+        """Different buckets never share a run; within a bucket the sort key
+        (longest first) picks the admission order."""
+        be = ScriptBackend(len_bucket=4)
+        short = [Req(0, [1] * 3, 2), Req(1, [1] * 4, 2)]   # bucket 1
+        long = [Req(2, [1] * 8, 2), Req(3, [1] * 7, 2)]    # bucket 2
+        stats = _sched(be, 2).serve([short[0], long[0], short[1], long[1]])
+        assert len(stats) == 2
+        assert be.started == [[1, 0], [2, 3]]
+
+    def test_can_backfill_refusal_spills_to_new_run(self):
+        """A request the backend refuses mid-run gets a fresh lockstep run
+        instead of being dropped."""
+        be = ScriptBackend(admit=lambda req: req.rid != 2)
+        reqs = [Req(0, [1] * 4, 2), Req(1, [2] * 4, 2), Req(2, [3] * 4, 2)]
+        stats = _sched(be, 2).serve(reqs)
+        assert len(stats) == 2
+        assert stats[0]["backfills"] == 0
+        assert [len(r.out) for r in reqs] == [2, 2, 2]
+        assert be.started == [[0, 1], [2]]
+
+    def test_first_fit_skips_refused_head(self):
+        """If the queue head doesn't fit, a later request that does is
+        backfilled (first-fit scan)."""
+        be = ScriptBackend(admit=lambda req: req.rid != 2)
+        # sort_key keeps scripted lengths equal so queue order is stable
+        reqs = [Req(0, [1] * 4, 1), Req(1, [2] * 4, 4),
+                Req(2, [3] * 4, 2), Req(3, [4] * 4, 2)]
+        stats = _sched(be, 2).serve(reqs)
+        assert len(stats) == 2
+        assert stats[0]["backfills"] == 1
+        assert be.started == [[0, 1], [2]]
+        assert len(reqs[3].out) == 2     # rid 3 rode rid 0's slot

@@ -1,0 +1,191 @@
+"""Serving backends end to end: LM continuous batching (EOS retirement,
+cache-merge backfill, exact decode-step accounting) and the batched CNN
+path through `SparseNet.apply`.
+
+The LM server is module-scoped: prefill/decode/merge jits compile once and
+every test reuses them (eos_id is restored after mutation).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import (
+    CNNServer, ImageRequest, Request, Server, random_prompt_lengths,
+)
+from repro.models import graph as G
+
+
+@pytest.fixture(scope="module")
+def lm_server():
+    cfg = get_config("rwkv6-3b").reduce()
+    # len_bucket=1: no length rounding, so tests control padding exactly
+    return Server(cfg, batch=2, capacity=32, len_bucket=1)
+
+
+def _reqs(cfg, lens_max_new, prompt_len=6, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab, prompt_len,
+                                        dtype=np.int32),
+                    max_new=mn)
+            for i, mn in enumerate(lens_max_new)]
+
+
+class TestLMServing:
+    def test_exact_decode_steps(self, lm_server):
+        """max_new tokens cost exactly max_new - 1 decodes (prefill emits
+        the first) — the trailing-decode off-by-one regression pin."""
+        reqs = _reqs(lm_server.cfg, [4, 4])
+        stats = lm_server.serve(reqs)
+        assert len(stats) == 1
+        s = stats[0]
+        assert s["decode_steps"] == 3
+        assert s["new_tokens"] == 8
+        assert all(len(r.out) == 4 for r in reqs)
+
+    def test_retirement_frees_slot_for_queued_request(self, lm_server):
+        """The headline regression: a short sequence retires mid-run and a
+        queued request is backfilled into its slot in the same lockstep
+        run — the run is bounded by the longest request, not the sum."""
+        reqs = _reqs(lm_server.cfg, [2, 6, 3])
+        stats = lm_server.serve(reqs)
+        assert len(stats) == 1           # one lockstep run serves all three
+        s = stats[0]
+        assert s["backfills"] == 1 and s["finished"] == 3
+        assert [len(r.out) for r in reqs] == [2, 6, 3]
+        assert s["decode_steps"] == 5    # max(max_new) - 1
+        assert s["new_tokens"] == 11
+
+    def test_eos_retirement(self, lm_server):
+        """A sequence retires the moment it emits eos_id, not at max_new."""
+        [probe] = _reqs(lm_server.cfg, [6], seed=3)
+        lm_server.serve([probe])
+        assert len(probe.out) == 6
+        eos = probe.out[1]               # greedy decode is deterministic
+        [req] = _reqs(lm_server.cfg, [6], seed=3)
+        lm_server.backend.eos_id = eos
+        try:
+            stats = lm_server.serve([req])
+        finally:
+            lm_server.backend.eos_id = None
+        assert req.out == probe.out[:2]  # eos recorded, then retired
+        assert stats[0]["decode_steps"] == 1
+
+    def test_backfill_cache_merge_parity(self, lm_server):
+        """A backfilled request must compute exactly what the same request
+        computes when served alone at that context length — pins the
+        prefill-and-merge cache scatter."""
+        cfg = lm_server.cfg
+        a, b = _reqs(cfg, [2, 3], seed=5)
+        one = Server(cfg, batch=1, capacity=32, len_bucket=1)
+        stats = one.serve([a, b])
+        assert stats[0]["backfills"] == 1
+        # b backfilled into slot 0 at context length 6+1: serve it alone,
+        # left-padded to the same length, on the same width-1 jits
+        b2 = Request(rid=9,
+                     prompt=np.concatenate([np.zeros(1, np.int32),
+                                            np.asarray(b.prompt)]),
+                     max_new=3)
+        one.serve([b2])
+        assert b2.out == b.out
+
+    def test_run_batch_overflow_backfills(self, lm_server):
+        """run_batch with more requests than slots serves them all via
+        backfill instead of silently dropping."""
+        reqs = _reqs(lm_server.cfg, [2, 2, 2])
+        s = lm_server.run_batch(reqs)
+        assert s["finished"] == 3 and s["backfills"] == 1
+        assert all(len(r.out) == 2 for r in reqs)
+
+    def test_run_batch_raises_on_unservable_request(self, lm_server):
+        """A request that can never join the run (token budget would
+        overflow capacity) surfaces as an error, not a silent drop."""
+        # the third request only fits via backfill, but 30 new tokens would
+        # overflow capacity 32 from any retirement point
+        reqs = _reqs(lm_server.cfg, [2, 2, 30])
+        with pytest.raises(ValueError, match="could not backfill"):
+            lm_server.run_batch(reqs)
+
+    def test_modality_dispatch_fields(self):
+        assert get_config("rwkv6-3b").modality == "lm"
+        assert get_config("vscnn-vgg16").modality == "cnn"
+        assert get_config("vscnn-resnet18").modality == "cnn"
+
+    def test_prompt_len_validation(self):
+        """--prompt-len 8 used to crash on rng.integers(8, 8)."""
+        rng = np.random.default_rng(0)
+        lens = random_prompt_lengths(rng, 20, 8)
+        assert all(1 <= n < 8 for n in lens)
+        lens = random_prompt_lengths(rng, 20, 2)
+        assert all(n == 1 for n in lens)
+        with pytest.raises(ValueError, match="prompt-len"):
+            random_prompt_lengths(rng, 4, 1)
+
+
+class TestCNNServing:
+    def test_vgg_batched_serving_parity(self):
+        """A mixed queue through SparseNet.apply with batch reuse: one
+        lockstep run, a backfilled fifth image, outputs matching the
+        direct batched apply."""
+        cfg = get_config("vscnn-vgg16").reduce()
+        srv = CNNServer(cfg, batch=4, seed=0)
+        rng = np.random.default_rng(1)
+        imgs = [rng.standard_normal((32, 32, 3)).astype(np.float32)
+                for _ in range(5)]
+        reqs = [ImageRequest(rid=i, image=im) for i, im in enumerate(imgs)]
+        stats = srv.serve(reqs)
+        assert len(stats) == 1
+        s = stats[0]
+        assert s["steps"] == 2           # wave of 4, then the backfilled 1
+        assert s["backfills"] == 1 and s["finished"] == 5
+        assert s["compiles"] == 1        # one batch bucket, one executable
+        ref = np.asarray(G.net_apply(
+            srv.net, srv.params, jnp.asarray(np.stack(imgs)),
+            sparse=srv.sparse, impl="jnp"))
+        for i, r in enumerate(reqs):
+            assert r.logits is not None and r.logits.shape == (16,)
+            np.testing.assert_allclose(r.logits, ref[i], rtol=1e-3,
+                                       atol=1e-3)
+            assert r.out == [int(ref[i].argmax())]
+
+    def test_resnet_shape_buckets(self):
+        """A size-agnostic net serves mixed image sizes as separate shape
+        buckets, padding within each."""
+        cfg = get_config("vscnn-resnet18").reduce()
+        srv = CNNServer(cfg, batch=2, density=0.5, seed=0)
+        rng = np.random.default_rng(2)
+        reqs = [ImageRequest(rid=i,
+                             image=rng.standard_normal((s, s, 3))
+                                      .astype(np.float32))
+                for i, s in enumerate([16, 24, 16])]
+        stats = srv.serve(reqs)
+        assert len(stats) == 2           # buckets (16,16,3) and (24,24,3)
+        assert sum(s["finished"] for s in stats) == 3
+        assert all(len(r.out) == 1 for r in reqs)
+        assert srv.backend.apply.compiles == 2
+
+    def test_fixed_input_rejects_oversize(self):
+        cfg = get_config("vscnn-vgg16").reduce()   # image_size 32
+        srv = CNNServer(cfg, batch=2, seed=0)
+        big = ImageRequest(rid=0, image=np.zeros((48, 48, 3), np.float32))
+        with pytest.raises(ValueError, match="fixed input"):
+            srv.serve([big])
+
+    def test_dense_path_serves(self):
+        """sparse=False routes the same scheduler through plain XLA convs —
+        the bench_serving baseline."""
+        cfg = get_config("vscnn-vgg16").reduce()
+        srv = CNNServer(cfg, batch=2, sparse=False, seed=0)
+        rng = np.random.default_rng(3)
+        reqs = [ImageRequest(rid=i,
+                             image=rng.standard_normal((32, 32, 3))
+                                      .astype(np.float32))
+                for i in range(2)]
+        stats = srv.serve(reqs)
+        assert stats[0]["finished"] == 2
+        ref = np.asarray(G.net_apply(
+            srv.net, srv.params,
+            jnp.asarray(np.stack([r.image for r in reqs]))))
+        np.testing.assert_allclose(
+            np.stack([r.logits for r in reqs]), ref, rtol=1e-5, atol=1e-5)

@@ -325,6 +325,75 @@ class TestLegacyDelegation:
         assert _rel(out, dense) < 1e-3
 
 
+class TestBatchedApply:
+    """Batch-N parity (the serving path) and the jit compile cache."""
+
+    @staticmethod
+    def _vgg_slice():
+        """First VGG stage + head: conv-conv-pool-flatten-fc, image 8."""
+        return G.SparseNet("vgg_slice", (
+            G.Conv("c1", 3, 32), G.Conv("c2", 32, 32), G.Pool("max", 2),
+            G.Flatten(), G.Classifier("fc", 32 * 4 * 4, 16),
+        ))
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_vgg_slice_batch_matches_per_sample(self, impl, rng):
+        net = self._vgg_slice()
+        params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+        sparse, pruned = G.sparsify(net, params, 0.5)
+        x = jnp.asarray(rng.standard_normal((3, 8, 8, 3)), jnp.float32)
+        out = G.net_apply(net, params, x, sparse=sparse, impl=impl)
+        assert out.shape == (3, 16)
+        ref = G.net_apply(net, pruned, x)
+        assert _rel(out, ref) < 1e-4
+        for i in range(3):  # batching must not couple samples
+            one = G.net_apply(net, params, x[i:i + 1], sparse=sparse,
+                              impl=impl)
+            assert _rel(out[i], one[0]) < 1e-4
+
+    @pytest.mark.parametrize("impl", ["jnp", "pallas"])
+    def test_resnet_block_batch_matches_per_sample(self, impl, rng):
+        net = _block_net(32, 64, 2)
+        params = _randomize_bn(
+            init_params(net.schema(), jax.random.PRNGKey(1), jnp.float32),
+            np.random.default_rng(7))
+        sparse, pruned = G.sparsify(net, params, 0.5)
+        x = jnp.asarray(
+            np.maximum(rng.standard_normal((3, 8, 8, 32)), 0), jnp.float32)
+        out = G.net_apply(net, params, x, sparse=sparse, impl=impl)
+        ref = G.net_apply(net, pruned, x)
+        assert _rel(out, ref) < 1e-4
+        one = G.net_apply(net, params, x[1:2], sparse=sparse, impl=impl)
+        assert _rel(out[1], one[0]) < 1e-4
+
+    def test_jit_cache_one_compile_per_bucket(self, rng):
+        net = self._vgg_slice()
+        params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+        sparse, _ = G.sparsify(net, params, 0.5)
+        ap = net.batched_apply(params, sparse=sparse, key=(0.5,))
+        x4 = jnp.asarray(rng.standard_normal((4, 8, 8, 3)), jnp.float32)
+        a = ap(x4)
+        b = ap(x4)                       # same bucket: cache hit
+        assert ap.compiles == 1
+        assert _rel(a, b) == 0.0
+        ap(jnp.asarray(rng.standard_normal((2, 8, 8, 3)), jnp.float32))
+        assert ap.compiles == 2          # new batch bucket, new executable
+        ref = G.net_apply(net, params, x4, sparse=sparse)
+        assert _rel(a, ref) < 1e-5
+
+    def test_shared_cache_keys_disjoint_by_density(self, rng):
+        """One shared cache dict holds several sparsified variants."""
+        net = self._vgg_slice()
+        params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+        cache: dict = {}
+        x = jnp.asarray(rng.standard_normal((2, 8, 8, 3)), jnp.float32)
+        for d in (0.5, 0.25):
+            sparse, _ = G.sparsify(net, params, d)
+            net.batched_apply(params, sparse=sparse, key=(d,),
+                              cache=cache)(x)
+        assert len(cache) == 2
+
+
 class TestGraphCycleReports:
     def test_resnet18_per_layer_walk(self, rng):
         """VGG and ResNet share one analysis path: traffic -> per-layer

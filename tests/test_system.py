@@ -62,9 +62,15 @@ class TestServer:
                 for i in range(5)]
         srv = Server(cfg, batch=4, capacity=32)
         stats = srv.serve(reqs)
-        assert len(stats) == 2  # 5 requests / batch 4 -> 2 lockstep batches
+        # continuous batching: the fifth request backfills a retired slot,
+        # so one lockstep run serves all five (was 2 runs pre-backfill)
+        assert len(stats) == 1
+        s = stats[0]
+        assert s["backfills"] == 1 and s["finished"] == 5
+        # first wave: prefill + 5 decodes; backfilled request: 5 more
+        assert s["decode_steps"] == 10
         assert all(len(r.out) == 6 for r in reqs)
-        assert sum(s["new_tokens"] for s in stats) == 30
+        assert s["new_tokens"] == 30
 
 
 class TestVGGPipeline:
