@@ -10,12 +10,18 @@
 3. Pallas kernel allclose + grid-size-vs-density check (interpret mode).
 4. Generalized conv geometry sweep: per-(kernel, stride) speedup-vs-density
    rows for the vsconv kernel family (1x1 / 3x3 / 5x5 / 7x7, stride 1-2),
-   reporting the structural FLOP ratio and jnp-path wall clock alongside the
-   existing 3x3 numbers.
+   reporting the structural FLOP ratio, jnp-path wall clock, interpret-mode
+   parity for *both* conv input layouts (halo direct input vs row-tap
+   stack), and the modeled HBM bytes of each layout — the bandwidth story
+   is part of the benchmarked contract, not just the MAC skips.
 5. ResNet-18 per-layer speedup-vs-density (``--resnet18``): the graph
    executor + cycle model walked over every conv (residual blocks, BN
    folded), emitting a ``BENCH_resnet18.json`` artifact so CI tracks the
-   perf trajectory.
+   perf trajectory — now with per-layer bytes / arithmetic-intensity
+   columns for the halo and stack layouts.
+6. ``--gate-traffic``: CI smoke gate — runs both impls on the ResNet
+   7x7/s2 stem geometry (interpret parity) and fails unless the halo
+   path's modeled ``bytes_accessed`` is strictly below the stack path's.
 """
 from __future__ import annotations
 
@@ -108,10 +114,28 @@ CONV_GEOMETRIES = [
 ]
 
 
+def _conv_bytes(kh, kw, stride, h, w, cin, cout, vk, vn, s_steps,
+                batch: int = 4) -> dict:
+    """Modeled HBM bytes + arithmetic intensity for both conv layouts."""
+    from repro.core.accel_model import conv_layer_traffic
+
+    out = {}
+    for impl in ("halo", "stack"):
+        tr = conv_layer_traffic(
+            (batch, h, w, cin), kh=kh, kw=kw, stride=stride, cout=cout,
+            s_steps=s_steps, vk=vk, vn=vn, impl=impl)
+        out[f"bytes_{impl}"] = tr.bytes_accessed
+        out[f"ai_{impl}"] = round(tr.arithmetic_intensity, 2)
+    return out
+
+
 def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
     """Per-geometry speedup-vs-density: structural FLOP ratio (the kernel's
-    grid shrinks with density), jnp-path wall clock, and Pallas interpret
-    parity vs the oracle."""
+    grid shrinks with density), jnp-path wall clock, modeled HBM bytes for
+    the halo and stack layouts, and Pallas interpret parity of both impls
+    vs the oracle."""
+    from repro.core import conv_cin_major
+
     rng = np.random.default_rng(1)
     rows = []
     for kh, kw, stride, h, w, cin, cout, vk, vn in CONV_GEOMETRIES:
@@ -120,6 +144,8 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
             wm = rng.standard_normal((kh * kw * cin, cout)).astype(np.float32)
             wp, _ = prune_vectors_balanced(wm, density, vk, vn)
             vs = encode(jnp.asarray(wp), vk, vn)
+            if kh * kw > 1:
+                vs = conv_cin_major(vs, cin // vk)  # the serving tile order
             x = jnp.asarray(
                 np.maximum(rng.standard_normal((4, h, w, cin)), 0),
                 jnp.float32)
@@ -136,13 +162,6 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
             us = (time.time() - t0) / 5 * 1e6
             if base_us is None:
                 base_us = us  # density 1.0 reference
-            # Pallas interpret parity at the smallest density only (slow)
-            rel = None
-            if density == densities[-1]:
-                out_p = vsconv(x, vs, kh=kh, kw=kw, stride=stride)
-                ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride)
-                rel = float(np.abs(np.asarray(out_p) - np.asarray(ref)).max()
-                            / np.abs(np.asarray(ref)).max())
             row = {
                 "name": f"vsconv_{kh}x{kw}_s{stride}_density_{density}",
                 "us_per_call": round(us, 1),
@@ -150,8 +169,18 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
                 "structural_flops_vs_dense": round(flop_ratio, 4),
                 "expected": density,
             }
-            if rel is not None:
-                row["pallas_rel_err_vs_ref"] = rel
+            row.update(_conv_bytes(kh, kw, stride, h, w, cin, cout, vk, vn,
+                                   vs.nnz_per_strip))
+            # Pallas interpret parity at the smallest density only (slow):
+            # both input layouts against the oracle
+            if density == densities[-1]:
+                ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride)
+                for impl in ("halo", "stack"):
+                    out_p = vsconv(x, vs, kh=kh, kw=kw, stride=stride,
+                                   impl=impl)
+                    row[f"pallas_{impl}_rel_err_vs_ref"] = float(
+                        np.abs(np.asarray(out_p) - np.asarray(ref)).max()
+                        / np.abs(np.asarray(ref)).max())
             rows.append(row)
     return rows
 
@@ -165,10 +194,12 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
     fused), time the jnp structural forward (whole-net wall clock; CPU
     demonstrates work ∝ density, not the TPU claim), and walk the same
     graph through the accelerator cycle model for per-layer VSCNN-vs-dense
-    cycle speedups.  ``out_path`` writes the rows as a JSON artifact.
+    cycle speedups plus the DRAM traffic model for per-layer bytes /
+    arithmetic intensity under both conv input layouts (halo vs stack).
+    ``out_path`` writes the rows as a JSON artifact.
     """
     from repro.core.accel_model import PE_4_14_3, aggregate, \
-        network_cycle_reports
+        network_cycle_reports, network_traffic_reports
     from repro.models.graph import build_resnet18, collect_conv_traffic, \
         net_apply, sparsify
     from repro.models.layers import init_params
@@ -193,11 +224,14 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
         us = (time.time() - t0) / 3 * 1e6
         if base_us is None:
             base_us = us  # density 1.0 reference
-        # cycle model on the pruned weights + real forward-pass activations
+        # cycle model on the pruned weights + real forward-pass activations,
+        # DRAM traffic model on the encoded geometry
         traffic = collect_conv_traffic(net, pruned, x[:1])
         reports = network_cycle_reports(traffic, pe)
+        byte_reports = dict(network_traffic_reports(traffic, sparse))
         for name, rep in reports:
             layer = next(l for l in net.conv_layers() if l.name == name)
+            tr = byte_reports[name]
             rows.append({
                 "name": f"resnet18_{name}_density_{density}",
                 "layer": name,
@@ -208,6 +242,10 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
                 "dense_cycles": rep.dense,
                 "structural_flops_vs_dense": round(
                     sparse[name].vs.density, 4),
+                "bytes_halo": tr["halo"].bytes_accessed,
+                "bytes_stack": tr["stack"].bytes_accessed,
+                "ai_halo": round(tr["halo"].arithmetic_intensity, 2),
+                "ai_stack": round(tr["stack"].arithmetic_intensity, 2),
             })
         agg = aggregate([r for _, r in reports])
         rows.append({
@@ -219,6 +257,10 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
             "dense_cycles": agg.dense,
             "us_per_call": round(us, 1),
             "wallclock_speedup_vs_dense": round(base_us / us, 3),
+            "bytes_halo": sum(t["halo"].bytes_accessed
+                              for t in byte_reports.values()),
+            "bytes_stack": sum(t["stack"].bytes_accessed
+                               for t in byte_reports.values()),
         })
     if out_path:
         artifact = {
@@ -234,17 +276,64 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
     return rows
 
 
+def gate_traffic() -> int:
+    """CI smoke gate for the halo layout's bandwidth claim.
+
+    Runs both conv impls on the ResNet 7x7/s2 stem geometry in interpret
+    mode (allclose vs the oracle) and checks the modeled HBM bytes: the
+    halo path must be *strictly below* the stack path — at the ImageNet
+    stem size and at the reduced CI size.  Returns a process exit code.
+    """
+    from repro.core import conv_cin_major
+    from repro.core.accel_model import conv_layer_traffic
+
+    kh, kw, stride, cin, cout, vk, vn = 7, 7, 2, 8, 64, 8, 64
+    rng = np.random.default_rng(7)
+    wm = rng.standard_normal((kh * kw * cin, cout)).astype(np.float32)
+    vs = conv_cin_major(encode(jnp.asarray(wm), vk, vn), cin // vk)
+    x = jnp.asarray(
+        np.maximum(rng.standard_normal((1, 28, 28, cin)), 0), jnp.float32)
+    ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride)
+    ok = True
+    for impl in ("halo", "stack"):
+        out = vsconv(x, vs, kh=kh, kw=kw, stride=stride, impl=impl)
+        rel = float(np.abs(np.asarray(out) - np.asarray(ref)).max()
+                    / np.abs(np.asarray(ref)).max())
+        print(f"stem 7x7/s2 {impl}: rel err vs ref {rel:.2e}")
+        ok &= rel < 1e-5
+    for h in (28, 224):
+        tr = {impl: conv_layer_traffic(
+                  (1, h, h, cin), kh=kh, kw=kw, stride=stride, cout=cout,
+                  s_steps=vs.nnz_per_strip, vk=vk, vn=vn, impl=impl)
+              for impl in ("halo", "stack")}
+        ratio = tr["stack"].bytes_accessed / max(tr["halo"].bytes_accessed, 1)
+        print(f"stem 7x7/s2 @{h}: halo {tr['halo'].bytes_accessed:,} B, "
+              f"stack {tr['stack'].bytes_accessed:,} B "
+              f"(stack/halo {ratio:.2f}x)")
+        if not tr["halo"].bytes_accessed < tr["stack"].bytes_accessed:
+            print("FAIL: halo modeled bytes not strictly below stack")
+            ok = False
+    print("traffic gate:", "PASS" if ok else "FAIL")
+    return 0 if ok else 1
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--resnet18", action="store_true",
                     help="run the ResNet-18 per-layer table instead of the "
                          "kernel micro-benches")
+    ap.add_argument("--gate-traffic", action="store_true",
+                    help="CI gate: both conv impls on the 7x7/s2 stem; fail "
+                         "unless the halo path's modeled bytes_accessed is "
+                         "strictly below the stack path's")
     ap.add_argument("--size", type=int, default=32)
     ap.add_argument("--classes", type=int, default=200)
     ap.add_argument("--out", default=None,
                     help="write rows as a JSON artifact "
                          "(e.g. BENCH_resnet18.json)")
     args = ap.parse_args()
+    if args.gate_traffic:
+        raise SystemExit(gate_traffic())
     if args.resnet18:
         for r in run_resnet18(image_size=args.size, num_classes=args.classes,
                               out_path=args.out):

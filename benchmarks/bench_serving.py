@@ -11,6 +11,14 @@ Each (path, density, batch) cell serves a warmup wave first so the compile
 cost of the batch bucket is off the clock — the steady state is what a
 serving deployment sees.
 
+Each sparse cell also carries the *modeled* per-image HBM bytes of the two
+conv input layouts (halo direct input vs materialized row-tap stack) and
+their arithmetic intensity — `core.accel_model.conv_layer_traffic`, the
+same formulas the Pallas kernels hand XLA as CostEstimate — so the
+serving artifact captures the bandwidth win next to images/s.  ``--impl``
+selects the executed path (jnp | pallas | pallas-stack; the pallas paths
+run interpret-mode on CPU and are slow — bench them on TPU).
+
 Writes a ``BENCH_serving.json`` artifact (--out) with per-cell rows plus a
 summary checking that batched sparse throughput >= batch-1 throughput at
 equal density.
@@ -22,6 +30,7 @@ from __future__ import annotations
 import argparse
 import json
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
@@ -33,6 +42,26 @@ def _requests(rng, n: int, size: int) -> list[ImageRequest]:
                          image=rng.standard_normal((size, size, 3))
                                   .astype(np.float32))
             for i in range(n)]
+
+
+def _model_bytes(srv: CNNServer, size: int) -> dict:
+    """Modeled per-image conv HBM bytes + arithmetic intensity, both conv
+    layouts, for this server's sparsified net at the served image size."""
+    from repro.core.accel_model import network_traffic_reports
+    from repro.models.graph import collect_conv_traffic
+
+    if srv.sparse is None:
+        return {}
+    x = jnp.zeros((1, size, size, 3), jnp.float32)
+    traffic = collect_conv_traffic(srv.net, srv.params, x)
+    reps = network_traffic_reports(traffic, srv.sparse)
+    out = {}
+    for impl in ("halo", "stack"):
+        total = sum(t[impl].bytes_accessed for _, t in reps)
+        flops = sum(t[impl].flops for _, t in reps)
+        out[f"model_bytes_per_image_{impl}"] = total
+        out[f"model_ai_{impl}"] = round(flops / max(total, 1), 2)
+    return out
 
 
 def _throughput(srv: CNNServer, rng, n: int, size: int, batch: int) -> dict:
@@ -51,26 +80,31 @@ def _throughput(srv: CNNServer, rng, n: int, size: int, batch: int) -> dict:
 
 def run(arch: str = "vscnn-vgg16", *, densities=(1.0, 0.5, 0.235),
         batches=(1, 4, 8), images: int = 24, size: int | None = None,
-        out_path: str | None = None) -> dict:
+        impl: str = "jnp", out_path: str | None = None) -> dict:
     cfg = get_config(arch).reduce()
     size = size or cfg.image_size
     rng = np.random.default_rng(0)
     rows = []
+    model_bytes: dict = {}  # per density — independent of the batch size
     for batch in batches:
         srv = CNNServer(cfg, batch=batch, sparse=False)
         rows.append({"path": "dense-jnp", "density": 1.0, "batch": batch,
                      **_throughput(srv, rng, images, size, batch)})
         for density in densities:
-            srv = CNNServer(cfg, batch=batch, density=density)
-            rows.append({"path": "sparse-jnp", "density": density,
+            srv = CNNServer(cfg, batch=batch, density=density, impl=impl)
+            if density not in model_bytes:
+                model_bytes[density] = _model_bytes(srv, size)
+            rows.append({"path": f"sparse-{impl}", "density": density,
                          "batch": batch,
+                         **model_bytes[density],
                          **_throughput(srv, rng, images, size, batch)})
     # batched throughput must beat (or match) batch-1 at equal density
     summary = {}
     max_batch = max(batches)
     for density in densities:
         cells = {r["batch"]: r["images_per_s"] for r in rows
-                 if r["path"] == "sparse-jnp" and r["density"] == density}
+                 if r["path"] == f"sparse-{impl}"
+                 and r["density"] == density}
         summary[str(density)] = {
             "batch1_images_per_s": cells.get(1),
             "batched_images_per_s": cells.get(max_batch),
@@ -82,6 +116,7 @@ def run(arch: str = "vscnn-vgg16", *, densities=(1.0, 0.5, 0.235),
         "arch": arch,
         "image_size": size,
         "images": images,
+        "impl": impl,
         "batches": list(batches),
         "densities": list(densities),
         "rows": rows,
@@ -102,12 +137,16 @@ if __name__ == "__main__":
     ap.add_argument("--batches", type=int, nargs="+", default=[1, 4, 8])
     ap.add_argument("--densities", type=float, nargs="+",
                     default=[1.0, 0.5, 0.235])
+    ap.add_argument("--impl", default="jnp",
+                    choices=["jnp", "pallas", "pallas-halo", "pallas-stack"],
+                    help="executed sparse path (pallas* = the TPU kernels; "
+                         "interpret-mode and slow on CPU)")
     ap.add_argument("--out", default=None,
                     help="write the artifact (e.g. BENCH_serving.json)")
     args = ap.parse_args()
     art = run(args.arch, densities=tuple(args.densities),
               batches=tuple(args.batches), images=args.images,
-              size=args.size, out_path=args.out)
+              size=args.size, impl=args.impl, out_path=args.out)
     for r in art["rows"]:
         print(r)
     print("summary:", art["summary"])

@@ -5,7 +5,9 @@
 - `sparse_ops`         structural sparse matmul/conv (jnp + Pallas dispatch)
 - `accel_model`        cycle-accurate PE-array simulator (paper Table I/Figs 12-13)
 """
-from .vector_sparse import VectorSparse, encode, decode, from_mask, tile_mask
+from .vector_sparse import (
+    VectorSparse, encode, decode, from_mask, tile_mask, conv_cin_major,
+)
 from .pruning import (
     prune_vectors,
     prune_vectors_balanced,
@@ -29,8 +31,11 @@ from .accel_model import (
     PE_4_14_3,
     PE_8_7_3,
     CycleReport,
+    TrafficReport,
     conv_layer_cycles,
+    conv_layer_traffic,
     aggregate,
     network_cycle_reports,
+    network_traffic_reports,
     table1_example,
 )

@@ -27,6 +27,13 @@ kernel columns become kh-element ky-runs for each of kw positions, and with
 stride s an input column vector only pairs with the weight columns whose
 output grid actually reads it (1/s of them), matching the generalized
 vector-sparse datapath in kernels/vsconv.
+
+Alongside the cycle counts, `conv_layer_traffic` / `network_traffic_reports`
+model the *DRAM side* of the paper's story (its 1-D broadcast input exists
+so one fetched vector feeds every PE): modeled HBM bytes per conv layer for
+the TPU kernels' two input layouts — the halo-blocked direct input vs the
+materialized row-tap stack — plus arithmetic intensity, sharing the exact
+formulas the kernels hand XLA as `pl.CostEstimate`.
 """
 from __future__ import annotations
 
@@ -35,8 +42,9 @@ import math
 
 import numpy as np
 
-__all__ = ["PEConfig", "CycleReport", "conv_layer_cycles", "aggregate",
-           "network_cycle_reports"]
+__all__ = ["PEConfig", "CycleReport", "TrafficReport", "conv_layer_cycles",
+           "conv_layer_traffic", "aggregate", "network_cycle_reports",
+           "network_traffic_reports"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -198,6 +206,186 @@ def conv_layer_cycles(
         macs_nonzero=macs_nonzero,
         macs_dense=macs_dense,
     )
+
+
+# --------------------------------------------------------------------------
+# DRAM traffic model (bytes in/out per conv layer, stack vs halo)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TrafficReport:
+    """Modeled HBM traffic of one conv layer on the TPU sparse datapath.
+
+    ``kernel`` bytes are what the Pallas kernel itself moves (inputs
+    re-fetched per grid schedule + weights + output — the kernels'
+    `pl.CostEstimate.bytes_accessed` contract from `repro.kernels.vsconv`);
+    ``build`` bytes are the layout pass that runs *before* the kernel (one
+    pad for the halo impl; the kh*stride-plane row-tap stack write for the
+    stack impl): bytes touched = read source + write laid-out buffer.
+    """
+
+    impl: str
+    flops: int
+    input_bytes: int    # kernel-side activation fetches
+    weight_bytes: int
+    output_bytes: int
+    build_bytes: int    # layout pass (pad / stack materialization)
+
+    @property
+    def kernel_bytes(self) -> int:
+        return self.input_bytes + self.weight_bytes + self.output_bytes
+
+    @property
+    def bytes_accessed(self) -> int:
+        return self.kernel_bytes + self.build_bytes
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        """FLOPs per HBM byte — the roofline x-coordinate."""
+        return self.flops / max(self.bytes_accessed, 1)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def conv_layer_traffic(
+    x_shape: tuple[int, int, int, int],
+    *,
+    kh: int,
+    kw: int,
+    stride: int = 1,
+    cout: int,
+    s_steps: int,
+    vk: int,
+    vn: int,
+    bh: int = 8,
+    impl: str = "halo",
+    itemsize: int = 4,
+    out_itemsize: int | None = None,
+    residual: bool = False,
+) -> TrafficReport:
+    """Modeled HBM bytes for one vector-sparse conv layer.
+
+    ``x_shape`` is the *encoded* input (N, H, W, Cin) — Cin a vk multiple,
+    pad channels included; ``cout`` the encoded output width (a vn
+    multiple); ``s_steps`` the stored tiles per strip (density * kh*kw*CB).
+    ``impl``: 'halo' (direct input, halo-blocked; assumes the cin-major tile
+    order `models.graph.sparse_conv_from_dense` emits) or 'stack' (the
+    materialized row-tap/phase stack).  1x1 convs route through the sparse
+    matmul over pixels in both impls and cost the same.
+
+    The kernel-side formulas are imported from `repro.kernels.vsconv` —
+    the same numbers the kernels hand XLA as `pl.CostEstimate`, so the
+    model, the compiler hint, and the benchmark gate can never drift.
+    """
+    from repro.kernels.vsconv import (  # lazy: keep accel_model numpy-first
+        halo_kernel_cost, stack_kernel_cost,
+    )
+    from .sparse_ops import same_pads
+
+    n, h, w, c = x_shape
+    assert c % vk == 0 and cout % vn == 0, (x_shape, cout, vk, vn)
+    nb = cout // vn
+    cb = c // vk
+    out_itemsize = out_itemsize or itemsize
+    ho, _, _ = same_pads(h, kh, stride)
+    wo, _, _ = same_pads(w, kw, stride)
+
+    if kh == 1 and kw == 1:
+        # vsmm over flattened pixels: every sparse step gathers a fresh
+        # (bm, vk) activation K-tile; identical for both impls.  The
+        # stride-2 subsample is the only layout pass.
+        m = n * ho * wo
+        flops = 2 * m * nb * s_steps * vk * vn
+        return TrafficReport(
+            impl=impl,
+            flops=flops,
+            input_bytes=m * nb * s_steps * vk * itemsize,
+            weight_bytes=nb * s_steps * vk * vn * itemsize,
+            output_bytes=(m * cout * out_itemsize
+                          + (m * cout * itemsize if residual else 0)),
+            build_bytes=(2 * m * c * itemsize if stride != 1 else 0),
+        )
+
+    bh = min(bh, ho)
+    hop = _round_up(ho, bh)
+    res_bytes = n * hop * wo * cout * itemsize if residual else 0
+    if impl == "halo":
+        rows = stride * (hop - 1) + kh
+        bwp = _round_up(stride * (wo - 1) + kw, 8)
+        est = halo_kernel_cost(
+            n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp, bh=bh,
+            nb=nb, s_steps=s_steps, cb=cb, vk=vk, vn=vn,
+            in_itemsize=itemsize, w_itemsize=itemsize,
+            out_itemsize=out_itemsize, residual_bytes=res_bytes,
+        )
+        hb = hop // bh
+        hh = stride * (bh - 1) + kh
+        input_bytes = n * hb * nb * min(s_steps, cb) * hh * bwp * vk * itemsize
+        # one jnp.pad: read the input, write the padded copy
+        build = n * c * (h * w + rows * bwp) * itemsize
+    elif impl == "stack":
+        bw = _round_up(wo + (kw - 1) // stride, 8)
+        est = stack_kernel_cost(
+            n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb, s_steps=s_steps,
+            vk=vk, vn=vn, in_itemsize=itemsize, w_itemsize=itemsize,
+            out_itemsize=out_itemsize, residual_bytes=res_bytes,
+        )
+        hb = hop // bh
+        input_bytes = n * hb * nb * s_steps * bh * bw * vk * itemsize
+        # the stack build: read the input once (pad+gather fuse), write
+        # kh*stride output-sized planes
+        build = n * c * (h * w + kh * stride * hop * bw) * itemsize
+    else:
+        raise ValueError(f"impl must be 'halo' or 'stack', got {impl!r}")
+
+    weight_bytes = nb * s_steps * vk * vn * itemsize
+    output_bytes = n * hop * wo * cout * out_itemsize + res_bytes
+    assert input_bytes + weight_bytes + output_bytes == est.bytes_accessed, (
+        "traffic model drifted from the kernel CostEstimate")
+    return TrafficReport(
+        impl=impl,
+        flops=est.flops,
+        input_bytes=input_bytes,
+        weight_bytes=weight_bytes,
+        output_bytes=output_bytes,
+        build_bytes=build,
+    )
+
+
+def network_traffic_reports(
+    traffic, sparse: dict, *, bh: int = 8,
+    impls: tuple[str, ...] = ("halo", "stack"),
+) -> list[tuple[str, dict]]:
+    """Per-layer DRAM traffic for one network's conv traffic, per impl.
+
+    ``traffic`` is `models.graph.collect_conv_traffic`'s record —
+    (name, conv input NHWC, weight, stride) per conv layer — and ``sparse``
+    the `sparsify` dict giving each layer's encoded geometry (tile counts,
+    vk/vn, cin padding).  Returns [(name, {impl: TrafficReport})] so
+    `bench_kernels`/`bench_serving` can emit bytes + arithmetic-intensity
+    columns for both layouts next to the cycle speedups.
+    """
+    out = []
+    for name, x, w, stride in traffic:
+        x = np.asarray(x)
+        if x.ndim == 3:
+            x = x[None]
+        n, h, width, cin = x.shape
+        kh, kw = np.asarray(w).shape[:2]
+        entry = sparse[name]
+        nb, s_steps, vk, vn = entry.vs.vals.shape
+        x_shape = (n, h, width, cin + entry.cin_pad)
+        out.append((name, {
+            impl: conv_layer_traffic(
+                x_shape, kh=kh, kw=kw, stride=stride, cout=nb * vn,
+                s_steps=s_steps, vk=vk, vn=vn, bh=bh, impl=impl,
+                itemsize=np.dtype(entry.vs.dtype).itemsize,
+            )
+            for impl in impls
+        }))
+    return out
 
 
 def network_cycle_reports(traffic, pe: PEConfig) -> list[tuple[str, CycleReport]]:

@@ -6,9 +6,14 @@ cycle count does.  It is fully GSPMD-partitionable (the strip axis NB shards
 over the tensor-model axis) and scan-over-layers compatible (static S).
 
 impl:
-  'jnp'     — structural gather + batched matmul (works everywhere, shardable)
-  'pallas'  — `repro.kernels` TPU kernel (interpret=True on CPU)
-  'auto'    — pallas on TPU backends, jnp otherwise
+  'jnp'          — structural gather + batched matmul (works everywhere,
+                   shardable)
+  'pallas'       — `repro.kernels` TPU kernel (interpret=True on CPU); for
+                   convs this is the halo-blocked direct-input layout
+                   ('pallas-halo' is an explicit alias)
+  'pallas-stack' — the conv kernel on the materialized row-tap stack
+                   (oracle/fallback layout; ~kh*stride x the HBM traffic)
+  'auto'         — pallas (halo) on TPU backends, jnp otherwise
 """
 from __future__ import annotations
 
@@ -34,11 +39,16 @@ def same_pads(size: int, k: int, stride: int) -> tuple[int, int, int]:
 
 
 def _use_pallas(impl: str) -> bool:
-    if impl == "pallas":
+    if impl.startswith("pallas"):
         return True
     if impl == "jnp":
         return False
     return jax.default_backend() == "tpu"
+
+
+def _conv_impl(impl: str) -> str:
+    """Map the public impl string to the conv kernel layout."""
+    return "stack" if impl == "pallas-stack" else "halo"
 
 
 def vs_matmul(
@@ -145,7 +155,10 @@ def vs_conv2d(
     Weight matrix layout: (kh*kw*Cin, Cout) with K ordered (ky, kx, cin) — a
     zero K-tile is a pruned run of input channels for one kernel position,
     the TPU analogue of the paper's pruned kernel columns.  1x1 convs are the
-    sparse matmul over pixels (stride subsamples first).  ``bias``,
+    sparse matmul over pixels (stride subsamples first).  On the Pallas path
+    ``impl="pallas"``/``"pallas-halo"`` runs the halo-blocked direct-input
+    kernel (~1x-input HBM traffic) and ``impl="pallas-stack"`` the
+    materialized row-tap stack oracle.  ``bias``,
     ``residual`` (the output-shaped ResNet shortcut, added before the ReLU)
     and ``fuse_relu`` run the epilogue fused in the Pallas path and in f32
     before the output cast in the jnp path — bit-identical math either way.
@@ -155,7 +168,7 @@ def vs_conv2d(
 
         return kops.vsconv(
             x, w_vs, kh=kh, kw=kw, stride=stride, bias=bias,
-            residual=residual, fuse_relu=fuse_relu,
+            residual=residual, fuse_relu=fuse_relu, impl=_conv_impl(impl),
         )
     if kh == 1 and kw == 1:
         patches = x[:, ::stride, ::stride] if stride != 1 else x

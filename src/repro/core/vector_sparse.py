@@ -21,7 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["VectorSparse", "encode", "decode", "from_mask", "tile_mask"]
+__all__ = ["VectorSparse", "encode", "decode", "from_mask", "tile_mask",
+           "conv_cin_major"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -114,6 +115,30 @@ def encode(w: jax.Array, vk: int, vn: int) -> VectorSparse:
     """Encode an already vector-pruned dense matrix (balanced occupancy)."""
     mask = np.asarray(tile_mask(w, vk, vn))
     return from_mask(w, mask, vk, vn)
+
+
+def conv_cin_major(vs: VectorSparse, cb: int) -> VectorSparse:
+    """Reorder each strip's stored tiles cin-tile-major (tap-minor).
+
+    For a conv weight matrix the K-tile id is ``t = tap * cb + cin_tile``
+    (tap-major), which is the ascending order `from_mask` emits.  The halo
+    conv kernel's input block offset depends only on the cin tile — not the
+    tap — so sorting the issue order to ``(cin_tile, tap)`` makes
+    consecutive sparse steps revisit the same halo block and Pallas skips
+    the re-DMA: each cin tile's halo is fetched once per (strip, row-block)
+    instead of once per stored tile.  Pure permutation per strip — the
+    accumulated sum is the same set of matmuls (fp reassociation only).
+
+    Host-side (encode-time) like `from_mask`; ``cb`` is Cin // vk.
+    """
+    idx = np.asarray(vs.idx)
+    kb = vs.shape[0] // vs.vk
+    taps = kb // cb
+    order = np.argsort((idx % cb) * taps + idx // cb, axis=1, kind="stable")
+    vals = jnp.take_along_axis(
+        vs.vals, jnp.asarray(order)[:, :, None, None], axis=1)
+    return VectorSparse(vals=vals, idx=jnp.asarray(np.take_along_axis(
+        idx, order, axis=1)), shape=vs.shape)
 
 
 @partial(jax.jit, static_argnames=())

@@ -5,7 +5,10 @@
              optional fused bias+ReLU epilogue)
 - `vsconv` -- direct KxK/stride vector-sparse convolution family
              (tap-granular weight skip; 1x1 routes through vsmm over
-             pixels; fused bias+ReLU epilogue)
+             pixels; fused bias+ReLU epilogue; impl="halo" reads the raw
+             SAME-padded input through overlapping halo blocks — ~1x-input
+             HBM traffic — impl="stack" keeps the materialized row-tap
+             stack as oracle/fallback)
 - `flash`  -- flash-attention forward (VMEM-resident online softmax; the
              dominant HBM term of every train/prefill roofline cell)
 - `ref`    -- pure-jnp oracles

@@ -2,18 +2,24 @@
 
 Handle padding to kernel-friendly shapes, backend dispatch (interpret=True on
 CPU so kernels validate everywhere, compiled on real TPU), and layout prep
-(the vsconv row-tap/phase stack).
+(the halo direct input / the row-tap stack).
 
 `vsconv` covers the generalized kernel family:
 
-  vsconv(x, vs, kh=3, kw=3, stride=1, bias=None, fuse_relu=False)
+  vsconv(x, vs, kh=3, kw=3, stride=1, bias=None, fuse_relu=False,
+         impl="halo")
 
   * arbitrary odd/even kh x kw taps, SAME padding for the given stride
     (Hout = ceil(H/stride)) — the weight matrix is (kh*kw*Cin, Cout) with K
     ordered (ky, kx, cin), i.e. `core.sparse_ops.conv_weight_to_matrix`;
-  * stride 1 and 2 (any stride the tap/phase stack supports, in fact);
+  * stride 1 and 2 (any stride the tap decomposition supports, in fact);
   * 1x1 convs route through `vsmm` over flattened pixels (a pointwise conv
     *is* the sparse matmul; stride subsamples first) — ResNet projections;
+  * ``impl`` picks the input layout: ``"halo"`` (default) reads the raw
+    SAME-padded input through overlapping halo blocks and resolves the tap
+    in-kernel — ~1x-input HBM traffic; ``"stack"`` materializes the
+    kh*stride-plane row-tap stack first — the bandwidth-dumb oracle and
+    fallback layout;
   * ``bias``/``fuse_relu`` run the epilogue inside the kernel, so the
     post-ReLU zeros feeding the next layer's input-side skip are produced
     on-chip for free.
@@ -25,7 +31,10 @@ import jax.numpy as jnp
 
 from repro.core.vector_sparse import VectorSparse
 from .vsmm import vsmm_pallas
-from .vsconv import vsconv_pallas, build_row_tap_stack, same_pads
+from .vsconv import (
+    vsconv_pallas, vsconv_halo_pallas, build_row_tap_stack, build_halo_input,
+    same_pads,
+)
 
 __all__ = ["vsmm", "vsconv"]
 
@@ -83,19 +92,24 @@ def vsconv(
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
+    impl: str = "halo",
     interpret: bool | None = None,
 ) -> jax.Array:
     """NHWC kh x kw / stride / SAME conv with vector-sparse
     (kh*kw*Cin, Cout) weights -> (N, ceil(H/stride), ceil(W/stride), Cout).
 
     1x1 convs dispatch to the sparse matmul over flattened pixels (stride
-    subsamples first); everything else runs the direct tap-decomposed Pallas
-    kernel.  ``bias`` (Cout,), ``residual`` (the output-shaped ResNet
-    shortcut, added before the ReLU) and ``fuse_relu`` fuse the epilogue
-    in-kernel.
+    subsamples first); everything else runs one of the two direct
+    tap-decomposed Pallas kernels: ``impl="halo"`` (default — raw input,
+    halo-blocked, tap resolved in-kernel) or ``impl="stack"`` (the
+    materialized row-tap/phase stack, kept as oracle and fallback).
+    ``bias`` (Cout,), ``residual`` (the output-shaped ResNet shortcut,
+    added before the ReLU) and ``fuse_relu`` fuse the epilogue in-kernel.
     """
     n, h, w, c = x.shape
     interpret = _interpret() if interpret is None else interpret
+    if impl not in ("halo", "stack"):
+        raise ValueError(f"vsconv impl must be 'halo' or 'stack', got {impl!r}")
     if kh == 1 and kw == 1:
         if stride != 1:
             x = x[:, ::stride, ::stride]
@@ -112,13 +126,23 @@ def vsconv(
     wo, _, _ = same_pads(w, kw, stride)
     bh = min(bh, ho)
     hop = _round_up(ho, bh)
-    xt = build_row_tap_stack(x, kh=kh, kw=kw, stride=stride, h_out=hop)
     if residual is not None and hop != ho:
         residual = jnp.pad(residual, ((0, 0), (0, hop - ho), (0, 0), (0, 0)))
-    out = vsconv_pallas(
-        xt, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias,
-        residual=residual, bh=bh,
-        skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
-        interpret=interpret,
-    )
+    if impl == "halo":
+        xh = build_halo_input(x, kh=kh, kw=kw, stride=stride, vk=vs.vk,
+                              h_out=hop)
+        out = vsconv_halo_pallas(
+            xh, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias,
+            residual=residual, bh=bh,
+            skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
+            interpret=interpret,
+        )
+    else:
+        xt = build_row_tap_stack(x, kh=kh, kw=kw, stride=stride, h_out=hop)
+        out = vsconv_pallas(
+            xt, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias,
+            residual=residual, bh=bh,
+            skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
+            interpret=interpret,
+        )
     return out[:, :ho] if hop != ho else out

@@ -1,4 +1,4 @@
-"""vsconv — direct KxK vector-sparse convolution Pallas TPU kernel.
+"""vsconv — direct KxK vector-sparse convolution Pallas TPU kernels.
 
 The paper decomposes a conv into kernel *columns* (WA/WB/WC in Fig. 6) and
 skips all-zero columns and all-zero input column vectors.  The TPU analogue
@@ -14,37 +14,61 @@ are structurally absent from the balanced block-CSR, so their matmuls never
 enter the grid (the paper's weight-side skip).  An all-zero shifted-input row
 block is skipped at runtime with ``@pl.when`` (the input-side skip).
 
-Input layout — the generalized row-tap/phase stack built by
+Input layouts — two implementations of the same math
+----------------------------------------------------
+
+**Halo (default, `vsconv_halo_pallas`)** reads the raw SAME-padded NHWC
+input *directly*.  `build_halo_input` only pads and reshapes:
+
+  XH (N, rows, bW, CB, vk),  rows = stride*(Hout-1) + kh
+
+(the reshape C -> (CB, vk) is free — channels are contiguous).  The
+BlockSpec carves, per output row-block of ``bh`` rows, an overlapping
+*halo block* of ``bh*stride + kh - stride`` input rows (`pl.Unblocked`
+element-offset indexing), and the tap ``(ky, kx)`` is resolved *inside*
+the kernel: row ``ky + stride*i`` and column ``kx + stride*j`` of the halo
+block feed output pixel ``(i, j)``, i.e. one dynamic slice plus a static
+strided subselect.  Because the halo offsets depend only on the row-block
+and the cin tile — not on the tap — consecutive sparse steps over the same
+cin tile *revisit* the same block and Pallas skips the DMA: with the
+stored tiles ordered cin-major (`core.vector_sparse.conv_cin_major`, the
+order `models.graph.sparse_conv_from_dense` emits), each cin tile's halo
+is fetched once per (strip, row-block), so input HBM traffic is ~1x the
+input plus the halo overlap — the paper's fetch-once-broadcast-everywhere
+data movement story, realized as index arithmetic.
+
+**Row-tap/phase stack (`vsconv_pallas`, oracle + fallback)** materializes
 ``build_row_tap_stack``:
 
   XT (N, kh*stride, Hout, bW, C)
   XT[:, ky*stride + phase, i, j'] = pad(x)[:, stride*i + ky, phase + stride*j']
 
-Rows are pre-strided per tap row ``ky`` (so the ky shift *and* the row stride
-become a unit-block index selectable from the scalar-prefetched tap id), and
-the width axis is pre-split into its ``stride`` phases.  Writing
-``kx = stride*(kx//stride) + (kx % stride)``, output column ``j`` at tap
-``kx`` reads input column ``phase + stride*(j + kx//stride)`` with
-``phase = kx % stride`` — i.e. plane ``ky*stride + phase`` at column
-``j + kx//stride``.  So the whole tap select is BlockSpec index_map
-arithmetic plus one contiguous sublane slice of length ``w_out`` starting at
-``kx // stride`` inside the kernel (the paper's "broadcast the right input
-column" realized as index arithmetic).  For stride 1 this degenerates to the
-classic 3-plane row-tap stack; bW is Wout + (kw-1)//stride rounded up to the
-sublane multiple.
+Rows are pre-strided per tap row ``ky`` and the width axis pre-split into
+its ``stride`` phases, so the whole tap select is BlockSpec index_map
+arithmetic plus one contiguous width slice.  The price is data movement:
+the stack is ``kh*stride`` output-sized planes written to HBM before every
+conv (an extra XLA pass over every activation) and the kernel re-fetches
+its plane on every sparse step.  It is kept as the bandwidth-dumb oracle
+the halo path is tested against, and as a fallback layout.
+
+`stack_kernel_cost` / `halo_kernel_cost` are the shared HBM-traffic
+contract: the same formulas feed the kernels' `pl.CostEstimate`, the
+`core.accel_model` DRAM traffic model, and the benchmark gate that keeps
+the halo path's bytes strictly below the stack path's.
 
 Padding is XLA-"SAME" for the given stride (Hout = ceil(H/stride)); the
 `ops.vsconv` wrapper computes it and pads Hout to a ``bh`` multiple.
 
-Fused epilogue: optional per-cout ``bias`` add, optional ``residual``
-(ResNet shortcut) add, and ReLU run inside the kernel at flush time
-(f32 accumulator -> +bias -> +residual -> max(0) -> cast).  Fusing the ReLU
-means the *next* layer's input zeros — the vectors its input-side skip
+Fused epilogue (both kernels): optional per-cout ``bias`` add, optional
+``residual`` (ResNet shortcut) add, and ReLU run inside the kernel at flush
+time (f32 accumulator -> +bias -> +residual -> max(0) -> cast).  Fusing the
+ReLU means the *next* layer's input zeros — the vectors its input-side skip
 elides — are produced on-chip for free, exactly the paper's post-ReLU
 input-zero-vector story; fusing the residual means a whole ResNet basic
 block retires with a single extra VMEM read, no extra HBM round-trip.
 
-Grid: ``(NB, N * HB, S)`` — cout strip j, (image, row-block) m, sparse step s.
+Grid (both): ``(NB, N * HB, S)`` — cout strip j, (image, row-block) m,
+sparse step s.
 """
 from __future__ import annotations
 
@@ -58,7 +82,104 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.sparse_ops import same_pads
 from repro.core.vector_sparse import VectorSparse
 
-__all__ = ["vsconv_pallas", "build_row_tap_stack", "same_pads"]
+__all__ = [
+    "vsconv_pallas", "vsconv_halo_pallas", "build_row_tap_stack",
+    "build_halo_input", "stack_kernel_cost", "halo_kernel_cost", "same_pads",
+]
+
+
+# --------------------------------------------------------------------------
+# HBM traffic contract (shared by kernels, accel model, and benchmarks)
+# --------------------------------------------------------------------------
+
+def stack_kernel_cost(
+    *, n: int, hop: int, w_out: int, bw: int, bh: int, nb: int, s_steps: int,
+    vk: int, vn: int, in_itemsize: int = 4, w_itemsize: int = 4,
+    out_itemsize: int = 4, residual_bytes: int = 0,
+) -> pl.CostEstimate:
+    """Kernel-side cost of the row-tap stack impl (stack *build* excluded —
+    that extra pass is modeled in `core.accel_model.conv_layer_traffic`).
+
+    Every sparse step changes the (plane, cin-tile) block index, so the
+    input block (bh, bw, vk) is DMA'd on every one of the NB*S steps per
+    row-block.
+    """
+    hb = hop // bh
+    return pl.CostEstimate(
+        flops=2 * n * hop * w_out * nb * s_steps * vk * vn,
+        bytes_accessed=(
+            n * hb * nb * s_steps * bh * bw * vk * in_itemsize
+            + nb * s_steps * vk * vn * w_itemsize
+            + n * hop * w_out * nb * vn * out_itemsize
+            + residual_bytes
+        ),
+        transcendentals=0,
+    )
+
+
+def halo_kernel_cost(
+    *, n: int, hop: int, w_out: int, kh: int, stride: int, bwp: int, bh: int,
+    nb: int, s_steps: int, cb: int, vk: int, vn: int, in_itemsize: int = 4,
+    w_itemsize: int = 4, out_itemsize: int = 4, residual_bytes: int = 0,
+) -> pl.CostEstimate:
+    """Kernel-side cost of the halo impl.
+
+    The halo block offset depends only on (row-block, cin tile): with the
+    stored tiles cin-major per strip, consecutive taps of one cin tile
+    revisit the same block (no DMA), so each of the min(S, CB) distinct cin
+    tiles is fetched once per (strip, row-block) — a halo block of
+    ``bh*stride + kh - stride`` rows instead of S fetches of bh rows.
+    """
+    hb = hop // bh
+    hh = stride * (bh - 1) + kh
+    fetches = min(s_steps, cb)
+    return pl.CostEstimate(
+        flops=2 * n * hop * w_out * nb * s_steps * vk * vn,
+        bytes_accessed=(
+            n * hb * nb * fetches * hh * bwp * vk * in_itemsize
+            + nb * s_steps * vk * vn * w_itemsize
+            + n * hop * w_out * nb * vn * out_itemsize
+            + residual_bytes
+        ),
+        transcendentals=0,
+    )
+
+
+# --------------------------------------------------------------------------
+# Input layouts
+# --------------------------------------------------------------------------
+
+def build_halo_input(
+    x: jax.Array,
+    *,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    vk: int,
+    h_out: int | None = None,
+    sublane: int = 8,
+) -> jax.Array:
+    """NHWC -> (N, rows, bW, CB, vk) SAME-padded direct input for the halo
+    kernel.  One `jnp.pad` (the only HBM copy of the layout) plus a free
+    channel-split reshape; rows = stride*(Hout-1) + kh so every halo block
+    and in-kernel tap slice stays in bounds, bW = stride*(Wout-1) + kw
+    rounded up to ``sublane``.
+
+    ``h_out`` lets the caller round Hout up to a row-block multiple (the
+    extra rows read zero padding).
+    """
+    n, h, w, c = x.shape
+    assert c % vk == 0, (c, vk)
+    ho, pt, _ = same_pads(h, kh, stride)
+    wo, pl_, _ = same_pads(w, kw, stride)
+    ho = h_out or ho
+    rows = stride * (ho - 1) + kh
+    bw = -(-(stride * (wo - 1) + kw) // sublane) * sublane
+    xp = jnp.pad(
+        x,
+        ((0, 0), (pt, rows - h - pt), (pl_, bw - w - pl_), (0, 0)),
+    )
+    return xp.reshape(n, rows, bw, c // vk, vk)
 
 
 def build_row_tap_stack(
@@ -72,9 +193,11 @@ def build_row_tap_stack(
 ) -> jax.Array:
     """NHWC -> (N, kh*stride, Hout, bW, C) row-tap/phase stack (SAME padding).
 
-    ``h_out`` lets the caller round Hout up to a row-block multiple (the
-    extra rows read zero padding).  bW = Wout + (kw-1)//stride rounded up to
-    ``sublane`` so the kernel's kx slice stays in-bounds and sublane-aligned.
+    The stack-impl (oracle) layout: kh*stride output-sized planes
+    materialized in HBM.  ``h_out`` lets the caller round Hout up to a
+    row-block multiple (the extra rows read zero padding).  bW = Wout +
+    (kw-1)//stride rounded up to ``sublane`` so the kernel's kx slice stays
+    in-bounds and sublane-aligned.
     """
     n, h, w, c = x.shape
     ho, pt, _ = same_pads(h, kh, stride)
@@ -101,6 +224,180 @@ def build_row_tap_stack(
     ]
     return jnp.stack(planes, axis=1)
 
+
+# --------------------------------------------------------------------------
+# Halo kernel (default): direct input, tap resolved in-kernel
+# --------------------------------------------------------------------------
+
+def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
+                 bh: int, w_out: int, fuse_relu: bool, has_bias: bool,
+                 has_residual: bool, skip_zero_inputs: bool):
+    it = iter(refs)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    j = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # decode the K-tile id t = (ky*kw + kx) * CB + cin_tile; the cin tile is
+    # already resolved by the index_map, the whole tap resolves here
+    t = idx_ref[j, s]
+    tap = t // cb
+    ky = tap // kw
+    kx = tap % kw
+
+    # output pixel (i, jj) of this row block reads halo element
+    # (ky + stride*i, kx + stride*jj): dynamic tap offset + static stride
+    rlen = stride * (bh - 1) + 1
+    clen = stride * (w_out - 1) + 1
+    xt = xh_ref[0, pl.ds(ky, rlen), pl.ds(kx, clen), 0]  # (rlen, clen, vk)
+    if stride > 1:
+        xt = xt[::stride, ::stride]
+    xs2 = xt.reshape(bh * w_out, xt.shape[-1])
+
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            xs2, w_ref[0, 0], preferred_element_type=jnp.float32
+        )
+
+    if skip_zero_inputs:
+        # paper's input zero-vector skip (post-ReLU activations)
+        pl.when(jnp.any(xs2 != 0))(_mac)
+    else:
+        _mac()
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        acc = acc_ref[...].reshape(o_ref.shape)
+        if has_bias:
+            acc = acc + bias_ref[0].astype(jnp.float32)
+        if has_residual:
+            # ResNet shortcut fused at flush: add before the ReLU so the
+            # whole basic block retires with one on-chip epilogue
+            acc = acc + res_ref[...].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kh", "kw", "stride", "w_out", "bh", "skip_zero_inputs", "fuse_relu",
+        "interpret", "out_dtype",
+    ),
+)
+def vsconv_halo_pallas(
+    xh: jax.Array,
+    vs: VectorSparse,
+    *,
+    w_out: int,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    bh: int = 8,
+    skip_zero_inputs: bool = True,
+    fuse_relu: bool = False,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Direct input xh (N, rows, bW, CB, vk) * sparse (kh*kw*CB*vk, Cout)
+    -> (N, Hout, w_out, Cout), Hout = (rows - kh) // stride + 1.
+
+    ``xh`` is `build_halo_input`'s SAME-padded raw input; Hout must be a
+    multiple of ``bh`` (the `ops.vsconv` wrapper pads).  Each grid step sees
+    an overlapping ``bh*stride + kh - stride``-row halo block
+    (`pl.Unblocked` element offsets) and slices its tap out in-kernel, so
+    no tap-shifted copy of the input ever exists in HBM.  ``bias`` (Cout,),
+    ``residual`` (N, Hout, w_out, Cout) and ``fuse_relu`` run the epilogue
+    at flush time, identically to the stack kernel.
+    """
+    n, rows, bwp, cb, vk = xh.shape
+    assert (rows - kh) % stride == 0, (rows, kh, stride)
+    h = (rows - kh) // stride + 1
+    nb, s_steps, vk_w, vn = vs.vals.shape
+    assert vk_w == vk and vs.shape[0] == kh * kw * cb * vk, (
+        vs.shape, xh.shape, kh, kw)
+    assert h % bh == 0, (h, bh)
+    hb = h // bh
+    hh = stride * (bh - 1) + kh  # halo rows per output row-block
+    out_dtype = out_dtype or xh.dtype
+    has_bias = bias is not None
+    has_residual = residual is not None
+
+    in_specs = [
+        # one image, one overlapping halo row window, full width, one cin
+        # tile — element offsets (Unblocked): row-blocks overlap by
+        # kh - stride rows, and the offsets are tap-independent so
+        # consecutive sparse steps on one cin tile revisit the block
+        # without a new DMA (cin-major tile order makes that the common
+        # case).
+        pl.BlockSpec(
+            (1, hh, bwp, 1, vk),
+            lambda j, m, s, idx: (
+                m // hb,                    # image
+                (m % hb) * stride * bh,     # halo window start row
+                0,
+                idx[j, s] % cb,             # cin tile
+                0,
+            ),
+            indexing_mode=pl.Unblocked(),
+        ),
+        pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
+    ]
+    args = [vs.idx, xh, vs.vals]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, vn), lambda j, m, s, idx: (j, 0)))
+        args.append(bias.reshape(nb, vn))
+    if has_residual:
+        assert residual.shape == (n, h, w_out, nb * vn), (
+            residual.shape, (n, h, w_out, nb * vn))
+        in_specs.append(pl.BlockSpec(
+            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ))
+        args.append(residual)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, n * hb, s_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ),
+        scratch_shapes=[pltpu.VMEM((bh * w_out, vn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _halo_kernel, cb=cb, kw=kw, stride=stride, bh=bh, w_out=w_out,
+            fuse_relu=fuse_relu, has_bias=has_bias,
+            has_residual=has_residual,
+            skip_zero_inputs=skip_zero_inputs,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h, w_out, nb * vn), out_dtype),
+        interpret=interpret,
+        cost_estimate=halo_kernel_cost(
+            n=n, hop=h, w_out=w_out, kh=kh, stride=stride, bwp=bwp, bh=bh,
+            nb=nb, s_steps=s_steps, cb=cb, vk=vk, vn=vn,
+            in_itemsize=xh.dtype.itemsize,
+            w_itemsize=vs.vals.dtype.itemsize,
+            out_itemsize=jnp.dtype(out_dtype).itemsize,
+            residual_bytes=(residual.size * residual.dtype.itemsize
+                            if has_residual else 0),
+        ),
+    )(*args)
+
+
+# --------------------------------------------------------------------------
+# Row-tap stack kernel (oracle + fallback)
+# --------------------------------------------------------------------------
 
 def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
             w_out: int, fuse_relu: bool, has_bias: bool, has_residual: bool,
@@ -178,10 +475,12 @@ def vsconv_pallas(
     """Row-tap stack xt (N, kh*stride, H, bW, C) * sparse (kh*kw*C, Cout)
     -> (N, H, w_out, Cout).
 
-    H (the stack's output-row count) must be a multiple of ``bh``; the
-    `ops.vsconv` wrapper pads.  ``bias`` (Cout,), ``residual``
-    (N, H, w_out, Cout) — the ResNet shortcut, added before the ReLU — and
-    ``fuse_relu`` run the epilogue inside the kernel at flush time.
+    The materialized-stack impl, kept as the oracle/fallback for
+    `vsconv_halo_pallas`.  H (the stack's output-row count) must be a
+    multiple of ``bh``; the `ops.vsconv` wrapper pads.  ``bias`` (Cout,),
+    ``residual`` (N, H, w_out, Cout) — the ResNet shortcut, added before the
+    ReLU — and ``fuse_relu`` run the epilogue inside the kernel at flush
+    time.
     """
     n, planes, h, bw, c = xt.shape
     assert planes == kh * stride, (planes, kh, stride)
@@ -242,15 +541,12 @@ def vsconv_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, h, w_out, nb * vn), out_dtype),
         interpret=interpret,
-        cost_estimate=pl.CostEstimate(
-            flops=2 * n * h * w_out * nb * s_steps * vk * vn,
-            bytes_accessed=(
-                n * hb * nb * s_steps * bh * bw * vk * xt.dtype.itemsize
-                + vs.vals.size * vs.vals.dtype.itemsize
-                + n * h * w_out * nb * vn * jnp.dtype(out_dtype).itemsize
-                + (residual.size * residual.dtype.itemsize
-                   if has_residual else 0)
-            ),
-            transcendentals=0,
+        cost_estimate=stack_kernel_cost(
+            n=n, hop=h, w_out=w_out, bw=bw, bh=bh, nb=nb, s_steps=s_steps,
+            vk=vk, vn=vn, in_itemsize=xt.dtype.itemsize,
+            w_itemsize=vs.vals.dtype.itemsize,
+            out_itemsize=jnp.dtype(out_dtype).itemsize,
+            residual_bytes=(residual.size * residual.dtype.itemsize
+                            if has_residual else 0),
         ),
     )(*args)

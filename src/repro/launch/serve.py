@@ -12,16 +12,22 @@ retirement and backfill; this module plugs in the model math:
   with no EOS spends exactly ``max_new - 1`` decode steps — the prefill
   emits each slot's first token, so there is no trailing wasted decode.
   Admission prompt lengths are bucketed (``len_bucket``) so first-wave
-  prefill compile shapes stay bounded; a backfill prefill is shaped by the
-  exact current context length (positions must line up), so it compiles
-  per distinct retirement step — see the ROADMAP serving follow-ups.
+  prefill compile shapes stay bounded; on attention archs a backfill
+  prefill right-pads the context to the same bucket ladder and reads its
+  logits at the true position, so backfill shapes are bounded too (one
+  executable per bucket, not one per retirement step).  Recurrent archs
+  (rwkv/mamba) keep the exact-length backfill prefill — their state folds
+  in every processed token — see the ROADMAP serving follow-ups.
 
 * `CNNBackend` / `CNNServer` — CNN inference traffic through
   `SparseNet.apply`: requests carry images, batches pad/bucket on image
   shape, every request finishes in one lockstep step, and freed slots are
   refilled from the queue so the compiled batch shape is reused wave after
-  wave.  A jit cache keyed on (net, density, impl, batch bucket) — see
-  `models.graph.BatchedApply` — keeps recompiles off the hot path.
+  wave; a partial final wave shrinks to its occupied slots (pow2 ladder)
+  instead of computing zero images.  A jit cache keyed on (net, density,
+  impl, batch bucket) — see `models.graph.BatchedApply` — keeps recompiles
+  off the hot path; ``impl`` defaults to ``auto`` (the halo-layout Pallas
+  conv kernels on TPU, the structural jnp path elsewhere).
 
 Both run end-to-end on CPU with reduced configs; the LM jits are the same
 step functions the decode_32k / long_500k dry-run cells lower on the
@@ -84,6 +90,26 @@ class ImageRequest:
 # backfill
 # --------------------------------------------------------------------------
 
+def _positional_caches(cfg) -> bool:
+    """True when every cached layer state is plain positional attention K/V.
+
+    Recurrent mixers (rwkv/mamba and their channel-mix halves) fold every
+    processed token into their state, so a backfill prefill right-padded
+    past the true context would corrupt it.  Sliding-window attention is
+    excluded too: its K/V cache is *circular* (slot = pos % window), so the
+    right-pad junk at positions [cur, curb) would wrap onto slots holding
+    real in-window history and be attended as it.  Only plain full-context
+    attention caches (slot == position; future slots masked by kpos >= 0,
+    then overwritten) survive the right-pad, and they gate the bucketed
+    backfill below.
+    """
+    return all(
+        sp.mixer in ("attn", "none") and sp.window is None
+        and sp.ffn in ("mlp", "moe", "none")
+        for seg in cfg.segments for sp in seg.layers
+    )
+
+
 class LMBackend:
     """Continuous-batching backend over the transformer prefill/decode jits.
 
@@ -92,6 +118,17 @@ class LMBackend:
     — the prefill compile shape family stays the same as admission's, and a
     backfilled request computes bit-identically to the same request served
     alone at that context length (regression-tested).
+
+    For attention archs the backfill context length is additionally
+    *bucketed*: the newcomer's tokens are right-padded from the true
+    context length ``cur`` up to the ``len_bucket`` ladder and the first
+    token is read at position ``cur - 1`` (`tfm.prefill(logit_pos=...)`),
+    so retirements at distinct steps stop compiling a fresh prefill shape
+    each — one executable per bucket instead of one per context length.
+    The pad rows' K/V junk is causally masked and then overwritten by the
+    following decode steps before any query attends it.  Recurrent archs
+    (rwkv/mamba) keep the exact-length prefill: their state folds in every
+    processed token, pad included (see ROADMAP serving follow-ups).
     """
 
     def __init__(self, cfg, params, mesh, *, capacity: int,
@@ -102,8 +139,15 @@ class LMBackend:
         self.capacity = capacity
         self.eos_id = eos_id
         self.len_bucket = max(1, len_bucket)
+        self.backfill_bucket = (self.len_bucket if _positional_caches(cfg)
+                                else 1)
         self._prefill = jax.jit(
             lambda p, b: tfm.prefill(p, b, cfg, capacity=capacity))
+        # backfill prefill: logits at a chosen (traced) position, so the
+        # compile key is the bucketed token shape only
+        self._prefill_at = jax.jit(
+            lambda p, b, pos: tfm.prefill(p, b, cfg, capacity=capacity,
+                                          logit_pos=pos))
         self._decode = jax.jit(
             lambda p, c, t, pos: tfm.decode_step(p, c, t, pos, cfg),
             donate_argnums=(1,))
@@ -162,10 +206,14 @@ class LMBackend:
     def backfill(self, state, slot: int, req: Request):
         cur = state["len"] + state["i"]
         width = int(state["nxt"].shape[0])
-        toks = np.zeros((width, cur), np.int32)
-        toks[slot, cur - len(req.prompt):] = req.prompt
-        logits, caches1 = self._prefill(
-            self.params, {"tokens": jnp.asarray(toks)})
+        # right-pad the context to the bucket ladder: positions [0, cur)
+        # are exactly the exact-length prefill's, logits are read at
+        # cur - 1, and the junk K/V rows beyond cur are masked/overwritten
+        curb = min(_round_up(cur, self.backfill_bucket), self.capacity)
+        toks = np.zeros((width, curb), np.int32)
+        toks[slot, cur - len(req.prompt):cur] = req.prompt
+        logits, caches1 = self._prefill_at(
+            self.params, {"tokens": jnp.asarray(toks)}, jnp.int32(cur - 1))
         tok = int(jnp.argmax(logits[slot], -1))
         state["caches"] = self._merge(state["caches"], caches1, slot)
         state["nxt"] = state["nxt"].at[slot, 0].set(tok)
@@ -245,9 +293,15 @@ class CNNBackend:
     fixed input (Flatten-head nets like VGG); when None the bucket pads
     each image's H/W up to ``pad_multiple`` (size-agnostic nets like the
     GAP-headed ResNets).
+
+    A partial wave (the tail of a drained queue) computes on a batch shrunk
+    to the occupied slots — rounded up to the next power of two, capped at
+    the full width — instead of padding with zero images that burn full
+    sparse-path FLOPs.  The pow2 ladder bounds the compile count per shape
+    bucket at log2(width)+1 executables.
     """
 
-    def __init__(self, net, params, *, sparse=None, impl: str = "jnp",
+    def __init__(self, net, params, *, sparse=None, impl: str = "auto",
                  density: float | None = None, image_size: int | None = None,
                  pad_multiple: int = 8):
         from repro.models.graph import BatchedApply
@@ -277,14 +331,19 @@ class CNNBackend:
 
     def step(self, state, slots):
         hb, wb, c = state["bucket"]
-        x = np.zeros((state["width"], hb, wb, c), np.float32)
-        for j, r in enumerate(slots):
-            if r is not None:
-                h, w, _ = r.image.shape
-                x[j, :h, :w] = r.image
+        occ = [j for j, r in enumerate(slots) if r is not None]
+        # shrink a partial wave to the occupied slots (pow2 ladder): zero
+        # images are no longer computed at full sparse-path cost
+        nb = min(state["width"], 1 << max(len(occ) - 1, 0).bit_length())
+        x = np.zeros((nb, hb, wb, c), np.float32)
+        for i, j in enumerate(occ):
+            h, w, _ = slots[j].image.shape
+            x[i, :h, :w] = slots[j].image
         y = np.asarray(self.apply(jnp.asarray(x)))
-        return state, [y[j] if slots[j] is not None else None
-                       for j in range(state["width"])]
+        emis = [None] * state["width"]
+        for i, j in enumerate(occ):
+            emis[j] = y[i]
+        return state, emis
 
     def can_backfill(self, state, req: ImageRequest) -> bool:
         return self.bucket_key(req) == state["bucket"]
@@ -310,7 +369,7 @@ class CNNServer:
     XLA conv baseline the benchmarks compare against).
     """
 
-    def __init__(self, cfg, *, batch: int, impl: str = "jnp",
+    def __init__(self, cfg, *, batch: int, impl: str = "auto",
                  density: float | None = None, sparse: bool = True,
                  seed: int = 0, pad_multiple: int = 8):
         self.cfg = cfg
@@ -361,6 +420,11 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=48)
     ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--impl", default="auto",
+                    choices=["auto", "jnp", "pallas", "pallas-halo",
+                             "pallas-stack"],
+                    help="CNN sparse path: auto = halo Pallas kernels on "
+                         "TPU, structural jnp elsewhere")
     args = ap.parse_args()
     if (args.arch is None) == (args.cnn is None):
         ap.error("choose exactly one of --arch (LM) or --cnn")
@@ -375,7 +439,7 @@ def main():
                     rid=i,
                     image=rng.standard_normal((s, s, 3)).astype(np.float32))
                 for i in range(args.requests)]
-        srv = CNNServer(cfg, batch=args.batch)
+        srv = CNNServer(cfg, batch=args.batch, impl=args.impl)
         t0 = time.time()
         stats = srv.serve(reqs)
         wall = time.time() - t0

@@ -56,6 +56,7 @@ import numpy as np
 
 from repro.core import (
     VectorSparse,
+    conv_cin_major,
     from_mask,
     prune_vectors_balanced,
     vs_matmul,
@@ -152,7 +153,7 @@ class SparseNet:
     def schema(self) -> dict:
         return net_schema(self)
 
-    def apply(self, params, x, *, sparse=None, impl: str = "jnp",
+    def apply(self, params, x, *, sparse=None, impl: str = "auto",
               collect=None):
         return net_apply(self, params, x, sparse=sparse, impl=impl,
                          collect=collect)
@@ -162,7 +163,7 @@ class SparseNet:
         return sparsify(self, params, density, vk=vk, vn=vn,
                         include_fc=include_fc)
 
-    def batched_apply(self, params, *, sparse=None, impl: str = "jnp",
+    def batched_apply(self, params, *, sparse=None, impl: str = "auto",
                       key: tuple = (), cache: dict | None = None
                       ) -> "BatchedApply":
         """Serving entry point: jit-compiled apply with a compile cache
@@ -253,13 +254,19 @@ def sparse_conv_from_dense(
         mask = np.ones((wm.shape[0] // vk_l, cout // vn_l), bool)
     dtype = dtype or jnp.float32
     vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
+    if kh * kw > 1:
+        # cin-major issue order: the halo kernel's input block then revisits
+        # (no re-DMA) across consecutive taps of one cin tile — the layout
+        # the halo HBM-traffic model assumes.  Order-agnostic everywhere
+        # else (the kernels decode each tile id independently).
+        vs = conv_cin_major(vs, (cin + cp) // vk_l)
     spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, cin_pad=cp)
     wp_dense = wp.reshape(kh, kw, cin + cp, cout)[:, :, :cin]
     return spec, wp_dense
 
 
 def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True, residual=None,
-                      impl: str = "jnp"):
+                      impl: str = "auto"):
     """Run one conv through the vector-sparse path.
 
     ``entry`` is a `SparseConv` or a bare `VectorSparse` (legacy 3x3/s1).
@@ -276,7 +283,7 @@ def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True, residual=None,
 
 
 def apply_sparse_fc(x, entry, *, bias=None, fuse_relu=False, residual=None,
-                    impl: str = "jnp"):
+                    impl: str = "auto"):
     """Run one FC layer through the vector-sparse path.
 
     ``entry`` is a `SparseFC` or a bare `VectorSparse`.  The encoded matrix
@@ -378,7 +385,7 @@ def _pool(l: Pool, x):
     raise ValueError(l.kind)
 
 
-def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "jnp",
+def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "auto",
               collect=None):
     """Walk the graph: x (N, H, W, C) -> logits / features.
 
@@ -469,7 +476,7 @@ class BatchedApply:
     net: SparseNet
     params: dict
     sparse: dict | None = None
-    impl: str = "jnp"
+    impl: str = "auto"
     key: tuple = ()
     cache: dict = dataclasses.field(default_factory=dict)
 

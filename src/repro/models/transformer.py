@@ -341,17 +341,30 @@ def _lm_apply_inner(params, batch, cfg):
     return logits
 
 
-def prefill(params, batch, cfg, *, capacity: int):
-    """Full-context forward; returns (last-token logits (B, Vp), caches)."""
+def prefill(params, batch, cfg, *, capacity: int, logit_pos=None):
+    """Full-context forward; returns (logits (B, Vp), caches).
+
+    Logits are read at the last position by default; ``logit_pos`` (a
+    traced scalar) reads them at a chosen position instead — the hook that
+    lets a backfill prefill right-pad its context up to a bucketed length
+    (bounding the compile-shape family) while still emitting the token
+    after the true context end.  The right-pad junk beyond ``logit_pos``
+    is causally masked for the logits and its K/V rows are overwritten by
+    subsequent decode steps before any query can attend them.
+    """
     with precision_flow(cfg.bf16_flow):
-        return _prefill_inner(params, batch, cfg, capacity=capacity)
+        return _prefill_inner(params, batch, cfg, capacity=capacity,
+                              logit_pos=logit_pos)
 
 
-def _prefill_inner(params, batch, cfg, *, capacity: int):
+def _prefill_inner(params, batch, cfg, *, capacity: int, logit_pos=None):
     x = _inputs_to_hidden(params, batch, cfg)
     h, caches, _ = forward_hidden(params, x, cfg, mode="prefill",
                                   capacity=capacity)
-    h_last = h[:, -1:, :]
+    if logit_pos is None:
+        h_last = h[:, -1:, :]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(h, logit_pos, 1, axis=1)
     logits = jnp.einsum(
         "btd,dv->btv", h_last, unembed_matrix(params, cfg),
         preferred_element_type=jnp.float32,

@@ -107,6 +107,48 @@ class TestLMServing:
         with pytest.raises(ValueError, match="could not backfill"):
             lm_server.run_batch(reqs)
 
+    def test_backfill_prefill_shape_bucketing(self):
+        """Backfills at distinct retirement steps share one bucketed
+        prefill executable (the recompile-storm fix): the context is
+        right-padded to the len_bucket ladder and the first token read at
+        the true position, so the jit cache holds one entry, not one per
+        distinct context length."""
+        cfg = get_config("qwen1.5-4b").reduce()   # attention KV caches
+        srv = Server(cfg, batch=2, capacity=64, len_bucket=8)
+        assert srv.backend.backfill_bucket == 8
+        reqs = _reqs(cfg, [2, 8, 3, 4], seed=7)
+        stats = srv.serve(reqs)
+        assert len(stats) == 1
+        assert stats[0]["backfills"] == 2        # at two distinct steps
+        assert [len(r.out) for r in reqs] == [2, 8, 3, 4]
+        # both backfill contexts (9 and 11) round to the same 16-bucket
+        assert srv.backend._prefill_at._cache_size() == 1
+
+    def test_bucketed_backfill_matches_exact(self):
+        """Right-padding the backfill context to the bucket must not change
+        a single emitted token vs the exact-length prefill (junk K/V rows
+        are masked, then overwritten by the next decode steps)."""
+        cfg = get_config("qwen1.5-4b").reduce()
+        outs = []
+        for bucket in (8, 1):                    # bucketed vs exact
+            srv = Server(cfg, batch=2, capacity=64, len_bucket=8)
+            srv.backend.backfill_bucket = bucket
+            reqs = _reqs(cfg, [2, 8, 3, 4], seed=7)
+            stats = srv.serve(reqs)
+            assert stats[0]["backfills"] == 2
+            outs.append([r.out for r in reqs])
+        assert outs[0] == outs[1]
+
+    def test_stateful_caches_keep_exact_backfill(self):
+        """rwkv state caches fold in every processed token, and
+        sliding-window K/V caches are circular (right-pad junk would wrap
+        onto real in-window history): both keep the exact-length backfill
+        (bucket 1) even when admission buckets lengths."""
+        for arch in ("rwkv6-3b", "gemma3-12b"):   # recurrent / windowed
+            cfg = get_config(arch).reduce()
+            srv = Server(cfg, batch=1, capacity=32, len_bucket=16)
+            assert srv.backend.backfill_bucket == 1, arch
+
     def test_modality_dispatch_fields(self):
         assert get_config("rwkv6-3b").modality == "lm"
         assert get_config("vscnn-vgg16").modality == "cnn"
@@ -139,7 +181,9 @@ class TestCNNServing:
         s = stats[0]
         assert s["steps"] == 2           # wave of 4, then the backfilled 1
         assert s["backfills"] == 1 and s["finished"] == 5
-        assert s["compiles"] == 1        # one batch bucket, one executable
+        # one executable for the full wave + one for the shrunk final wave
+        # (width 1) — the zero-pad lanes are no longer computed
+        assert s["compiles"] == 2
         ref = np.asarray(G.net_apply(
             srv.net, srv.params, jnp.asarray(np.stack(imgs)),
             sparse=srv.sparse, impl="jnp"))
@@ -164,6 +208,29 @@ class TestCNNServing:
         assert sum(s["finished"] for s in stats) == 3
         assert all(len(r.out) == 1 for r in reqs)
         assert srv.backend.apply.compiles == 2
+
+    def test_final_wave_shrinks_to_occupied_slots(self):
+        """A partial wave computes on a batch shrunk to the occupied slots
+        (pow2 ladder), not the full width padded with zero images."""
+        cfg = get_config("vscnn-vgg16").reduce()
+        srv = CNNServer(cfg, batch=4, seed=0)
+        rng = np.random.default_rng(4)
+        reqs = [ImageRequest(rid=i,
+                             image=rng.standard_normal((32, 32, 3))
+                                      .astype(np.float32))
+                for i in range(7)]
+        stats = srv.serve(reqs)
+        assert sum(s["finished"] for s in stats) == 7
+        # wave of 4, then 3 backfills -> a 3-occupied wave on a width-4
+        # batch: the pow2 ladder reuses the full-width executable
+        widths = {k[-1][0] for k in srv.backend.apply.cache}
+        assert widths == {4}
+        # a lone trailing image lands on a width-1 executable
+        srv.serve([ImageRequest(
+            rid=9, image=rng.standard_normal((32, 32, 3))
+                            .astype(np.float32))])
+        widths = {k[-1][0] for k in srv.backend.apply.cache}
+        assert widths == {4, 1}
 
     def test_fixed_input_rejects_oversize(self):
         cfg = get_config("vscnn-vgg16").reduce()   # image_size 32
