@@ -8,25 +8,33 @@
    claim — it demonstrates the cycle model's work∝density on a real
    backend).
 3. Pallas kernel allclose + grid-size-vs-density check (interpret mode).
-4. Generalized conv geometry sweep: per-(kernel, stride) speedup-vs-density
-   rows for the vsconv kernel family (1x1 / 3x3 / 5x5 / 7x7, stride 1-2),
-   reporting the structural FLOP ratio, jnp-path wall clock, interpret-mode
-   parity for *both* conv input layouts (halo direct input vs row-tap
-   stack), and the modeled HBM bytes of each layout — the bandwidth story
-   is part of the benchmarked contract, not just the MAC skips.
-5. ResNet-18 per-layer speedup-vs-density (``--resnet18``): the graph
-   executor + cycle model walked over every conv (residual blocks, BN
-   folded), emitting a ``BENCH_resnet18.json`` artifact so CI tracks the
-   perf trajectory — now with per-layer bytes / arithmetic-intensity
-   columns for the halo and stack layouts.
+4. Generalized conv geometry sweep: per-(kernel, stride, groups, dilation)
+   speedup-vs-density rows for the vsconv kernel family (1x1 / 3x3 / 5x5 /
+   7x7, stride 1-2, grouped / depthwise / dilated taps), reporting the
+   structural FLOP ratio, jnp-path wall clock, interpret-mode parity for
+   *both* conv input layouts (halo direct input vs row-tap stack), and the
+   modeled HBM bytes of each layout — the bandwidth story is part of the
+   benchmarked contract, not just the MAC skips.
+5. Per-network per-layer speedup-vs-density (``--net resnet18 | resnet50 |
+   mobilenet_v1``, ``--resnet18`` kept as an alias): the graph executor +
+   cycle model walked over every conv (residual blocks, BN folded,
+   depthwise stages), emitting a ``BENCH_<net>.json`` artifact so CI
+   tracks the perf trajectory — with per-layer bytes /
+   arithmetic-intensity columns for the halo and stack layouts.
 6. ``--gate-traffic``: CI smoke gate — runs both impls on the ResNet
-   7x7/s2 stem geometry (interpret parity) and fails unless the halo
-   path's modeled ``bytes_accessed`` is strictly below the stack path's.
+   7x7/s2 stem geometry and a MobileNet depthwise 3x3/s2 layer (interpret
+   parity) and fails unless the halo path's modeled ``bytes_accessed`` is
+   strictly below the stack path's on both.
+7. ``--compare-baseline PATH``: CI regression gate — re-runs the
+   per-network bench at the committed baseline's settings and fails on a
+   >10% per-layer regression of cycle speedup or modeled bytes, writing a
+   per-layer delta table to ``$GITHUB_STEP_SUMMARY`` when set.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import jax
@@ -101,28 +109,46 @@ def run() -> list[dict]:
     return rows
 
 
-# (kh, kw, stride, h, w, cin, cout, vk, vn) — the generalized kernel family:
-# VGG's 3x3/s1 plus the ResNet vocabulary (7x7-s2 stem, 1x1 projection,
-# stride-2 downsample) and a 5x5 mid-size tap.
+# (kh, kw, stride, groups, dilation, h, w, cin, cout, vk, vn) — the
+# generalized kernel family: VGG's 3x3/s1 plus the ResNet vocabulary
+# (7x7-s2 stem, 1x1 projection, stride-2 downsample), a 5x5 mid-size tap,
+# grouped and depthwise (groups == cin) 3x3s, and dilated taps.
 CONV_GEOMETRIES = [
-    (1, 1, 1, 28, 28, 128, 128, 32, 128),
-    (1, 1, 2, 28, 28, 128, 128, 32, 128),
-    (3, 3, 1, 28, 28, 64, 128, 32, 128),
-    (3, 3, 2, 28, 28, 64, 128, 32, 128),
-    (5, 5, 1, 14, 14, 32, 128, 32, 128),
-    (7, 7, 2, 28, 28, 8, 64, 8, 64),
+    (1, 1, 1, 1, 1, 28, 28, 128, 128, 32, 128),
+    (1, 1, 2, 1, 1, 28, 28, 128, 128, 32, 128),
+    (3, 3, 1, 1, 1, 28, 28, 64, 128, 32, 128),
+    (3, 3, 2, 1, 1, 28, 28, 64, 128, 32, 128),
+    (5, 5, 1, 1, 1, 14, 14, 32, 128, 32, 128),
+    (7, 7, 2, 1, 1, 28, 28, 8, 64, 8, 64),
+    (3, 3, 1, 1, 2, 28, 28, 64, 128, 32, 128),   # dilated 3x3 d2
+    (3, 3, 1, 4, 1, 28, 28, 64, 128, 16, 32),    # grouped 3x3 g4
+    (3, 3, 2, 128, 1, 28, 28, 128, 128, 1, 128),  # depthwise 3x3/s2
 ]
 
 
-def _conv_bytes(kh, kw, stride, h, w, cin, cout, vk, vn, s_steps,
-                batch: int = 4) -> dict:
+def _geom_vs(rng, kh, kw, cin, cout, vk, vn, groups, density):
+    """Encode one sweep geometry's sparse weight (grouped/dw aware)."""
+    from repro.core import conv_cin_major
+
+    cin_g = cin // groups
+    wm = rng.standard_normal((kh * kw * cin_g, cout)).astype(np.float32)
+    wp, _ = prune_vectors_balanced(wm, density, vk, vn)
+    vs = encode(jnp.asarray(wp), vk, vn)
+    if kh * kw > 1 and groups < cin:
+        vs = conv_cin_major(vs, cin_g // vk)  # the serving tile order
+    return vs
+
+
+def _conv_bytes(kh, kw, stride, groups, dilation, h, w, cin, cout, vk, vn,
+                s_steps, batch: int = 4) -> dict:
     """Modeled HBM bytes + arithmetic intensity for both conv layouts."""
     from repro.core.accel_model import conv_layer_traffic
 
     out = {}
     for impl in ("halo", "stack"):
         tr = conv_layer_traffic(
-            (batch, h, w, cin), kh=kh, kw=kw, stride=stride, cout=cout,
+            (batch, h, w, cin), kh=kh, kw=kw, stride=stride, groups=groups,
+            dilation=dilation, cout=cout,
             s_steps=s_steps, vk=vk, vn=vn, impl=impl)
         out[f"bytes_{impl}"] = tr.bytes_accessed
         out[f"ai_{impl}"] = round(tr.arithmetic_intensity, 2)
@@ -133,19 +159,14 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
     """Per-geometry speedup-vs-density: structural FLOP ratio (the kernel's
     grid shrinks with density), jnp-path wall clock, modeled HBM bytes for
     the halo and stack layouts, and Pallas interpret parity of both impls
-    vs the oracle."""
-    from repro.core import conv_cin_major
-
+    vs the oracle — grouped, depthwise and dilated geometries included."""
     rng = np.random.default_rng(1)
     rows = []
-    for kh, kw, stride, h, w, cin, cout, vk, vn in CONV_GEOMETRIES:
+    for (kh, kw, stride, groups, dilation, h, w, cin, cout, vk,
+         vn) in CONV_GEOMETRIES:
         base_us = None
         for density in densities:
-            wm = rng.standard_normal((kh * kw * cin, cout)).astype(np.float32)
-            wp, _ = prune_vectors_balanced(wm, density, vk, vn)
-            vs = encode(jnp.asarray(wp), vk, vn)
-            if kh * kw > 1:
-                vs = conv_cin_major(vs, cin // vk)  # the serving tile order
+            vs = _geom_vs(rng, kh, kw, cin, cout, vk, vn, groups, density)
             x = jnp.asarray(
                 np.maximum(rng.standard_normal((4, h, w, cin)), 0),
                 jnp.float32)
@@ -153,7 +174,8 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
             flop_ratio = vs.density
             # jnp structural path wall clock (CPU; demonstrates work∝density)
             fn = jax.jit(lambda xx: vs_conv2d(
-                xx, vs, kh=kh, kw=kw, stride=stride, impl="jnp"))
+                xx, vs, kh=kh, kw=kw, stride=stride, groups=groups,
+                dilation=dilation, impl="jnp"))
             fn(x).block_until_ready()
             t0 = time.time()
             for _ in range(5):
@@ -162,21 +184,26 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
             us = (time.time() - t0) / 5 * 1e6
             if base_us is None:
                 base_us = us  # density 1.0 reference
+            tag = (f"vsconv_{kh}x{kw}_s{stride}"
+                   + (f"_g{groups}" if groups > 1 else "")
+                   + (f"_d{dilation}" if dilation > 1 else ""))
             row = {
-                "name": f"vsconv_{kh}x{kw}_s{stride}_density_{density}",
+                "name": f"{tag}_density_{density}",
                 "us_per_call": round(us, 1),
                 "speedup_vs_dense": round(base_us / us, 3),
                 "structural_flops_vs_dense": round(flop_ratio, 4),
                 "expected": density,
             }
-            row.update(_conv_bytes(kh, kw, stride, h, w, cin, cout, vk, vn,
-                                   vs.nnz_per_strip))
+            row.update(_conv_bytes(kh, kw, stride, groups, dilation, h, w,
+                                   cin, cout, vk, vn, vs.nnz_per_strip))
             # Pallas interpret parity at the smallest density only (slow):
             # both input layouts against the oracle
             if density == densities[-1]:
-                ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride)
+                ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride,
+                                 groups=groups, dilation=dilation)
                 for impl in ("halo", "stack"):
                     out_p = vsconv(x, vs, kh=kh, kw=kw, stride=stride,
+                                   groups=groups, dilation=dilation,
                                    impl=impl)
                     row[f"pallas_{impl}_rel_err_vs_ref"] = float(
                         np.abs(np.asarray(out_p) - np.asarray(ref)).max()
@@ -185,26 +212,34 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
     return rows
 
 
-def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
-                 num_classes: int = 200, batch: int = 1,
-                 out_path: str | None = None) -> list[dict]:
-    """ResNet-18 per-layer speedup-vs-density through the graph executor.
+def _net_builders() -> dict:
+    from repro.models.graph import (
+        build_mobilenet_v1, build_resnet18, build_resnet50,
+    )
+    return {"resnet18": build_resnet18, "resnet50": build_resnet50,
+            "mobilenet_v1": build_mobilenet_v1}
+
+
+def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
+                image_size: int = 32, num_classes: int = 200, batch: int = 1,
+                out_path: str | None = None) -> list[dict]:
+    """Per-network per-layer speedup-vs-density through the graph executor.
 
     For each density: sparsify the whole network (BN folded, residuals
-    fused), time the jnp structural forward (whole-net wall clock; CPU
-    demonstrates work ∝ density, not the TPU claim), and walk the same
-    graph through the accelerator cycle model for per-layer VSCNN-vs-dense
-    cycle speedups plus the DRAM traffic model for per-layer bytes /
-    arithmetic intensity under both conv input layouts (halo vs stack).
-    ``out_path`` writes the rows as a JSON artifact.
+    fused, depthwise stages on the per-channel tap path), time the jnp
+    structural forward (whole-net wall clock; CPU demonstrates work ∝
+    density, not the TPU claim), and walk the same graph through the
+    accelerator cycle model for per-layer VSCNN-vs-dense cycle speedups
+    plus the DRAM traffic model for per-layer bytes / arithmetic intensity
+    under both conv input layouts (halo vs stack).  ``out_path`` writes the
+    rows as a JSON artifact (``BENCH_<net>.json`` in CI).
     """
     from repro.core.accel_model import PE_4_14_3, aggregate, \
         network_cycle_reports, network_traffic_reports
-    from repro.models.graph import build_resnet18, collect_conv_traffic, \
-        net_apply, sparsify
+    from repro.models.graph import collect_conv_traffic, net_apply, sparsify
     from repro.models.layers import init_params
 
-    net = build_resnet18(num_classes, image_size=image_size)
+    net = _net_builders()[net_name](num_classes, image_size=image_size)
     params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
     rng = np.random.default_rng(3)
     x = jnp.asarray(rng.standard_normal((batch, image_size, image_size, 3)),
@@ -232,10 +267,16 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
         for name, rep in reports:
             layer = next(l for l in net.conv_layers() if l.name == name)
             tr = byte_reports[name]
+            geom = f"{layer.kh}x{layer.kw}_s{layer.stride}"
+            if layer.groups > 1:
+                geom += "_dw" if layer.groups == layer.cin \
+                    else f"_g{layer.groups}"
+            if layer.dilation > 1:
+                geom += f"_d{layer.dilation}"
             rows.append({
-                "name": f"resnet18_{name}_density_{density}",
+                "name": f"{net_name}_{name}_density_{density}",
                 "layer": name,
-                "geometry": f"{layer.kh}x{layer.kw}_s{layer.stride}",
+                "geometry": geom,
                 "density": density,
                 "cycle_speedup": round(rep.speedup, 3),
                 "vscnn_cycles": rep.vscnn,
@@ -249,7 +290,7 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
             })
         agg = aggregate([r for _, r in reports])
         rows.append({
-            "name": f"resnet18_net_density_{density}",
+            "name": f"{net_name}_net_density_{density}",
             "layer": "__net__",
             "density": density,
             "cycle_speedup": round(agg.speedup, 3),
@@ -264,9 +305,11 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
         })
     if out_path:
         artifact = {
-            "bench": "resnet18_per_layer",
+            "bench": f"{net_name}_per_layer",
+            "net": net_name,
             "image_size": image_size,
             "num_classes": num_classes,
+            "batch": batch,
             "pe": [pe.blocks, pe.rows, pe.cols],
             "densities": list(densities),
             "rows": rows,
@@ -276,25 +319,132 @@ def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
     return rows
 
 
+def run_resnet18(densities=(1.0, 0.5, 0.25), *, image_size: int = 32,
+                 num_classes: int = 200, batch: int = 1,
+                 out_path: str | None = None) -> list[dict]:
+    """Back-compat alias for `run_network("resnet18", ...)`."""
+    return run_network("resnet18", densities, image_size=image_size,
+                       num_classes=num_classes, batch=batch,
+                       out_path=out_path)
+
+
+# --------------------------------------------------------------------------
+# Benchmark-regression gate (--compare-baseline)
+# --------------------------------------------------------------------------
+
+# per-layer metrics gated against the committed baseline.  Wall-clock
+# columns are deliberately absent: only deterministic model outputs (cycle
+# counts from seeded weights/activations, modeled bytes from the encoded
+# geometry) are stable enough to gate at 10%.
+COMPARE_HIGHER_IS_BETTER = ("cycle_speedup",)
+COMPARE_LOWER_IS_BETTER = ("bytes_halo", "bytes_stack")
+
+
+def compare_baseline(rows: list[dict], baseline: dict, *,
+                     tol: float = 0.10) -> tuple[list[str], list[str]]:
+    """Compare fresh bench rows against a committed baseline artifact.
+
+    Returns ``(failures, table_lines)``: a failure for every per-layer
+    metric that regressed by more than ``tol`` (speedup down >10%, or
+    modeled bytes up >10%) and for every baseline row that vanished; the
+    table is a GitHub-flavoured markdown per-layer delta table for
+    ``$GITHUB_STEP_SUMMARY``.  Rows new in this run (new layers/nets) pass
+    — they have no baseline to regress against.
+    """
+    cur = {r["name"]: r for r in rows}
+    failures: list[str] = []
+    lines = [
+        "| layer row | metric | baseline | current | delta | status |",
+        "|---|---|---|---|---|---|",
+    ]
+    for b in baseline["rows"]:
+        name = b["name"]
+        c = cur.get(name)
+        if c is None:
+            failures.append(f"{name}: row missing from current bench")
+            lines.append(f"| {name} | — | — | MISSING | — | FAIL |")
+            continue
+        for metric, better in (
+            [(m, "higher") for m in COMPARE_HIGHER_IS_BETTER]
+            + [(m, "lower") for m in COMPARE_LOWER_IS_BETTER]
+        ):
+            if metric not in b or metric not in c:
+                continue
+            bv, cv = float(b[metric]), float(c[metric])
+            delta = (cv - bv) / max(abs(bv), 1e-12)
+            if better == "higher":
+                bad = cv < bv * (1.0 - tol)
+            else:
+                bad = cv > bv * (1.0 + tol)
+            status = "FAIL" if bad else "ok"
+            if bad:
+                failures.append(
+                    f"{name}: {metric} {bv:g} -> {cv:g} "
+                    f"({delta:+.1%}, tol ±{tol:.0%})")
+            lines.append(
+                f"| {name} | {metric} | {bv:g} | {cv:g} | {delta:+.1%} "
+                f"| {status} |")
+    return failures, lines
+
+
+def gate_baseline(baseline_path: str, *, tol: float = 0.10,
+                  out_path: str | None = None) -> int:
+    """CI regression gate: re-run the per-network bench at the committed
+    baseline's settings and fail on any >tol per-layer regression.  Writes
+    the per-layer delta table to ``$GITHUB_STEP_SUMMARY`` when set;
+    ``out_path`` writes the fresh rows as the run's bench artifact (so the
+    gate run doubles as the trajectory artifact — no second bench pass)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    rows = run_network(
+        baseline.get("net", "resnet18"),
+        tuple(baseline["densities"]),
+        image_size=baseline["image_size"],
+        num_classes=baseline["num_classes"],
+        batch=baseline.get("batch", 1),
+        out_path=out_path,
+    )
+    failures, lines = compare_baseline(rows, baseline, tol=tol)
+    summary = "\n".join(
+        [f"## Benchmark regression gate — `{baseline_path}` "
+         f"({'FAIL' if failures else 'PASS'})", ""]
+        + lines + [""]
+        + [f"- {f}" for f in failures])
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary + "\n")
+    print(summary)
+    if failures:
+        print(f"baseline gate: FAIL ({len(failures)} regression(s))")
+        return 1
+    print("baseline gate: PASS")
+    return 0
+
+
 def gate_traffic() -> int:
     """CI smoke gate for the halo layout's bandwidth claim.
 
-    Runs both conv impls on the ResNet 7x7/s2 stem geometry in interpret
-    mode (allclose vs the oracle) and checks the modeled HBM bytes: the
-    halo path must be *strictly below* the stack path — at the ImageNet
-    stem size and at the reduced CI size.  Returns a process exit code.
+    Runs both conv impls in interpret mode (allclose vs the oracle) and
+    checks the modeled HBM bytes — the halo path must be *strictly below*
+    the stack path — on two geometries: the ResNet 7x7/s2 stem and a
+    MobileNetV1 depthwise 3x3/s2 layer (512 channels, the stage-4
+    downsample), each at the ImageNet size and the reduced CI size.
+    Returns a process exit code.
     """
     from repro.core import conv_cin_major
     from repro.core.accel_model import conv_layer_traffic
 
-    kh, kw, stride, cin, cout, vk, vn = 7, 7, 2, 8, 64, 8, 64
     rng = np.random.default_rng(7)
+    ok = True
+
+    # --- ResNet 7x7/s2 stem -------------------------------------------------
+    kh, kw, stride, cin, cout, vk, vn = 7, 7, 2, 8, 64, 8, 64
     wm = rng.standard_normal((kh * kw * cin, cout)).astype(np.float32)
     vs = conv_cin_major(encode(jnp.asarray(wm), vk, vn), cin // vk)
     x = jnp.asarray(
         np.maximum(rng.standard_normal((1, 28, 28, cin)), 0), jnp.float32)
     ref = vsconv_ref(x, vs, kh=kh, kw=kw, stride=stride)
-    ok = True
     for impl in ("halo", "stack"):
         out = vsconv(x, vs, kh=kh, kw=kw, stride=stride, impl=impl)
         rel = float(np.abs(np.asarray(out) - np.asarray(ref)).max()
@@ -313,19 +463,59 @@ def gate_traffic() -> int:
         if not tr["halo"].bytes_accessed < tr["stack"].bytes_accessed:
             print("FAIL: halo modeled bytes not strictly below stack")
             ok = False
+
+    # --- MobileNetV1 depthwise 3x3/s2 (512ch stage-4 downsample) ------------
+    kh, kw, stride, c, vc = 3, 3, 2, 512, 128
+    wm = rng.standard_normal((kh * kw, c)).astype(np.float32)
+    dvs = encode(jnp.asarray(
+        prune_vectors_balanced(wm, 0.5, 1, vc)[0]), 1, vc)
+    x = jnp.asarray(
+        np.maximum(rng.standard_normal((1, 14, 14, c)), 0), jnp.float32)
+    ref = vsconv_ref(x, dvs, kh=kh, kw=kw, stride=stride, groups=c)
+    for impl in ("halo", "stack"):
+        out = vsconv(x, dvs, kh=kh, kw=kw, stride=stride, groups=c,
+                     impl=impl)
+        rel = float(np.abs(np.asarray(out) - np.asarray(ref)).max()
+                    / np.abs(np.asarray(ref)).max())
+        print(f"dw 3x3/s2 {impl}: rel err vs ref {rel:.2e}")
+        ok &= rel < 1e-5
+    for h in (14, 28):
+        tr = {impl: conv_layer_traffic(
+                  (1, h, h, c), kh=kh, kw=kw, stride=stride, groups=c,
+                  cout=c, s_steps=dvs.nnz_per_strip, vk=1, vn=vc, impl=impl)
+              for impl in ("halo", "stack")}
+        ratio = tr["stack"].bytes_accessed / max(tr["halo"].bytes_accessed, 1)
+        print(f"dw 3x3/s2 @{h}: halo {tr['halo'].bytes_accessed:,} B, "
+              f"stack {tr['stack'].bytes_accessed:,} B "
+              f"(stack/halo {ratio:.2f}x)")
+        if not tr["halo"].bytes_accessed < tr["stack"].bytes_accessed:
+            print("FAIL: halo modeled bytes not strictly below stack (dw)")
+            ok = False
+
     print("traffic gate:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 
 
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
-    ap.add_argument("--resnet18", action="store_true",
-                    help="run the ResNet-18 per-layer table instead of the "
+    ap.add_argument("--net", default=None,
+                    choices=["resnet18", "resnet50", "mobilenet_v1"],
+                    help="run a per-layer network table instead of the "
                          "kernel micro-benches")
+    ap.add_argument("--resnet18", action="store_true",
+                    help="alias for --net resnet18")
     ap.add_argument("--gate-traffic", action="store_true",
-                    help="CI gate: both conv impls on the 7x7/s2 stem; fail "
-                         "unless the halo path's modeled bytes_accessed is "
-                         "strictly below the stack path's")
+                    help="CI gate: both conv impls on the 7x7/s2 stem and a "
+                         "depthwise 3x3/s2 MobileNet layer; fail unless the "
+                         "halo path's modeled bytes_accessed is strictly "
+                         "below the stack path's")
+    ap.add_argument("--compare-baseline", default=None, metavar="PATH",
+                    help="CI gate: re-run the per-network bench at the "
+                         "committed baseline's settings and fail on a >10%% "
+                         "per-layer cycle-speedup or modeled-bytes "
+                         "regression (delta table to $GITHUB_STEP_SUMMARY)")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="regression tolerance for --compare-baseline")
     ap.add_argument("--size", type=int, default=32)
     ap.add_argument("--classes", type=int, default=200)
     ap.add_argument("--out", default=None,
@@ -334,9 +524,13 @@ if __name__ == "__main__":
     args = ap.parse_args()
     if args.gate_traffic:
         raise SystemExit(gate_traffic())
-    if args.resnet18:
-        for r in run_resnet18(image_size=args.size, num_classes=args.classes,
-                              out_path=args.out):
+    if args.compare_baseline:
+        raise SystemExit(gate_baseline(args.compare_baseline, tol=args.tol,
+                                       out_path=args.out))
+    net = args.net or ("resnet18" if args.resnet18 else None)
+    if net:
+        for r in run_network(net, image_size=args.size,
+                             num_classes=args.classes, out_path=args.out):
             print(r)
     else:
         for r in run():

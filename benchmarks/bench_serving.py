@@ -24,6 +24,9 @@ summary checking that batched sparse throughput >= batch-1 throughput at
 equal density.
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --arch vscnn-vgg16
+(also: vscnn-resnet18 / vscnn-resnet50 / vscnn-mobilenet-v1 — any CNN
+registry arch; MobileNet exercises the depthwise tap kernels' traffic
+columns.)
 """
 from __future__ import annotations
 

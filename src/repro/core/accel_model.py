@@ -99,31 +99,57 @@ def _input_vector_occupancy(x_nz: np.ndarray, rows: int) -> np.ndarray:
     return x_nz.reshape(hc, rows, w, cin).any(axis=1)
 
 
-def _same_geometry(size: int, k: int, stride: int) -> tuple[int, int]:
+def _same_geometry(size: int, k: int, stride: int,
+                   dilation: int = 1) -> tuple[int, int]:
     """XLA-"SAME": (out_size, pad_low)."""
     from .sparse_ops import same_pads  # lazy: keep accel_model numpy-only
 
-    out, lo, _ = same_pads(size, k, stride)
+    out, lo, _ = same_pads(size, k, stride, dilation)
     return out, lo
 
 
 def conv_layer_cycles(
-    x: np.ndarray, w: np.ndarray, pe: PEConfig, *, stride: int = 1
+    x: np.ndarray, w: np.ndarray, pe: PEConfig, *, stride: int = 1,
+    groups: int = 1, dilation: int = 1,
 ) -> CycleReport:
-    """Cycle counts for one kh x kw / stride / SAME conv layer.
+    """Cycle counts for one kh x kw / stride / dilation / SAME conv layer,
+    optionally grouped.
 
     x : (H, W, Cin) input activations (already post-ReLU: zeros are real)
-    w : (kh, kw, Cin, Cout) possibly vector-pruned weights
+    w : (kh, kw, Cin/groups, Cout) possibly vector-pruned weights (XLA's
+        grouped HWIO layout: output block g reads input channel group g)
 
     Generalized geometry: an input column vector broadcast into the array
     pairs with weight kernel column ``kx`` only when some output column reads
-    it — i.e. when its column index is congruent to ``kx - pad_left`` mod
-    ``stride`` (for stride 1, every column pairs with every kx, the paper's
-    Table-I accounting).  Boundary partial sums are issued and discarded,
-    as in the paper.
+    it — i.e. when its column index is congruent to ``kx*dilation - pad_left``
+    mod ``stride`` (for stride 1, every column pairs with every kx, the
+    paper's Table-I accounting).  Boundary partial sums are issued and
+    discarded, as in the paper.
+
+    Grouped convs reduce to the ungrouped accounting: every per-channel sum
+    here couples an input channel only with *its own* weight columns, so
+    rearranging the block-diagonal grouped weight into a virtual
+    (kh, kw, Cin, Cout/groups) layout — row c holding input channel c's own
+    group's columns — makes the single pass below compute the exact
+    per-group totals (dense, vscnn, MACs are per-group-additive; the ideal
+    bounds get the global packing).  Depthwise (groups == Cin) is one pass,
+    not Cin slices.
     """
-    x_nz = np.asarray(x) != 0
-    w_nz = np.asarray(w) != 0
+    x = np.asarray(x)
+    w = np.asarray(w)
+    if groups > 1:
+        cin_g = x.shape[-1] // groups
+        cout_g = w.shape[-1] // groups
+        assert w.shape[2] == cin_g, (w.shape, x.shape, groups)
+        kh_, kw_ = w.shape[:2]
+        # (kh, kw, cin_g, G*cout_g) -> (kh, kw, G*cin_g, cout_g): input
+        # channel c = g*cin_g + i picks up exactly group g's couts
+        w = w.reshape(kh_, kw_, cin_g, groups, cout_g) \
+             .transpose(0, 1, 3, 2, 4) \
+             .reshape(kh_, kw_, groups * cin_g, cout_g)
+        return conv_layer_cycles(x, w, pe, stride=stride, dilation=dilation)
+    x_nz = x != 0
+    w_nz = w != 0
     h, width, cin = x_nz.shape
     kh, kw, wcin, cout = w_nz.shape
     assert wcin == cin, (w_nz.shape, cin)
@@ -132,10 +158,10 @@ def conv_layer_cycles(
     wv = w_nz.any(axis=0)  # weight column occupancy: (kw, Cin, Cout)
 
     hc = iv.shape[0]
-    _, pad_l = _same_geometry(width, kw, stride)
+    _, pad_l = _same_geometry(width, kw, stride, dilation)
     # input columns compatible with weight column kx (see docstring)
     col_sets = [
-        np.nonzero((np.arange(width) - (kx - pad_l)) % stride == 0)[0]
+        np.nonzero((np.arange(width) - (kx * dilation - pad_l)) % stride == 0)[0]
         for kx in range(kw)
     ]
 
@@ -175,18 +201,20 @@ def conv_layer_cycles(
     ideal_vector = math.ceil(pairs / pe.blocks)
 
     # Ideal fine-grained: nonzero MACs / total PEs.
-    ho, pad_t = _same_geometry(h, kh, stride)
+    ho, pad_t = _same_geometry(h, kh, stride, dilation)
     wo = math.ceil(width / stride)
-    pb = max(stride * (ho - 1) + kh - h - pad_t, 0)
-    pr = max(stride * (wo - 1) + kw - width - pad_l, 0)
+    ke_h = (kh - 1) * dilation + 1
+    ke_w = (kw - 1) * dilation + 1
+    pb = max(stride * (ho - 1) + ke_h - h - pad_t, 0)
+    pr = max(stride * (wo - 1) + ke_w - width - pad_l, 0)
     xp = np.pad(x_nz, ((pad_t, pb), (pad_l, pr), (0, 0)))
     # hits[ky,kx,cin] = # output positions whose input tap is nonzero
     hits = np.stack(
         [
             [
                 xp[
-                    ky : ky + stride * (ho - 1) + 1 : stride,
-                    kx : kx + stride * (wo - 1) + 1 : stride,
+                    ky * dilation : ky * dilation + stride * (ho - 1) + 1 : stride,
+                    kx * dilation : kx * dilation + stride * (wo - 1) + 1 : stride,
                 ].sum(axis=(0, 1))
                 for kx in range(kw)
             ]
@@ -255,6 +283,8 @@ def conv_layer_traffic(
     kh: int,
     kw: int,
     stride: int = 1,
+    groups: int = 1,
+    dilation: int = 1,
     cout: int,
     s_steps: int,
     vk: int,
@@ -269,18 +299,24 @@ def conv_layer_traffic(
 
     ``x_shape`` is the *encoded* input (N, H, W, Cin) — Cin a vk multiple,
     pad channels included; ``cout`` the encoded output width (a vn
-    multiple); ``s_steps`` the stored tiles per strip (density * kh*kw*CB).
-    ``impl``: 'halo' (direct input, halo-blocked; assumes the cin-major tile
-    order `models.graph.sparse_conv_from_dense` emits) or 'stack' (the
-    materialized row-tap/phase stack).  1x1 convs route through the sparse
-    matmul over pixels in both impls and cost the same.
+    multiple); ``s_steps`` the stored tiles per strip (density *
+    kh*kw*CB/groups).  ``impl``: 'halo' (direct input, halo-blocked;
+    assumes the cin-major tile order `models.graph.sparse_conv_from_dense`
+    emits) or 'stack' (the materialized row-tap/phase stack).  Ungrouped
+    1x1 convs route through the sparse matmul over pixels in both impls and
+    cost the same.  A grouped conv's strips only ever fetch their own
+    group's Cin/groups channels (per-group fetch, not full-cin); depthwise
+    (groups == Cin, vk == 1, vn == the channel-tile width) uses the
+    per-channel tap kernels' costs — the halo block there is fetched
+    exactly once per (strip, row-block).
 
     The kernel-side formulas are imported from `repro.kernels.vsconv` —
     the same numbers the kernels hand XLA as `pl.CostEstimate`, so the
     model, the compiler hint, and the benchmark gate can never drift.
     """
     from repro.kernels.vsconv import (  # lazy: keep accel_model numpy-first
-        halo_kernel_cost, stack_kernel_cost,
+        dw_halo_kernel_cost, dw_stack_kernel_cost, halo_kernel_cost,
+        stack_kernel_cost,
     )
     from .sparse_ops import same_pads
 
@@ -288,11 +324,17 @@ def conv_layer_traffic(
     assert c % vk == 0 and cout % vn == 0, (x_shape, cout, vk, vn)
     nb = cout // vn
     cb = c // vk
+    # multiplier-1 depthwise only; channel-multiplier convs model through
+    # the general grouped branch with vk == 1 (mirrors `ops.vsconv`)
+    depthwise = groups > 1 and groups == c and vk == 1 and cout == c
+    assert c % groups == 0 and (depthwise or cb % groups == 0), (
+        x_shape, vk, groups)
+    assert nb % groups == 0 or depthwise, (cout, vn, groups)
     out_itemsize = out_itemsize or itemsize
-    ho, _, _ = same_pads(h, kh, stride)
-    wo, _, _ = same_pads(w, kw, stride)
+    ho, _, _ = same_pads(h, kh, stride, dilation)
+    wo, _, _ = same_pads(w, kw, stride, dilation)
 
-    if kh == 1 and kw == 1:
+    if kh == 1 and kw == 1 and groups == 1:
         # vsmm over flattened pixels: every sparse step gathers a fresh
         # (bm, vk) activation K-tile; identical for both impls.  The
         # stride-2 subsample is the only layout pass.
@@ -310,30 +352,56 @@ def conv_layer_traffic(
 
     bh = min(bh, ho)
     hop = _round_up(ho, bh)
+    hb = hop // bh
     res_bytes = n * hop * wo * cout * itemsize if residual else 0
+    ke_h = (kh - 1) * dilation + 1
+    ke_w = (kw - 1) * dilation + 1
     if impl == "halo":
-        rows = stride * (hop - 1) + kh
-        bwp = _round_up(stride * (wo - 1) + kw, 8)
-        est = halo_kernel_cost(
-            n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp, bh=bh,
-            nb=nb, s_steps=s_steps, cb=cb, vk=vk, vn=vn,
-            in_itemsize=itemsize, w_itemsize=itemsize,
-            out_itemsize=out_itemsize, residual_bytes=res_bytes,
-        )
-        hb = hop // bh
-        hh = stride * (bh - 1) + kh
-        input_bytes = n * hb * nb * min(s_steps, cb) * hh * bwp * vk * itemsize
+        rows = stride * (hop - 1) + ke_h
+        bwp = _round_up(stride * (wo - 1) + ke_w, 8)
+        if depthwise:
+            assert vk == 1 and cout == c, (x_shape, cout, vk, groups)
+            est = dw_halo_kernel_cost(
+                n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp,
+                bh=bh, nb=nb, s_steps=s_steps, vc=vn, dilation=dilation,
+                in_itemsize=itemsize, w_itemsize=itemsize,
+                out_itemsize=out_itemsize, residual_bytes=res_bytes,
+            )
+            input_bytes = n * hb * nb * (stride * (bh - 1) + ke_h) * bwp \
+                * vn * itemsize
+        else:
+            cbg = cb // groups  # cin tiles reachable from one strip
+            est = halo_kernel_cost(
+                n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp, bh=bh,
+                nb=nb, s_steps=s_steps, cb=cbg, vk=vk, vn=vn,
+                dilation=dilation,
+                in_itemsize=itemsize, w_itemsize=itemsize,
+                out_itemsize=out_itemsize, residual_bytes=res_bytes,
+            )
+            hh = stride * (bh - 1) + ke_h
+            input_bytes = (n * hb * nb * min(s_steps, cbg) * hh * bwp * vk
+                           * itemsize)
         # one jnp.pad: read the input, write the padded copy
         build = n * c * (h * w + rows * bwp) * itemsize
     elif impl == "stack":
-        bw = _round_up(wo + (kw - 1) // stride, 8)
-        est = stack_kernel_cost(
-            n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb, s_steps=s_steps,
-            vk=vk, vn=vn, in_itemsize=itemsize, w_itemsize=itemsize,
-            out_itemsize=out_itemsize, residual_bytes=res_bytes,
-        )
-        hb = hop // bh
-        input_bytes = n * hb * nb * s_steps * bh * bw * vk * itemsize
+        bw = _round_up(wo + ((kw - 1) * dilation) // stride, 8)
+        if depthwise:
+            assert vk == 1 and cout == c, (x_shape, cout, vk, groups)
+            est = dw_stack_kernel_cost(
+                n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb,
+                s_steps=s_steps, vc=vn, in_itemsize=itemsize,
+                w_itemsize=itemsize, out_itemsize=out_itemsize,
+                residual_bytes=res_bytes,
+            )
+            input_bytes = n * hb * nb * s_steps * bh * bw * vn * itemsize
+        else:
+            est = stack_kernel_cost(
+                n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb,
+                s_steps=s_steps, vk=vk, vn=vn, in_itemsize=itemsize,
+                w_itemsize=itemsize, out_itemsize=out_itemsize,
+                residual_bytes=res_bytes,
+            )
+            input_bytes = n * hb * nb * s_steps * bh * bw * vk * itemsize
         # the stack build: read the input once (pad+gather fuse), write
         # kh*stride output-sized planes
         build = n * c * (h * w + kh * stride * hop * bw) * itemsize
@@ -361,14 +429,18 @@ def network_traffic_reports(
     """Per-layer DRAM traffic for one network's conv traffic, per impl.
 
     ``traffic`` is `models.graph.collect_conv_traffic`'s record —
-    (name, conv input NHWC, weight, stride) per conv layer — and ``sparse``
-    the `sparsify` dict giving each layer's encoded geometry (tile counts,
-    vk/vn, cin padding).  Returns [(name, {impl: TrafficReport})] so
-    `bench_kernels`/`bench_serving` can emit bytes + arithmetic-intensity
-    columns for both layouts next to the cycle speedups.
+    (name, conv input NHWC, weight, stride, groups, dilation) per conv
+    layer (the trailing geometry fields are optional for legacy 4-tuple
+    records) — and ``sparse`` the `sparsify` dict giving each layer's
+    encoded geometry (tile counts, vk/vn, cin padding).  Returns
+    [(name, {impl: TrafficReport})] so `bench_kernels`/`bench_serving` can
+    emit bytes + arithmetic-intensity columns for both layouts next to the
+    cycle speedups.
     """
     out = []
-    for name, x, w, stride in traffic:
+    for name, x, w, stride, *gd in traffic:
+        groups = gd[0] if gd else 1
+        dilation = gd[1] if len(gd) > 1 else 1
         x = np.asarray(x)
         if x.ndim == 3:
             x = x[None]
@@ -379,7 +451,8 @@ def network_traffic_reports(
         x_shape = (n, h, width, cin + entry.cin_pad)
         out.append((name, {
             impl: conv_layer_traffic(
-                x_shape, kh=kh, kw=kw, stride=stride, cout=nb * vn,
+                x_shape, kh=kh, kw=kw, stride=stride, groups=groups,
+                dilation=dilation, cout=nb * vn,
                 s_steps=s_steps, vk=vk, vn=vn, bh=bh, impl=impl,
                 itemsize=np.dtype(entry.vs.dtype).itemsize,
             )
@@ -392,19 +465,24 @@ def network_cycle_reports(traffic, pe: PEConfig) -> list[tuple[str, CycleReport]
     """Per-layer cycle reports for one network's conv traffic.
 
     ``traffic`` is the record produced by `models.graph.collect_conv_traffic`
-    — (name, conv input, weight, stride) per conv layer, in execution order;
-    the input may be (N, H, W, Cin) (the leading image is used, matching the
-    paper's single-image accounting) or already (H, W, Cin).  VGG-16 and
-    ResNet-18 share this one analysis path: the same graph walk that runs
-    the forward feeds the cycle model, residual branches included.
+    — (name, conv input, weight, stride, groups, dilation) per conv layer,
+    in execution order (the trailing geometry fields are optional for
+    legacy 4-tuple records); the input may be (N, H, W, Cin) (the leading
+    image is used, matching the paper's single-image accounting) or already
+    (H, W, Cin).  Every network — VGG-16, the ResNets, MobileNet — shares
+    this one analysis path: the same graph walk that runs the forward feeds
+    the cycle model, residual branches and depthwise stages included.
     """
     reports = []
-    for name, x, w, stride in traffic:
+    for name, x, w, stride, *gd in traffic:
+        groups = gd[0] if gd else 1
+        dilation = gd[1] if len(gd) > 1 else 1
         x = np.asarray(x)
         if x.ndim == 4:
             x = x[0]
-        reports.append((name, conv_layer_cycles(x, np.asarray(w), pe,
-                                                stride=stride)))
+        reports.append((name, conv_layer_cycles(
+            x, np.asarray(w), pe, stride=stride, groups=groups,
+            dilation=dilation)))
     return reports
 
 

@@ -30,10 +30,17 @@ __all__ = [
 ]
 
 
-def same_pads(size: int, k: int, stride: int) -> tuple[int, int, int]:
-    """XLA-"SAME" geometry: (out_size, pad_low, pad_high)."""
+def same_pads(size: int, k: int, stride: int,
+              dilation: int = 1) -> tuple[int, int, int]:
+    """XLA-"SAME" geometry: (out_size, pad_low, pad_high).
+
+    ``dilation`` spaces the kernel taps ``dilation`` elements apart, so the
+    effective kernel extent is ``(k - 1) * dilation + 1`` — exactly XLA's
+    ``rhs_dilation`` SAME accounting.
+    """
     out = -(-size // stride)
-    total = max((out - 1) * stride + k - size, 0)
+    ke = (k - 1) * dilation + 1
+    total = max((out - 1) * stride + ke - size, 0)
     lo = total // 2
     return out, lo, total - lo
 
@@ -112,19 +119,23 @@ def vs_matmul(
 
 
 def im2col(
-    x: jax.Array, *, kh: int = 3, kw: int = 3, stride: int = 1
+    x: jax.Array, *, kh: int = 3, kw: int = 3, stride: int = 1,
+    dilation: int = 1,
 ) -> jax.Array:
     """NHWC, SAME padding -> (N, Hout, Wout, kh*kw*C) patches, (ky, kx)
-    row-major — the layout `conv_weight_to_matrix` flattens weights into."""
+    row-major — the layout `conv_weight_to_matrix` flattens weights into.
+    ``dilation`` spaces the taps: tap (ky, kx) reads the padded input at
+    (ky*dilation + stride*i, kx*dilation + stride*j)."""
     n, h, w, c = x.shape
-    ho, pt, pb = same_pads(h, kh, stride)
-    wo, pl_, pr = same_pads(w, kw, stride)
+    ho, pt, pb = same_pads(h, kh, stride, dilation)
+    wo, pl_, pr = same_pads(w, kw, stride, dilation)
     xp = jnp.pad(x, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
     cols = [
         jax.lax.slice(
             xp,
-            (0, ky, kx, 0),
-            (n, ky + stride * (ho - 1) + 1, kx + stride * (wo - 1) + 1, c),
+            (0, ky * dilation, kx * dilation, 0),
+            (n, ky * dilation + stride * (ho - 1) + 1,
+             kx * dilation + stride * (wo - 1) + 1, c),
             (1, stride, stride, 1),
         )
         for ky in range(kh)
@@ -138,6 +149,64 @@ def im2col_3x3(x: jax.Array) -> jax.Array:
     return im2col(x, kh=3, kw=3, stride=1)
 
 
+def _vs_conv2d_depthwise_jnp(
+    x: jax.Array, w_vs: VectorSparse, *, kh: int, kw: int, stride: int,
+    dilation: int,
+) -> jax.Array:
+    """Structural depthwise conv: the sparse weight is (kh*kw, C) — one row
+    per tap, strips over ``vc``-channel tiles, ``idx[j, s]`` the tap id of
+    the s-th stored tap-vector of channel tile j.  The scan multiplies only
+    the stored (tap, channel-tile) vectors — elementwise VPU work, the
+    per-channel analogue of the weight-side structural skip."""
+    n, h, w, c = x.shape
+    vc = w_vs.vn
+    assert w_vs.vk == 1 and w_vs.shape == (kh * kw, c), (w_vs.shape, kh, kw, c)
+    p = im2col(x, kh=kh, kw=kw, stride=stride, dilation=dilation)
+    _, ho, wo, _ = p.shape
+    p4 = p.reshape(n * ho * wo, kh * kw, c // vc, vc)
+
+    def step(acc, sv):
+        idx_s, w_s = sv  # (NB,), (NB, 1, vc)
+        xg = jnp.take_along_axis(p4, idx_s[None, None, :, None], axis=1)[:, 0]
+        return acc + xg.astype(jnp.float32) * w_s[:, 0].astype(jnp.float32), None
+
+    acc0 = jnp.zeros((p4.shape[0], c // vc, vc), jnp.float32)
+    acc, _ = jax.lax.scan(
+        step, acc0, (w_vs.idx.T, w_vs.vals.transpose(1, 0, 2, 3)))
+    return acc.reshape(n, ho, wo, c)
+
+
+def _vs_conv2d_grouped_jnp(
+    x: jax.Array, w_vs: VectorSparse, *, kh: int, kw: int, stride: int,
+    groups: int, dilation: int,
+) -> jax.Array:
+    """Structural grouped conv: the sparse weight is (kh*kw*Cin/G, Cout)
+    with strips group-major (strip j belongs to group j // (strips/G) and
+    its K-tiles index that group's channels only).  Each group is one
+    `vs_matmul` over its channel slice of the im2col patches."""
+    c = x.shape[-1]
+    cin_g = c // groups
+    spg = w_vs.n_strips // groups
+    assert w_vs.n_strips % groups == 0, (w_vs.n_strips, groups)
+    if kh == 1 and kw == 1:
+        patches = x[:, ::stride, ::stride] if stride != 1 else x
+    else:
+        patches = im2col(x, kh=kh, kw=kw, stride=stride, dilation=dilation)
+    *batch, _ = patches.shape
+    pg = patches.reshape(*batch, kh * kw, groups, cin_g)
+    outs = []
+    for g in range(groups):
+        sub = VectorSparse(
+            vals=w_vs.vals[g * spg:(g + 1) * spg],
+            idx=w_vs.idx[g * spg:(g + 1) * spg],
+            shape=(kh * kw * cin_g, spg * w_vs.vn),
+        )
+        outs.append(vs_matmul(
+            pg[..., g, :].reshape(*batch, kh * kw * cin_g), sub,
+            impl="jnp", out_dtype=jnp.float32))
+    return jnp.concatenate(outs, axis=-1)
+
+
 def vs_conv2d(
     x: jax.Array,
     w_vs: VectorSparse,
@@ -145,19 +214,26 @@ def vs_conv2d(
     kh: int = 3,
     kw: int = 3,
     stride: int = 1,
+    groups: int = 1,
+    dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
     fuse_relu: bool = False,
     impl: str = "jnp",
 ) -> jax.Array:
-    """kh x kw / stride / SAME conv with vector-sparse weights.
+    """kh x kw / stride / dilation / SAME conv with vector-sparse weights,
+    optionally grouped.
 
-    Weight matrix layout: (kh*kw*Cin, Cout) with K ordered (ky, kx, cin) — a
-    zero K-tile is a pruned run of input channels for one kernel position,
-    the TPU analogue of the paper's pruned kernel columns.  1x1 convs are the
-    sparse matmul over pixels (stride subsamples first).  On the Pallas path
+    Weight matrix layout: (kh*kw*Cin/groups, Cout) with K ordered
+    (ky, kx, cin-within-group) and output strips group-major — a zero K-tile
+    is a pruned run of input channels for one kernel position, the TPU
+    analogue of the paper's pruned kernel columns.  Depthwise
+    (groups == Cin, multiplier 1) degenerates to a (kh*kw, C) tap matrix
+    with vk == 1: strips are ``vn``-channel tiles and each stored vector is
+    one tap's weights across the tile.  1x1 ungrouped convs are the sparse
+    matmul over pixels (stride subsamples first).  On the Pallas path
     ``impl="pallas"``/``"pallas-halo"`` runs the halo-blocked direct-input
-    kernel (~1x-input HBM traffic) and ``impl="pallas-stack"`` the
+    kernels (~1x-input HBM traffic) and ``impl="pallas-stack"`` the
     materialized row-tap stack oracle.  ``bias``,
     ``residual`` (the output-shaped ResNet shortcut, added before the ReLU)
     and ``fuse_relu`` run the epilogue fused in the Pallas path and in f32
@@ -167,14 +243,25 @@ def vs_conv2d(
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
         return kops.vsconv(
-            x, w_vs, kh=kh, kw=kw, stride=stride, bias=bias,
-            residual=residual, fuse_relu=fuse_relu, impl=_conv_impl(impl),
+            x, w_vs, kh=kh, kw=kw, stride=stride, groups=groups,
+            dilation=dilation, bias=bias, residual=residual,
+            fuse_relu=fuse_relu, impl=_conv_impl(impl),
         )
-    if kh == 1 and kw == 1:
-        patches = x[:, ::stride, ::stride] if stride != 1 else x
+    if groups == 1:
+        if kh == 1 and kw == 1:
+            patches = x[:, ::stride, ::stride] if stride != 1 else x
+        else:
+            patches = im2col(x, kh=kh, kw=kw, stride=stride,
+                             dilation=dilation)
+        y = vs_matmul(patches, w_vs, impl="jnp", out_dtype=jnp.float32)
+    elif groups == x.shape[-1] and w_vs.shape == (kh * kw, x.shape[-1]):
+        # multiplier-1 depthwise; a channel-multiplier conv (cout > cin)
+        # falls through to the general grouped path with vk == 1
+        y = _vs_conv2d_depthwise_jnp(x, w_vs, kh=kh, kw=kw, stride=stride,
+                                     dilation=dilation)
     else:
-        patches = im2col(x, kh=kh, kw=kw, stride=stride)
-    y = vs_matmul(patches, w_vs, impl="jnp", out_dtype=jnp.float32)
+        y = _vs_conv2d_grouped_jnp(x, w_vs, kh=kh, kw=kw, stride=stride,
+                                   groups=groups, dilation=dilation)
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     if residual is not None:
@@ -189,13 +276,16 @@ def vs_conv2d_3x3(x: jax.Array, w_vs: VectorSparse, *, impl: str = "jnp") -> jax
     return vs_conv2d(x, w_vs, kh=3, kw=3, stride=1, impl=impl)
 
 
-def dense_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
-    """Dense oracle: w is (kh, kw, Cin, Cout), SAME padding."""
+def dense_conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                 groups: int = 1, dilation: int = 1) -> jax.Array:
+    """Dense oracle: w is (kh, kw, Cin/groups, Cout), SAME padding."""
     return jax.lax.conv_general_dilated(
         x,
         w,
         window_strides=(stride, stride),
         padding="SAME",
+        rhs_dilation=(dilation, dilation),
+        feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
 

@@ -129,7 +129,10 @@ def conv_cin_major(vs: VectorSparse, cb: int) -> VectorSparse:
     instead of once per stored tile.  Pure permutation per strip — the
     accumulated sum is the same set of matmuls (fp reassociation only).
 
-    Host-side (encode-time) like `from_mask`; ``cb`` is Cin // vk.
+    Host-side (encode-time) like `from_mask`; ``cb`` is Cin // vk — for a
+    *grouped* conv pass the per-group count Cin // (groups * vk): the tile
+    ids are group-relative, so that is what orders them.  (Depthwise convs
+    don't need the reorder at all — their input block is tap-independent.)
     """
     idx = np.asarray(vs.idx)
     kb = vs.shape[0] // vs.vk

@@ -6,15 +6,19 @@ CPU so kernels validate everywhere, compiled on real TPU), and layout prep
 
 `vsconv` covers the generalized kernel family:
 
-  vsconv(x, vs, kh=3, kw=3, stride=1, bias=None, fuse_relu=False,
-         impl="halo")
+  vsconv(x, vs, kh=3, kw=3, stride=1, groups=1, dilation=1, bias=None,
+         fuse_relu=False, impl="halo")
 
   * arbitrary odd/even kh x kw taps, SAME padding for the given stride
-    (Hout = ceil(H/stride)) — the weight matrix is (kh*kw*Cin, Cout) with K
-    ordered (ky, kx, cin), i.e. `core.sparse_ops.conv_weight_to_matrix`;
-  * stride 1 and 2 (any stride the tap decomposition supports, in fact);
-  * 1x1 convs route through `vsmm` over flattened pixels (a pointwise conv
-    *is* the sparse matmul; stride subsamples first) — ResNet projections;
+    (Hout = ceil(H/stride)) — the weight matrix is (kh*kw*Cin/groups, Cout)
+    with K ordered (ky, kx, cin), i.e. `core.sparse_ops.conv_weight_to_matrix`;
+  * stride 1 and 2 (any stride the tap decomposition supports, in fact),
+    dilated taps (effective extent (k-1)*dilation + 1), grouped convs
+    (strips group-major, per-group cin tiles), and depthwise
+    (groups == Cin) via the per-channel tap kernels;
+  * ungrouped 1x1 convs route through `vsmm` over flattened pixels (a
+    pointwise conv *is* the sparse matmul; stride subsamples first) —
+    ResNet projections and MobileNet pointwise stages;
   * ``impl`` picks the input layout: ``"halo"`` (default) reads the raw
     SAME-padded input through overlapping halo blocks and resolves the tap
     in-kernel — ~1x-input HBM traffic; ``"stack"`` materializes the
@@ -32,7 +36,8 @@ import jax.numpy as jnp
 from repro.core.vector_sparse import VectorSparse
 from .vsmm import vsmm_pallas
 from .vsconv import (
-    vsconv_pallas, vsconv_halo_pallas, build_row_tap_stack, build_halo_input,
+    vsconv_pallas, vsconv_halo_pallas, vsconv_dw_halo_pallas,
+    vsconv_dw_stack_pallas, build_row_tap_stack, build_halo_input,
     same_pads,
 )
 
@@ -87,6 +92,8 @@ def vsconv(
     kh: int = 3,
     kw: int = 3,
     stride: int = 1,
+    groups: int = 1,
+    dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
     bh: int = 8,
@@ -95,14 +102,18 @@ def vsconv(
     impl: str = "halo",
     interpret: bool | None = None,
 ) -> jax.Array:
-    """NHWC kh x kw / stride / SAME conv with vector-sparse
-    (kh*kw*Cin, Cout) weights -> (N, ceil(H/stride), ceil(W/stride), Cout).
+    """NHWC kh x kw / stride / dilation / SAME (grouped) conv with
+    vector-sparse (kh*kw*Cin/groups, Cout) weights
+    -> (N, ceil(H/stride), ceil(W/stride), Cout).
 
-    1x1 convs dispatch to the sparse matmul over flattened pixels (stride
-    subsamples first); everything else runs one of the two direct
-    tap-decomposed Pallas kernels: ``impl="halo"`` (default — raw input,
-    halo-blocked, tap resolved in-kernel) or ``impl="stack"`` (the
-    materialized row-tap/phase stack, kept as oracle and fallback).
+    Ungrouped 1x1 convs dispatch to the sparse matmul over flattened pixels
+    (stride subsamples first); depthwise convs (groups == Cin, multiplier
+    1, weight matrix (kh*kw, C) encoded vk=1) run the per-channel tap
+    kernels; everything else runs one of the two direct tap-decomposed
+    Pallas kernels — grouped convs shard the cin-tile axis per group.
+    ``impl="halo"`` (default — raw input, halo-blocked, tap resolved
+    in-kernel) or ``impl="stack"`` (the materialized row-tap/phase stack,
+    kept as oracle and fallback) selects the input layout for all of them.
     ``bias`` (Cout,), ``residual`` (the output-shaped ResNet shortcut,
     added before the ReLU) and ``fuse_relu`` fuse the epilogue in-kernel.
     """
@@ -110,7 +121,11 @@ def vsconv(
     interpret = _interpret() if interpret is None else interpret
     if impl not in ("halo", "stack"):
         raise ValueError(f"vsconv impl must be 'halo' or 'stack', got {impl!r}")
-    if kh == 1 and kw == 1:
+    assert c % groups == 0, (c, groups)
+    # multiplier-1 depthwise only; a channel-multiplier conv (cout > cin)
+    # still runs the general grouped kernels with vk == cin/groups == 1
+    depthwise = groups > 1 and groups == c and vs.shape == (kh * kw, c)
+    if kh == 1 and kw == 1 and groups == 1:
         if stride != 1:
             x = x[:, ::stride, ::stride]
         _, ho, wo, _ = x.shape
@@ -122,27 +137,34 @@ def vsconv(
             interpret=interpret,
         )
         return out.reshape(n, ho, wo, -1)
-    ho, _, _ = same_pads(h, kh, stride)
-    wo, _, _ = same_pads(w, kw, stride)
+    ho, _, _ = same_pads(h, kh, stride, dilation)
+    wo, _, _ = same_pads(w, kw, stride, dilation)
     bh = min(bh, ho)
     hop = _round_up(ho, bh)
     if residual is not None and hop != ho:
         residual = jnp.pad(residual, ((0, 0), (0, hop - ho), (0, 0), (0, 0)))
-    if impl == "halo":
-        xh = build_halo_input(x, kh=kh, kw=kw, stride=stride, vk=vs.vk,
-                              h_out=hop)
-        out = vsconv_halo_pallas(
-            xh, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias,
-            residual=residual, bh=bh,
-            skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
-            interpret=interpret,
-        )
+    common = dict(
+        w_out=wo, kh=kh, kw=kw, stride=stride, dilation=dilation, bias=bias,
+        residual=residual, bh=bh, skip_zero_inputs=skip_zero_inputs,
+        fuse_relu=fuse_relu, interpret=interpret,
+    )
+    if depthwise:
+        # per-channel tap kernels: strips are vn-channel tiles (vk == 1)
+        assert vs.vk == 1 and vs.shape == (kh * kw, c), (vs.shape, kh, kw, c)
+        if impl == "halo":
+            xh = build_halo_input(x, kh=kh, kw=kw, stride=stride,
+                                  dilation=dilation, vk=vs.vn, h_out=hop)
+            out = vsconv_dw_halo_pallas(xh, vs, **common)
+        else:
+            xt = build_row_tap_stack(x, kh=kh, kw=kw, stride=stride,
+                                     dilation=dilation, h_out=hop)
+            out = vsconv_dw_stack_pallas(xt, vs, **common)
+    elif impl == "halo":
+        xh = build_halo_input(x, kh=kh, kw=kw, stride=stride,
+                              dilation=dilation, vk=vs.vk, h_out=hop)
+        out = vsconv_halo_pallas(xh, vs, groups=groups, **common)
     else:
-        xt = build_row_tap_stack(x, kh=kh, kw=kw, stride=stride, h_out=hop)
-        out = vsconv_pallas(
-            xt, vs, w_out=wo, kh=kh, kw=kw, stride=stride, bias=bias,
-            residual=residual, bh=bh,
-            skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
-            interpret=interpret,
-        )
+        xt = build_row_tap_stack(x, kh=kh, kw=kw, stride=stride,
+                                 dilation=dilation, h_out=hop)
+        out = vsconv_pallas(xt, vs, groups=groups, **common)
     return out[:, :ho] if hop != ho else out

@@ -41,13 +41,17 @@ def vsmm_ref(
     return y.astype(x.dtype)
 
 
-def conv_ref(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
-    """Dense kh x kw / stride / SAME conv oracle. x NHWC, w (kh,kw,Cin,Cout)."""
+def conv_ref(x: jax.Array, w: jax.Array, *, stride: int = 1, groups: int = 1,
+             dilation: int = 1) -> jax.Array:
+    """Dense kh x kw / stride / dilation / SAME conv oracle.  x NHWC,
+    w (kh, kw, Cin/groups, Cout) — XLA's grouped HWIO layout."""
     return jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w.astype(jnp.float32),
         window_strides=(stride, stride),
         padding="SAME",
+        rhs_dilation=(dilation, dilation),
+        feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     ).astype(x.dtype)
 
@@ -64,26 +68,33 @@ def vsconv_ref(
     kh: int = 3,
     kw: int = 3,
     stride: int = 1,
+    groups: int = 1,
+    dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
     fuse_relu: bool = False,
 ) -> jax.Array:
-    """kh x kw / stride / SAME conv against the densified vector-sparse weight.
+    """kh x kw / stride / dilation / SAME (grouped) conv against the
+    densified vector-sparse weight.
 
-    w_vs shape is (kh*kw*Cin, Cout) with K ordered (ky, kx, cin) — the layout
-    produced by `core.sparse_ops.conv_weight_to_matrix`.  ``bias``,
+    w_vs shape is (kh*kw*Cin/groups, Cout) with K ordered (ky, kx,
+    cin-within-group) and output strips group-major — the layout produced by
+    `core.sparse_ops.conv_weight_to_matrix` on XLA's grouped HWIO weight.
+    Depthwise (groups == Cin) is the (kh*kw, C) degenerate case.  ``bias``,
     ``residual`` (output-shaped shortcut added before the ReLU) and
     ``fuse_relu`` mirror the kernel's fused epilogue.
     """
     n, h, wdt, c = x.shape
     k, cout = w_vs.shape
-    assert k == kh * kw * c, (k, kh, kw, c)
-    w = decode(w_vs).reshape(kh, kw, c, cout)
+    assert k == kh * kw * (c // groups), (k, kh, kw, c, groups)
+    w = decode(w_vs).reshape(kh, kw, c // groups, cout)
     y = jax.lax.conv_general_dilated(
         x.astype(jnp.float32),
         w.astype(jnp.float32),
         window_strides=(stride, stride),
         padding="SAME",
+        rhs_dilation=(dilation, dilation),
+        feature_group_count=groups,
         dimension_numbers=("NHWC", "HWIO", "NHWC"),
     )
     if bias is not None:

@@ -51,10 +51,29 @@ conv (an extra XLA pass over every activation) and the kernel re-fetches
 its plane on every sparse step.  It is kept as the bandwidth-dumb oracle
 the halo path is tested against, and as a fallback layout.
 
-`stack_kernel_cost` / `halo_kernel_cost` are the shared HBM-traffic
-contract: the same formulas feed the kernels' `pl.CostEstimate`, the
-`core.accel_model` DRAM traffic model, and the benchmark gate that keeps
-the halo path's bytes strictly below the stack path's.
+Grouped, depthwise and dilated geometry
+---------------------------------------
+
+``dilation`` spaces the taps: the in-kernel tap resolve reads row
+``ky*dilation`` / column ``kx*dilation`` (halo) or the dilated plane slice
+(stack) and every extent formula uses the effective kernel size
+``(k-1)*dilation + 1``.  ``groups`` shards the cin-tile axis: the weight
+matrix is (kh*kw*Cin/groups, Cout) with output strips group-major, a
+strip's stored tile ids are group-relative, and the input index_map adds
+the group's base cin tile — so a grouped strip fetches only its own
+group's channels (the per-group traffic accounting in
+`halo_kernel_cost(cb=Cin/(groups*vk))`).  Depthwise (groups == Cin,
+multiplier 1) degenerates to the per-channel tap kernels
+(`vsconv_dw_halo_pallas` / `vsconv_dw_stack_pallas`): the weight is the
+(kh*kw, C) tap matrix encoded vk=1 over vn-channel tiles, the MAC is
+elementwise on the VPU, and the halo block — tap-independent AND strip ==
+channel tile — is fetched exactly once per (strip, row-block).
+
+`stack_kernel_cost` / `halo_kernel_cost` (and their `dw_*` depthwise
+variants) are the shared HBM-traffic contract: the same formulas feed the
+kernels' `pl.CostEstimate`, the `core.accel_model` DRAM traffic model, and
+the benchmark gate that keeps the halo path's bytes strictly below the
+stack path's.
 
 Padding is XLA-"SAME" for the given stride (Hout = ceil(H/stride)); the
 `ops.vsconv` wrapper computes it and pads Hout to a ``bh`` multiple.
@@ -83,8 +102,10 @@ from repro.core.sparse_ops import same_pads
 from repro.core.vector_sparse import VectorSparse
 
 __all__ = [
-    "vsconv_pallas", "vsconv_halo_pallas", "build_row_tap_stack",
-    "build_halo_input", "stack_kernel_cost", "halo_kernel_cost", "same_pads",
+    "vsconv_pallas", "vsconv_halo_pallas", "vsconv_dw_halo_pallas",
+    "vsconv_dw_stack_pallas", "build_row_tap_stack", "build_halo_input",
+    "stack_kernel_cost", "halo_kernel_cost", "dw_halo_kernel_cost",
+    "dw_stack_kernel_cost", "same_pads",
 ]
 
 
@@ -119,19 +140,23 @@ def stack_kernel_cost(
 
 def halo_kernel_cost(
     *, n: int, hop: int, w_out: int, kh: int, stride: int, bwp: int, bh: int,
-    nb: int, s_steps: int, cb: int, vk: int, vn: int, in_itemsize: int = 4,
-    w_itemsize: int = 4, out_itemsize: int = 4, residual_bytes: int = 0,
+    nb: int, s_steps: int, cb: int, vk: int, vn: int, dilation: int = 1,
+    in_itemsize: int = 4, w_itemsize: int = 4, out_itemsize: int = 4,
+    residual_bytes: int = 0,
 ) -> pl.CostEstimate:
     """Kernel-side cost of the halo impl.
 
     The halo block offset depends only on (row-block, cin tile): with the
     stored tiles cin-major per strip, consecutive taps of one cin tile
-    revisit the same block (no DMA), so each of the min(S, CB) distinct cin
+    revisit the same block (no DMA), so each of the min(S, cb) distinct cin
     tiles is fetched once per (strip, row-block) — a halo block of
-    ``bh*stride + kh - stride`` rows instead of S fetches of bh rows.
+    ``stride*(bh-1) + (kh-1)*dilation + 1`` rows instead of S fetches of bh
+    rows.  ``cb`` is the cin tiles *reachable from one strip* — Cin/vk for
+    an ungrouped conv, Cin/(groups*vk) for a grouped one (a strip only ever
+    touches its own group's channels, the per-group fetch accounting).
     """
     hb = hop // bh
-    hh = stride * (bh - 1) + kh
+    hh = stride * (bh - 1) + (kh - 1) * dilation + 1
     fetches = min(s_steps, cb)
     return pl.CostEstimate(
         flops=2 * n * hop * w_out * nb * s_steps * vk * vn,
@@ -139,6 +164,54 @@ def halo_kernel_cost(
             n * hb * nb * fetches * hh * bwp * vk * in_itemsize
             + nb * s_steps * vk * vn * w_itemsize
             + n * hop * w_out * nb * vn * out_itemsize
+            + residual_bytes
+        ),
+        transcendentals=0,
+    )
+
+
+def dw_halo_kernel_cost(
+    *, n: int, hop: int, w_out: int, kh: int, stride: int, bwp: int, bh: int,
+    nb: int, s_steps: int, vc: int, dilation: int = 1, in_itemsize: int = 4,
+    w_itemsize: int = 4, out_itemsize: int = 4, residual_bytes: int = 0,
+) -> pl.CostEstimate:
+    """Kernel-side cost of the depthwise halo impl.
+
+    The halo block offset depends only on (row-block, channel tile) — not
+    the tap at all — so every sparse step of strip j revisits the same
+    block: exactly ONE halo fetch per (strip, row-block), whatever the tap
+    order.  MACs are elementwise (VPU), one per (pixel, channel, stored
+    tap).
+    """
+    hb = hop // bh
+    hh = stride * (bh - 1) + (kh - 1) * dilation + 1
+    return pl.CostEstimate(
+        flops=2 * n * hop * w_out * nb * s_steps * vc,
+        bytes_accessed=(
+            n * hb * nb * hh * bwp * vc * in_itemsize
+            + nb * s_steps * vc * w_itemsize
+            + n * hop * w_out * nb * vc * out_itemsize
+            + residual_bytes
+        ),
+        transcendentals=0,
+    )
+
+
+def dw_stack_kernel_cost(
+    *, n: int, hop: int, w_out: int, bw: int, bh: int, nb: int, s_steps: int,
+    vc: int, in_itemsize: int = 4, w_itemsize: int = 4, out_itemsize: int = 4,
+    residual_bytes: int = 0,
+) -> pl.CostEstimate:
+    """Kernel-side cost of the depthwise row-tap-stack impl: every sparse
+    step changes the (plane, channel-tile) block index, so the (bh, bw, vc)
+    input block is DMA'd on every one of the S steps per row-block."""
+    hb = hop // bh
+    return pl.CostEstimate(
+        flops=2 * n * hop * w_out * nb * s_steps * vc,
+        bytes_accessed=(
+            n * hb * nb * s_steps * bh * bw * vc * in_itemsize
+            + nb * s_steps * vc * w_itemsize
+            + n * hop * w_out * nb * vc * out_itemsize
             + residual_bytes
         ),
         transcendentals=0,
@@ -155,26 +228,28 @@ def build_halo_input(
     kh: int = 3,
     kw: int = 3,
     stride: int = 1,
+    dilation: int = 1,
     vk: int,
     h_out: int | None = None,
     sublane: int = 8,
 ) -> jax.Array:
     """NHWC -> (N, rows, bW, CB, vk) SAME-padded direct input for the halo
     kernel.  One `jnp.pad` (the only HBM copy of the layout) plus a free
-    channel-split reshape; rows = stride*(Hout-1) + kh so every halo block
-    and in-kernel tap slice stays in bounds, bW = stride*(Wout-1) + kw
-    rounded up to ``sublane``.
+    channel-split reshape; with the effective (dilated) kernel extent
+    ke = (k-1)*dilation + 1, rows = stride*(Hout-1) + ke_h so every halo
+    block and in-kernel tap slice stays in bounds, bW = stride*(Wout-1) +
+    ke_w rounded up to ``sublane``.
 
     ``h_out`` lets the caller round Hout up to a row-block multiple (the
     extra rows read zero padding).
     """
     n, h, w, c = x.shape
     assert c % vk == 0, (c, vk)
-    ho, pt, _ = same_pads(h, kh, stride)
-    wo, pl_, _ = same_pads(w, kw, stride)
+    ho, pt, _ = same_pads(h, kh, stride, dilation)
+    wo, pl_, _ = same_pads(w, kw, stride, dilation)
     ho = h_out or ho
-    rows = stride * (ho - 1) + kh
-    bw = -(-(stride * (wo - 1) + kw) // sublane) * sublane
+    rows = stride * (ho - 1) + (kh - 1) * dilation + 1
+    bw = -(-(stride * (wo - 1) + (kw - 1) * dilation + 1) // sublane) * sublane
     xp = jnp.pad(
         x,
         ((0, 0), (pt, rows - h - pt), (pl_, bw - w - pl_), (0, 0)),
@@ -188,23 +263,27 @@ def build_row_tap_stack(
     kh: int = 3,
     kw: int = 3,
     stride: int = 1,
+    dilation: int = 1,
     h_out: int | None = None,
     sublane: int = 8,
 ) -> jax.Array:
     """NHWC -> (N, kh*stride, Hout, bW, C) row-tap/phase stack (SAME padding).
 
     The stack-impl (oracle) layout: kh*stride output-sized planes
-    materialized in HBM.  ``h_out`` lets the caller round Hout up to a
-    row-block multiple (the extra rows read zero padding).  bW = Wout +
-    (kw-1)//stride rounded up to ``sublane`` so the kernel's kx slice stays
-    in-bounds and sublane-aligned.
+    materialized in HBM; tap row ky reads padded rows ky*dilation + stride*i
+    (dilation spaces the taps, the plane count stays kh*stride).  ``h_out``
+    lets the caller round Hout up to a row-block multiple (the extra rows
+    read zero padding).  bW = Wout + ((kw-1)*dilation)//stride rounded up to
+    ``sublane`` so the kernel's kx slice stays in-bounds and
+    sublane-aligned.
     """
     n, h, w, c = x.shape
-    ho, pt, _ = same_pads(h, kh, stride)
-    wo, pl_, _ = same_pads(w, kw, stride)
+    ho, pt, _ = same_pads(h, kh, stride, dilation)
+    wo, pl_, _ = same_pads(w, kw, stride, dilation)
     ho = h_out or ho
-    bw = -(-(wo + (kw - 1) // stride) // sublane) * sublane
-    rows_needed = stride * (ho - 1) + kh  # padded-row index ceiling
+    bw = -(-(wo + ((kw - 1) * dilation) // stride) // sublane) * sublane
+    # padded-row index ceiling (effective kernel extent)
+    rows_needed = stride * (ho - 1) + (kh - 1) * dilation + 1
     cols_needed = stride * bw  # every phase plane must reach bw columns
     xp = jnp.pad(
         x,
@@ -216,9 +295,8 @@ def build_row_tap_stack(
         ),
     )
     planes = [
-        xp[:, ky : ky + stride * (ho - 1) + 1 : stride, phase :: stride][
-            :, :, :bw
-        ]
+        xp[:, ky * dilation : ky * dilation + stride * (ho - 1) + 1 : stride,
+           phase :: stride][:, :, :bw]
         for ky in range(kh)
         for phase in range(stride)
     ]
@@ -230,8 +308,8 @@ def build_row_tap_stack(
 # --------------------------------------------------------------------------
 
 def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
-                 bh: int, w_out: int, fuse_relu: bool, has_bias: bool,
-                 has_residual: bool, skip_zero_inputs: bool):
+                 dilation: int, bh: int, w_out: int, fuse_relu: bool,
+                 has_bias: bool, has_residual: bool, skip_zero_inputs: bool):
     it = iter(refs)
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
@@ -244,18 +322,21 @@ def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # decode the K-tile id t = (ky*kw + kx) * CB + cin_tile; the cin tile is
-    # already resolved by the index_map, the whole tap resolves here
+    # decode the K-tile id t = (ky*kw + kx) * cb + cin_tile (cb = cin tiles
+    # reachable from this strip — per group for a grouped conv); the cin
+    # tile is already resolved by the index_map, the whole tap resolves here
     t = idx_ref[j, s]
     tap = t // cb
     ky = tap // kw
     kx = tap % kw
 
     # output pixel (i, jj) of this row block reads halo element
-    # (ky + stride*i, kx + stride*jj): dynamic tap offset + static stride
+    # (ky*dilation + stride*i, kx*dilation + stride*jj): dynamic tap offset
+    # + static stride
     rlen = stride * (bh - 1) + 1
     clen = stride * (w_out - 1) + 1
-    xt = xh_ref[0, pl.ds(ky, rlen), pl.ds(kx, clen), 0]  # (rlen, clen, vk)
+    xt = xh_ref[0, pl.ds(ky * dilation, rlen),
+                pl.ds(kx * dilation, clen), 0]  # (rlen, clen, vk)
     if stride > 1:
         xt = xt[::stride, ::stride]
     xs2 = xt.reshape(bh * w_out, xt.shape[-1])
@@ -288,8 +369,8 @@ def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "kh", "kw", "stride", "w_out", "bh", "skip_zero_inputs", "fuse_relu",
-        "interpret", "out_dtype",
+        "kh", "kw", "stride", "groups", "dilation", "w_out", "bh",
+        "skip_zero_inputs", "fuse_relu", "interpret", "out_dtype",
     ),
 )
 def vsconv_halo_pallas(
@@ -300,6 +381,8 @@ def vsconv_halo_pallas(
     kh: int = 3,
     kw: int = 3,
     stride: int = 1,
+    groups: int = 1,
+    dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
     bh: int = 8,
@@ -308,26 +391,34 @@ def vsconv_halo_pallas(
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """Direct input xh (N, rows, bW, CB, vk) * sparse (kh*kw*CB*vk, Cout)
-    -> (N, Hout, w_out, Cout), Hout = (rows - kh) // stride + 1.
+    """Direct input xh (N, rows, bW, CB, vk) * sparse (kh*kw*CB*vk/groups,
+    Cout) -> (N, Hout, w_out, Cout), Hout = (rows - ke_h) // stride + 1
+    with ke_h = (kh-1)*dilation + 1.
 
     ``xh`` is `build_halo_input`'s SAME-padded raw input; Hout must be a
     multiple of ``bh`` (the `ops.vsconv` wrapper pads).  Each grid step sees
-    an overlapping ``bh*stride + kh - stride``-row halo block
-    (`pl.Unblocked` element offsets) and slices its tap out in-kernel, so
-    no tap-shifted copy of the input ever exists in HBM.  ``bias`` (Cout,),
-    ``residual`` (N, Hout, w_out, Cout) and ``fuse_relu`` run the epilogue
-    at flush time, identically to the stack kernel.
+    an overlapping ``stride*(bh-1) + ke_h``-row halo block (`pl.Unblocked`
+    element offsets) and slices its tap out in-kernel, so no tap-shifted
+    copy of the input ever exists in HBM.  ``groups`` shards the cin-tile
+    axis: output strip j belongs to group j // (NB/groups) and its stored
+    K-tile ids index that group's CB/groups cin tiles only (the index_map
+    adds the group's base tile).  ``bias`` (Cout,), ``residual``
+    (N, Hout, w_out, Cout) and ``fuse_relu`` run the epilogue at flush
+    time, identically to the stack kernel.
     """
     n, rows, bwp, cb, vk = xh.shape
-    assert (rows - kh) % stride == 0, (rows, kh, stride)
-    h = (rows - kh) // stride + 1
+    ke_h = (kh - 1) * dilation + 1
+    assert (rows - ke_h) % stride == 0, (rows, kh, dilation, stride)
+    h = (rows - ke_h) // stride + 1
     nb, s_steps, vk_w, vn = vs.vals.shape
-    assert vk_w == vk and vs.shape[0] == kh * kw * cb * vk, (
-        vs.shape, xh.shape, kh, kw)
+    assert cb % groups == 0 and nb % groups == 0, (cb, nb, groups)
+    cbg = cb // groups   # cin tiles reachable from one strip
+    spg = nb // groups   # output strips per group
+    assert vk_w == vk and vs.shape[0] == kh * kw * cbg * vk, (
+        vs.shape, xh.shape, kh, kw, groups)
     assert h % bh == 0, (h, bh)
     hb = h // bh
-    hh = stride * (bh - 1) + kh  # halo rows per output row-block
+    hh = stride * (bh - 1) + ke_h  # halo rows per output row-block
     out_dtype = out_dtype or xh.dtype
     has_bias = bias is not None
     has_residual = residual is not None
@@ -335,17 +426,18 @@ def vsconv_halo_pallas(
     in_specs = [
         # one image, one overlapping halo row window, full width, one cin
         # tile — element offsets (Unblocked): row-blocks overlap by
-        # kh - stride rows, and the offsets are tap-independent so
+        # ke_h - stride rows, and the offsets are tap-independent so
         # consecutive sparse steps on one cin tile revisit the block
         # without a new DMA (cin-major tile order makes that the common
-        # case).
+        # case).  A grouped strip's tile id is relative to its group, so
+        # the group's base tile is added here.
         pl.BlockSpec(
             (1, hh, bwp, 1, vk),
             lambda j, m, s, idx: (
                 m // hb,                    # image
                 (m % hb) * stride * bh,     # halo window start row
                 0,
-                idx[j, s] % cb,             # cin tile
+                (j // spg) * cbg + idx[j, s] % cbg,  # cin tile (group base +)
                 0,
             ),
             indexing_mode=pl.Unblocked(),
@@ -375,7 +467,8 @@ def vsconv_halo_pallas(
     )
     return pl.pallas_call(
         functools.partial(
-            _halo_kernel, cb=cb, kw=kw, stride=stride, bh=bh, w_out=w_out,
+            _halo_kernel, cb=cbg, kw=kw, stride=stride, dilation=dilation,
+            bh=bh, w_out=w_out,
             fuse_relu=fuse_relu, has_bias=has_bias,
             has_residual=has_residual,
             skip_zero_inputs=skip_zero_inputs,
@@ -385,7 +478,7 @@ def vsconv_halo_pallas(
         interpret=interpret,
         cost_estimate=halo_kernel_cost(
             n=n, hop=h, w_out=w_out, kh=kh, stride=stride, bwp=bwp, bh=bh,
-            nb=nb, s_steps=s_steps, cb=cb, vk=vk, vn=vn,
+            nb=nb, s_steps=s_steps, cb=cbg, vk=vk, vn=vn, dilation=dilation,
             in_itemsize=xh.dtype.itemsize,
             w_itemsize=vs.vals.dtype.itemsize,
             out_itemsize=jnp.dtype(out_dtype).itemsize,
@@ -400,8 +493,8 @@ def vsconv_halo_pallas(
 # --------------------------------------------------------------------------
 
 def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
-            w_out: int, fuse_relu: bool, has_bias: bool, has_residual: bool,
-            skip_zero_inputs: bool):
+            dilation: int, w_out: int, fuse_relu: bool, has_bias: bool,
+            has_residual: bool, skip_zero_inputs: bool):
     it = iter(refs)
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
@@ -414,14 +507,16 @@ def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # decode the K-tile id: t = (ky*kw + kx) * CB + cin_tile.  ky and the
-    # width phase (kx % stride) are already resolved by the index_map; only
-    # the in-plane column offset kx // stride remains.
+    # decode the K-tile id: t = (ky*kw + kx) * cb + cin_tile (cb per group
+    # for a grouped conv).  ky and the width phase ((kx*dilation) % stride)
+    # are already resolved by the index_map; only the in-plane column
+    # offset (kx*dilation) // stride remains.
     t = idx_ref[j, s]
     kx = (t // cb) % kw
 
     xt = xt_ref[0, 0]  # (bh, bW, vk) — plane and cin-tile selected by index_map
-    xs = jax.lax.dynamic_slice_in_dim(xt, kx // stride, w_out, axis=1)
+    xs = jax.lax.dynamic_slice_in_dim(
+        xt, (kx * dilation) // stride, w_out, axis=1)
     xs2 = xs.reshape(-1, xs.shape[-1])  # (bh*w_out, vk)
 
     def _mac():
@@ -452,8 +547,8 @@ def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "kh", "kw", "stride", "w_out", "bh", "skip_zero_inputs", "fuse_relu",
-        "interpret", "out_dtype",
+        "kh", "kw", "stride", "groups", "dilation", "w_out", "bh",
+        "skip_zero_inputs", "fuse_relu", "interpret", "out_dtype",
     ),
 )
 def vsconv_pallas(
@@ -464,6 +559,8 @@ def vsconv_pallas(
     kh: int = 3,
     kw: int = 3,
     stride: int = 1,
+    groups: int = 1,
+    dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
     bh: int = 8,
@@ -472,22 +569,27 @@ def vsconv_pallas(
     interpret: bool = False,
     out_dtype=None,
 ) -> jax.Array:
-    """Row-tap stack xt (N, kh*stride, H, bW, C) * sparse (kh*kw*C, Cout)
-    -> (N, H, w_out, Cout).
+    """Row-tap stack xt (N, kh*stride, H, bW, C) * sparse (kh*kw*C/groups,
+    Cout) -> (N, H, w_out, Cout).
 
     The materialized-stack impl, kept as the oracle/fallback for
     `vsconv_halo_pallas`.  H (the stack's output-row count) must be a
-    multiple of ``bh``; the `ops.vsconv` wrapper pads.  ``bias`` (Cout,),
-    ``residual`` (N, H, w_out, Cout) — the ResNet shortcut, added before the
-    ReLU — and ``fuse_relu`` run the epilogue inside the kernel at flush
-    time.
+    multiple of ``bh``; the `ops.vsconv` wrapper pads.  ``groups`` shards
+    the cin-tile axis per group exactly as in the halo kernel; ``dilation``
+    spaces the taps (the stack planes are built dilated, so only the
+    in-plane column offset changes here).  ``bias`` (Cout,), ``residual``
+    (N, H, w_out, Cout) — the ResNet shortcut, added before the ReLU — and
+    ``fuse_relu`` run the epilogue inside the kernel at flush time.
     """
     n, planes, h, bw, c = xt.shape
     assert planes == kh * stride, (planes, kh, stride)
     nb, s_steps, vk, vn = vs.vals.shape
-    assert vs.shape[0] == kh * kw * c and c % vk == 0, (vs.shape, c, vk)
+    assert c % vk == 0 and (c // vk) % groups == 0 and nb % groups == 0, (
+        c, vk, nb, groups)
+    cbg = (c // vk) // groups  # cin-tiles per tap reachable from one strip
+    spg = nb // groups         # output strips per group
+    assert vs.shape[0] == kh * kw * cbg * vk, (vs.shape, c, vk, groups)
     assert h % bh == 0, (h, bh)
-    cb = c // vk  # cin-tiles per tap
     hb = h // bh
     out_dtype = out_dtype or xt.dtype
     has_bias = bias is not None
@@ -496,16 +598,17 @@ def vsconv_pallas(
     in_specs = [
         # block: one image, one (ky, phase) plane, one row block, full width,
         # one cin tile — the plane id is the generalized tap select:
-        #   plane = ky*stride + kx % stride,  tap = idx[j, s] // cb
+        #   plane = ky*stride + (kx*dilation) % stride,  tap = idx[j,s] // cbg
+        # and a grouped strip's cin tile gets its group's base added.
         pl.BlockSpec(
             (1, 1, bh, bw, vk),
             lambda j, m, s, idx: (
                 m // hb,                                      # image
-                (idx[j, s] // cb // kw) * stride
-                + ((idx[j, s] // cb) % kw) % stride,          # (ky, phase)
+                (idx[j, s] // cbg // kw) * stride
+                + (((idx[j, s] // cbg) % kw) * dilation) % stride,  # (ky, ph)
                 m % hb,                                       # row block
                 0,
-                idx[j, s] % cb,                               # cin tile
+                (j // spg) * cbg + idx[j, s] % cbg,           # cin tile
             ),
         ),
         pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
@@ -533,7 +636,8 @@ def vsconv_pallas(
     )
     return pl.pallas_call(
         functools.partial(
-            _kernel, cb=cb, kw=kw, stride=stride, w_out=w_out,
+            _kernel, cb=cbg, kw=kw, stride=stride, dilation=dilation,
+            w_out=w_out,
             fuse_relu=fuse_relu, has_bias=has_bias,
             has_residual=has_residual,
             skip_zero_inputs=skip_zero_inputs,
@@ -544,6 +648,313 @@ def vsconv_pallas(
         cost_estimate=stack_kernel_cost(
             n=n, hop=h, w_out=w_out, bw=bw, bh=bh, nb=nb, s_steps=s_steps,
             vk=vk, vn=vn, in_itemsize=xt.dtype.itemsize,
+            w_itemsize=vs.vals.dtype.itemsize,
+            out_itemsize=jnp.dtype(out_dtype).itemsize,
+            residual_bytes=(residual.size * residual.dtype.itemsize
+                            if has_residual else 0),
+        ),
+    )(*args)
+
+
+# --------------------------------------------------------------------------
+# Depthwise kernels (groups == Cin): per-channel tap vectors, VPU MACs
+# --------------------------------------------------------------------------
+#
+# A depthwise conv (multiplier 1) has one kh x kw filter per channel — a
+# full-cin K-tile would waste vk-1 lanes of every MXU issue.  Instead the
+# weight is the (kh*kw, C) tap matrix encoded with vk == 1, vn == vc: output
+# strips are vc-channel tiles and each stored vector is one tap's weights
+# across the tile (idx[j, s] = the tap id).  The MAC is elementwise over the
+# channel lane axis (VPU, not MXU); pruned (tap, channel-tile) vectors are
+# structurally absent and an all-zero shifted input block is skipped with
+# @pl.when — the same two-sided skip as the full kernels.
+
+
+def _dw_flush(acc_ref, o_ref, bias_ref, res_ref, *, fuse_relu, has_bias,
+              has_residual):
+    acc = acc_ref[...].reshape(o_ref.shape)
+    if has_bias:
+        acc = acc + bias_ref[0].astype(jnp.float32)
+    if has_residual:
+        acc = acc + res_ref[...].astype(jnp.float32)
+    if fuse_relu:
+        acc = jnp.maximum(acc, 0.0)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _dw_halo_kernel(idx_ref, xh_ref, w_ref, *refs, kw: int, stride: int,
+                    dilation: int, bh: int, w_out: int, fuse_relu: bool,
+                    has_bias: bool, has_residual: bool,
+                    skip_zero_inputs: bool):
+    it = iter(refs)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    j = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # idx[j, s] IS the tap id — no cin tile to decode: the input block
+    # depends only on (row-block, channel tile), so every sparse step
+    # revisits it and the halo is fetched exactly once per (strip, block).
+    t = idx_ref[j, s]
+    ky = t // kw
+    kx = t % kw
+    rlen = stride * (bh - 1) + 1
+    clen = stride * (w_out - 1) + 1
+    xt = xh_ref[0, pl.ds(ky * dilation, rlen),
+                pl.ds(kx * dilation, clen), 0]  # (rlen, clen, vc)
+    if stride > 1:
+        xt = xt[::stride, ::stride]
+    xs2 = xt.reshape(bh * w_out, xt.shape[-1])
+
+    def _mac():
+        # elementwise per-channel MAC: one tap vector scales its channels
+        acc_ref[...] += xs2.astype(jnp.float32) * w_ref[0, 0, 0].astype(
+            jnp.float32)
+
+    if skip_zero_inputs:
+        pl.when(jnp.any(xs2 != 0))(_mac)
+    else:
+        _mac()
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        _dw_flush(acc_ref, o_ref, bias_ref, res_ref, fuse_relu=fuse_relu,
+                  has_bias=has_bias, has_residual=has_residual)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kh", "kw", "stride", "dilation", "w_out", "bh", "skip_zero_inputs",
+        "fuse_relu", "interpret", "out_dtype",
+    ),
+)
+def vsconv_dw_halo_pallas(
+    xh: jax.Array,
+    vs: VectorSparse,
+    *,
+    w_out: int,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    dilation: int = 1,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    bh: int = 8,
+    skip_zero_inputs: bool = True,
+    fuse_relu: bool = False,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Depthwise halo kernel: direct input xh (N, rows, bW, CB, vc) * tap
+    matrix (kh*kw, C) encoded vk=1/vn=vc -> (N, Hout, w_out, C).
+
+    ``xh`` is `build_halo_input(x, vk=vc)`; the channel-tile axis CB = C/vc
+    is the strip axis.  The halo block offset is tap-independent AND
+    cin-tile-trivial (strip == channel tile), so the input is DMA'd once
+    per (strip, row-block) regardless of tap order — the depthwise case is
+    where the halo layout's fetch-once story is exact, not amortized.
+    """
+    n, rows, bwp, cb, vc = xh.shape
+    ke_h = (kh - 1) * dilation + 1
+    assert (rows - ke_h) % stride == 0, (rows, kh, dilation, stride)
+    h = (rows - ke_h) // stride + 1
+    nb, s_steps, vk_w, vn = vs.vals.shape
+    assert vk_w == 1 and vn == vc and nb == cb, (vs.vals.shape, xh.shape)
+    assert vs.shape == (kh * kw, cb * vc), (vs.shape, kh, kw, cb, vc)
+    assert h % bh == 0, (h, bh)
+    hb = h // bh
+    hh = stride * (bh - 1) + ke_h
+    out_dtype = out_dtype or xh.dtype
+    has_bias = bias is not None
+    has_residual = residual is not None
+
+    in_specs = [
+        pl.BlockSpec(
+            (1, hh, bwp, 1, vc),
+            lambda j, m, s, idx: (
+                m // hb, (m % hb) * stride * bh, 0, j, 0),
+            indexing_mode=pl.Unblocked(),
+        ),
+        pl.BlockSpec((1, 1, 1, vc), lambda j, m, s, idx: (j, s, 0, 0)),
+    ]
+    args = [vs.idx, xh, vs.vals]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, vc), lambda j, m, s, idx: (j, 0)))
+        args.append(bias.reshape(nb, vc))
+    if has_residual:
+        assert residual.shape == (n, h, w_out, nb * vc), (
+            residual.shape, (n, h, w_out, nb * vc))
+        in_specs.append(pl.BlockSpec(
+            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ))
+        args.append(residual)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, n * hb, s_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ),
+        scratch_shapes=[pltpu.VMEM((bh * w_out, vc), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _dw_halo_kernel, kw=kw, stride=stride, dilation=dilation, bh=bh,
+            w_out=w_out, fuse_relu=fuse_relu, has_bias=has_bias,
+            has_residual=has_residual, skip_zero_inputs=skip_zero_inputs,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h, w_out, nb * vc), out_dtype),
+        interpret=interpret,
+        cost_estimate=dw_halo_kernel_cost(
+            n=n, hop=h, w_out=w_out, kh=kh, stride=stride, bwp=bwp, bh=bh,
+            nb=nb, s_steps=s_steps, vc=vc, dilation=dilation,
+            in_itemsize=xh.dtype.itemsize,
+            w_itemsize=vs.vals.dtype.itemsize,
+            out_itemsize=jnp.dtype(out_dtype).itemsize,
+            residual_bytes=(residual.size * residual.dtype.itemsize
+                            if has_residual else 0),
+        ),
+    )(*args)
+
+
+def _dw_stack_kernel(idx_ref, xt_ref, w_ref, *refs, kw: int, stride: int,
+                     dilation: int, w_out: int, fuse_relu: bool,
+                     has_bias: bool, has_residual: bool,
+                     skip_zero_inputs: bool):
+    it = iter(refs)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    j = pl.program_id(0)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # idx[j, s] is the tap id; (ky, phase) resolved by the index_map, only
+    # the in-plane column offset remains.
+    t = idx_ref[j, s]
+    kx = t % kw
+    xt = xt_ref[0, 0]  # (bh, bW, vc)
+    xs = jax.lax.dynamic_slice_in_dim(
+        xt, (kx * dilation) // stride, w_out, axis=1)
+    xs2 = xs.reshape(-1, xs.shape[-1])
+
+    def _mac():
+        acc_ref[...] += xs2.astype(jnp.float32) * w_ref[0, 0, 0].astype(
+            jnp.float32)
+
+    if skip_zero_inputs:
+        pl.when(jnp.any(xs2 != 0))(_mac)
+    else:
+        _mac()
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        _dw_flush(acc_ref, o_ref, bias_ref, res_ref, fuse_relu=fuse_relu,
+                  has_bias=has_bias, has_residual=has_residual)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kh", "kw", "stride", "dilation", "w_out", "bh", "skip_zero_inputs",
+        "fuse_relu", "interpret", "out_dtype",
+    ),
+)
+def vsconv_dw_stack_pallas(
+    xt: jax.Array,
+    vs: VectorSparse,
+    *,
+    w_out: int,
+    kh: int = 3,
+    kw: int = 3,
+    stride: int = 1,
+    dilation: int = 1,
+    bias: jax.Array | None = None,
+    residual: jax.Array | None = None,
+    bh: int = 8,
+    skip_zero_inputs: bool = True,
+    fuse_relu: bool = False,
+    interpret: bool = False,
+    out_dtype=None,
+) -> jax.Array:
+    """Depthwise row-tap-stack kernel: xt (N, kh*stride, H, bW, C) * tap
+    matrix (kh*kw, C) encoded vk=1/vn=vc -> (N, H, w_out, C).
+
+    The bandwidth-dumb oracle for `vsconv_dw_halo_pallas`: each sparse step
+    selects a fresh (plane, channel-tile) block, so the input is re-DMA'd
+    every step — S fetches where the halo layout needs one.
+    """
+    n, planes, h, bw, c = xt.shape
+    assert planes == kh * stride, (planes, kh, stride)
+    nb, s_steps, vk_w, vc = vs.vals.shape
+    assert vk_w == 1 and c == nb * vc, (vs.vals.shape, c)
+    assert vs.shape == (kh * kw, c), (vs.shape, kh, kw, c)
+    assert h % bh == 0, (h, bh)
+    hb = h // bh
+    out_dtype = out_dtype or xt.dtype
+    has_bias = bias is not None
+    has_residual = residual is not None
+
+    in_specs = [
+        pl.BlockSpec(
+            (1, 1, bh, bw, vc),
+            lambda j, m, s, idx: (
+                m // hb,
+                (idx[j, s] // kw) * stride
+                + ((idx[j, s] % kw) * dilation) % stride,   # (ky, phase)
+                m % hb,
+                0,
+                j,                                          # channel tile
+            ),
+        ),
+        pl.BlockSpec((1, 1, 1, vc), lambda j, m, s, idx: (j, s, 0, 0)),
+    ]
+    args = [vs.idx, xt, vs.vals]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, vc), lambda j, m, s, idx: (j, 0)))
+        args.append(bias.reshape(nb, vc))
+    if has_residual:
+        assert residual.shape == (n, h, w_out, c), (
+            residual.shape, (n, h, w_out, c))
+        in_specs.append(pl.BlockSpec(
+            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ))
+        args.append(residual)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb, n * hb, s_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        ),
+        scratch_shapes=[pltpu.VMEM((bh * w_out, vc), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _dw_stack_kernel, kw=kw, stride=stride, dilation=dilation,
+            w_out=w_out, fuse_relu=fuse_relu, has_bias=has_bias,
+            has_residual=has_residual, skip_zero_inputs=skip_zero_inputs,
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, h, w_out, c), out_dtype),
+        interpret=interpret,
+        cost_estimate=dw_stack_kernel_cost(
+            n=n, hop=h, w_out=w_out, bw=bw, bh=bh, nb=nb, s_steps=s_steps,
+            vc=vc, in_itemsize=xt.dtype.itemsize,
             w_itemsize=vs.vals.dtype.itemsize,
             out_itemsize=jnp.dtype(out_dtype).itemsize,
             residual_bytes=(residual.size * residual.dtype.itemsize

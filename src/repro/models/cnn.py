@@ -61,7 +61,7 @@ def vgg16_apply(params, x, *, sparse: dict | None = None, impl: str = "jnp",
     out = net_apply(_VGG16_NET, params, x, sparse=sparse, impl=impl,
                     collect=rec)
     if collect is not None:
-        collect.extend((n, xi, w) for n, xi, w, _ in rec)
+        collect.extend((n, xi, w) for n, xi, w, *_ in rec)
     return out
 
 

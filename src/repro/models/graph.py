@@ -70,8 +70,10 @@ __all__ = [
     "SparseNet", "SparseConv", "SparseFC", "BatchedApply",
     "sparse_conv_from_dense", "apply_sparse_conv", "apply_sparse_fc",
     "net_schema", "net_apply", "sparsify", "collect_conv_traffic",
-    "build_vgg16", "build_resnet18", "build_resnet_stem",
-    "VGG16_LAYERS", "RESNET18_STAGES", "BN_EPS",
+    "build_vgg16", "build_resnet18", "build_resnet50", "build_mobilenet_v1",
+    "build_resnet_stem",
+    "VGG16_LAYERS", "RESNET18_STAGES", "RESNET50_STAGES",
+    "MOBILENET_V1_PLAN", "BN_EPS",
 ]
 
 BN_EPS = 1e-5
@@ -83,7 +85,15 @@ BN_EPS = 1e-5
 
 @dataclasses.dataclass(frozen=True)
 class Conv:
-    """kh x kw / stride / SAME conv (+BN) (+residual) (+ReLU)."""
+    """kh x kw / stride / dilation / SAME (grouped) conv (+BN) (+residual)
+    (+ReLU).
+
+    ``groups`` shards the channels: the weight is XLA's grouped HWIO
+    (kh, kw, cin/groups, cout) and output block g reads input group g only.
+    ``groups == cin`` is a depthwise conv (multiplier 1, cout == cin) —
+    routed through the per-channel tap kernels on the sparse path.
+    ``dilation`` spaces the taps (effective extent (k-1)*dilation + 1).
+    """
 
     name: str
     cin: int
@@ -91,6 +101,8 @@ class Conv:
     kh: int = 3
     kw: int = 3
     stride: int = 1
+    groups: int = 1
+    dilation: int = 1
     bn: bool = False
     relu: bool = True
     residual: str | None = None  # slot added before ReLU (fused epilogue)
@@ -190,14 +202,19 @@ class SparseConv:
     how a non-tileable Cin (e.g. the 3-channel stem) becomes a multiple of
     the K-tile length.  The padded weight rows are zero, so the math is
     unchanged; the padded input vectors are all-zero and the kernel's
-    input-side skip elides them at runtime.  ``bias`` (when set) overrides
-    the param-tree bias — this is where the BN-folded bias lives.
+    input-side skip elides them at runtime.  ``groups``/``dilation`` carry
+    the grouped/dilated geometry (``groups == cin`` is depthwise: the
+    encoded matrix is the (kh*kw, C) tap matrix with vk == 1).  ``bias``
+    (when set) overrides the param-tree bias — this is where the BN-folded
+    bias lives.
     """
 
     vs: VectorSparse
     kh: int = 3
     kw: int = 3
     stride: int = 1
+    groups: int = 1
+    dilation: int = 1
     cin_pad: int = 0
     bias: jax.Array | None = None
 
@@ -224,44 +241,89 @@ def sparse_conv_from_dense(
     vk: int = 32,
     vn: int = 128,
     stride: int = 1,
+    groups: int = 1,
+    dilation: int = 1,
     prune: bool = True,
     dtype=None,
 ):
-    """Dense (kh, kw, Cin, Cout) weight -> (SparseConv, pruned dense weight).
+    """Dense (kh, kw, Cin/groups, Cout) weight -> (SparseConv, pruned dense
+    weight).
 
     Handles non-tileable Cin by zero-padding channels to a multiple of a
     reduced K-tile length (min(vk, 8)); handles non-tileable Cout by
     shrinking the output strip to the largest divisor of Cout that is <= vn.
     ``prune=False`` (or density >= 1) keeps every tile — the dense network
     in the same format, the paper's single-datapath story.
+
+    Grouped convs (1 < groups < Cin) keep the K axis within the group:
+    the matrix is (kh*kw*Cin/groups, Cout), the K-tile length shrinks to a
+    divisor of Cin/groups, and the output strip to a divisor of Cout/groups
+    so no strip straddles a group boundary — pruning quotas are therefore
+    *per group* automatically (each strip scores only its group's weights).
+    Depthwise (groups == Cin, multiplier 1) encodes the (kh*kw, Cout) tap
+    matrix with vk == 1 and strips over channel tiles — the vectors are
+    per-tap channel runs, pruned the same balanced way.
     """
     w = np.asarray(w, np.float32)
-    kh, kw, cin, cout = w.shape
-    if cin % vk == 0:
-        vk_l, cp = vk, 0
+    kh, kw, cin_g, cout = w.shape
+    dtype = dtype or jnp.float32
+    depthwise = groups > 1 and cin_g == 1 and cout == groups
+    if depthwise:
+        # per-channel tap matrix: one row per tap, strips = channel tiles
+        wm = w.reshape(kh * kw, cout)
+        vk_l, cp = 1, 0
+        vn_l = min(vn, cout)
+        while cout % vn_l:
+            vn_l -= 1
+        if prune and density < 1.0:
+            wp, mask = prune_vectors_balanced(wm, density, vk_l, vn_l)
+        else:
+            wp = wm
+            mask = np.ones((kh * kw, cout // vn_l), bool)
+        vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
+        spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, groups=groups,
+                          dilation=dilation)
+        return spec, wp.reshape(kh, kw, 1, cout)
+    if groups > 1:
+        # K-tiles stay inside the group; no channel padding (shrink vk to a
+        # divisor of Cin/groups instead — padding would interleave zeros
+        # into every group)
+        vk_l = min(vk, cin_g)
+        while cin_g % vk_l:
+            vk_l -= 1
+        cp = 0
+        cout_g = cout // groups
+        vn_l = min(vn, cout_g)
+        while cout_g % vn_l:
+            vn_l -= 1
     else:
-        vk_l = min(vk, 8)
-        cp = -cin % vk_l
+        if cin_g % vk == 0:
+            vk_l, cp = vk, 0
+        else:
+            vk_l = min(vk, 8)
+            cp = -cin_g % vk_l
+        vn_l = min(vn, cout)
+        while cout % vn_l:
+            vn_l -= 1
     wpad = np.pad(w, ((0, 0), (0, 0), (0, cp), (0, 0))) if cp else w
-    wm = wpad.reshape(kh * kw * (cin + cp), cout)
-    vn_l = min(vn, cout)
-    while cout % vn_l:
-        vn_l -= 1
+    wm = wpad.reshape(kh * kw * (cin_g + cp), cout)
     if prune and density < 1.0:
         wp, mask = prune_vectors_balanced(wm, density, vk_l, vn_l)
     else:
         wp = wm
         mask = np.ones((wm.shape[0] // vk_l, cout // vn_l), bool)
-    dtype = dtype or jnp.float32
     vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
     if kh * kw > 1:
         # cin-major issue order: the halo kernel's input block then revisits
         # (no re-DMA) across consecutive taps of one cin tile — the layout
         # the halo HBM-traffic model assumes.  Order-agnostic everywhere
-        # else (the kernels decode each tile id independently).
-        vs = conv_cin_major(vs, (cin + cp) // vk_l)
-    spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, cin_pad=cp)
-    wp_dense = wp.reshape(kh, kw, cin + cp, cout)[:, :, :cin]
+        # else (the kernels decode each tile id independently).  For a
+        # grouped conv the tile ids are group-relative, so the per-group
+        # tile count is what orders them.
+        vs = conv_cin_major(vs, (cin_g + cp) // vk_l)
+    spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, groups=groups,
+                      dilation=dilation, cin_pad=cp)
+    wp_dense = wp.reshape(kh, kw, cin_g + cp, cout)[:, :, :cin_g]
     return spec, wp_dense
 
 
@@ -277,7 +339,8 @@ def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True, residual=None,
     if spec.cin_pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, spec.cin_pad)))
     return vs_conv2d(
-        x, spec.vs, kh=spec.kh, kw=spec.kw, stride=spec.stride, bias=bias,
+        x, spec.vs, kh=spec.kh, kw=spec.kw, stride=spec.stride,
+        groups=spec.groups, dilation=spec.dilation, bias=bias,
         residual=residual, fuse_relu=fuse_relu, impl=impl,
     )
 
@@ -318,9 +381,10 @@ def net_schema(net: SparseNet) -> dict:
     s = {}
     for l in net.layers:
         if isinstance(l, Conv):
+            cin_g = l.cin // l.groups
             e = {
-                "w": P((l.kh, l.kw, l.cin, l.cout), (None, None, None, "ff"),
-                       fan_in=l.kh * l.kw * l.cin),
+                "w": P((l.kh, l.kw, cin_g, l.cout), (None, None, None, "ff"),
+                       fan_in=l.kh * l.kw * cin_g),
             }
             if l.bn:
                 e["scale"] = P((l.cout,), ("ff",), init="ones")
@@ -354,7 +418,8 @@ def _bn_fold(p) -> tuple[np.ndarray, np.ndarray]:
 def _dense_conv(l: Conv, p, x, res):
     """Dense oracle for one Conv layer (BN applied explicitly if present)."""
     w = p["w"].astype(jnp.float32)
-    y = dense_conv2d(x.astype(jnp.float32), w, stride=l.stride)
+    y = dense_conv2d(x.astype(jnp.float32), w, stride=l.stride,
+                     groups=l.groups, dilation=l.dilation)
     if "scale" in p:
         g = p["scale"].astype(jnp.float32) * jax.lax.rsqrt(
             p["var"].astype(jnp.float32) + BN_EPS)
@@ -406,7 +471,8 @@ def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "auto",
             res = saved[l.residual] if l.residual else None
             p = params[l.name]
             if collect is not None:
-                collect.append((l.name, xin, p["w"], l.stride))
+                collect.append((l.name, xin, p["w"], l.stride, l.groups,
+                                l.dilation))
             if l.name in sparse:
                 entry = sparse[l.name]
                 spec = (entry if isinstance(entry, SparseConv)
@@ -504,8 +570,9 @@ class BatchedApply:
 
 
 def collect_conv_traffic(net: SparseNet, params, x):
-    """Forward pass recording (name, conv input NHWC, weight, stride) per
-    conv layer — the input of `core.accel_model.network_cycle_reports`."""
+    """Forward pass recording (name, conv input NHWC, weight, stride,
+    groups, dilation) per conv layer — the input of
+    `core.accel_model.network_cycle_reports` / `network_traffic_reports`."""
     rec: list = []
     net_apply(net, params, x, collect=rec)
     return rec
@@ -538,7 +605,7 @@ def sparsify(net: SparseNet, params, density: float, *, vk: int = 32,
             p = params[l.name]
             wdt = p["w"].dtype
             w = np.asarray(p["w"], np.float32)
-            cin = w.shape[2]
+            cin_g = w.shape[2]  # channels per group (== cin when ungrouped)
             if l.bn:
                 g, b = _bn_fold(p)
                 w = w * g  # scale per cout (last axis)
@@ -546,9 +613,12 @@ def sparsify(net: SparseNet, params, density: float, *, vk: int = 32,
                 b = np.asarray(p["b"], np.float32)
             else:
                 b = np.zeros((w.shape[3],), np.float32)
+            # grouped/depthwise layers always prune (their quota is per
+            # strip, i.e. per group); ungrouped small-Cin stems stay dense
+            prune = True if l.groups > 1 else cin_g >= vk
             spec, wp = sparse_conv_from_dense(
-                w, density, vk=vk, vn=vn, stride=l.stride,
-                prune=cin >= vk, dtype=wdt,
+                w, density, vk=vk, vn=vn, stride=l.stride, groups=l.groups,
+                dilation=l.dilation, prune=prune, dtype=wdt,
             )
             spec.bias = jnp.asarray(b, wdt)
             sparse[l.name] = spec
@@ -648,6 +718,87 @@ def build_resnet18(num_classes: int = 1000, *,
             cin = c
     layers += [Pool("gap"), Flatten(), Classifier("fc", 512, num_classes)]
     return SparseNet("resnet18", tuple(layers))
+
+
+# (bottleneck width, blocks) per stage — ResNet-50's plan; output channels
+# are 4x the bottleneck width (the expansion).
+RESNET50_STAGES = ((64, 3), (128, 4), (256, 6), (512, 3))
+
+
+def _bottleneck_block(layers: list, prefix: str, cin: int, c: int,
+                      stride: int) -> None:
+    """Append one ResNet bottleneck: 1x1 reduce -> 3x3 (stride) -> 1x1
+    expand (4x), BN throughout, shortcut added in the expand conv's fused
+    epilogue before the final ReLU (a 1x1/stride BN-projection when the
+    shape changes)."""
+    cout = 4 * c
+    inkey = f"{prefix}_in"
+    layers.append(Save(inkey))
+    idkey = inkey
+    if stride != 1 or cin != cout:
+        idkey = f"{prefix}_id"
+        layers.append(Conv(f"{prefix}_down", cin, cout, 1, 1, stride,
+                           bn=True, relu=False, src=inkey, dst=idkey))
+    layers.append(Conv(f"{prefix}_conv1", cin, c, 1, 1, 1, bn=True))
+    layers.append(Conv(f"{prefix}_conv2", c, c, 3, 3, stride, bn=True))
+    layers.append(Conv(f"{prefix}_conv3", c, cout, 1, 1, 1, bn=True,
+                       residual=idkey))
+
+
+def build_resnet50(num_classes: int = 1000, *,
+                   image_size: int = 224) -> SparseNet:
+    """ResNet-50: the 7x7/s2 BN stem and max-pool of ResNet-18, then 4
+    stages of (3, 4, 6, 3) bottleneck blocks (1x1 -> 3x3 -> 1x1 with 4x
+    expansion, stride-2 1x1 BN-projection downsamples), GAP, 2048-d
+    classifier — the credibility bar SCNN (Parashar et al.) and the
+    structured-sparse FPGA accelerator (Zhu et al.) both benchmark.
+
+    Every geometry — 7x7/s2, 1x1/s1, 1x1/s2, 3x3/s1, 3x3/s2 — was already
+    expressible in the kernel family; this builder just cashes the IR in.
+    """
+    del image_size  # geometry is size-agnostic; kept for config symmetry
+    layers: list = [
+        Conv("conv1", 3, 64, 7, 7, 2, bn=True),
+        Pool("max", 3, stride=2, padding="SAME"),
+    ]
+    cin = 64
+    for si, (c, blocks) in enumerate(RESNET50_STAGES):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            _bottleneck_block(layers, f"layer{si + 1}_{bi}", cin, c, stride)
+            cin = 4 * c
+    layers += [Pool("gap"), Flatten(), Classifier("fc", 2048, num_classes)]
+    return SparseNet("resnet50", tuple(layers))
+
+
+# (pointwise output channels, depthwise stride) per separable block — the
+# standard MobileNetV1 plan after the 3x3/s2/32 stem.
+MOBILENET_V1_PLAN = ((64, 1), (128, 2), (128, 1), (256, 2), (256, 1),
+                     (512, 2), (512, 1), (512, 1), (512, 1), (512, 1),
+                     (512, 1), (1024, 2), (1024, 1))
+
+
+def build_mobilenet_v1(num_classes: int = 1000, *,
+                       image_size: int = 224) -> SparseNet:
+    """MobileNetV1: 3x3/s2 stem then 13 depthwise-separable blocks
+    (3x3 depthwise BN-ReLU -> 1x1 pointwise BN-ReLU), GAP, 1024-d
+    classifier.
+
+    The depthwise stages are ``Conv(groups=cin)`` — the degenerate grouped
+    conv routed through the per-channel tap kernels — and every pointwise
+    conv is the 1x1 sparse matmul, so the whole efficient-CNN vocabulary
+    runs on the one vector-sparse datapath.
+    """
+    del image_size  # geometry is size-agnostic; kept for config symmetry
+    layers: list = [Conv("conv0", 3, 32, 3, 3, 2, bn=True)]
+    cin = 32
+    for i, (c, s) in enumerate(MOBILENET_V1_PLAN, 1):
+        layers.append(Conv(f"dw{i}", cin, cin, 3, 3, s, bn=True,
+                           groups=cin))
+        layers.append(Conv(f"pw{i}", cin, c, 1, 1, 1, bn=True))
+        cin = c
+    layers += [Pool("gap"), Flatten(), Classifier("fc", 1024, num_classes)]
+    return SparseNet("mobilenet_v1", tuple(layers))
 
 
 def build_resnet_stem() -> SparseNet:

@@ -1,0 +1,105 @@
+"""Benchmark-regression gate: the committed baseline + compare logic.
+
+The CI step re-runs the ResNet-18 per-layer bench and fails on a >10%
+per-layer regression of cycle speedup or modeled bytes.  These tests
+verify the gate *mechanism* against the committed baseline artifact:
+identical rows pass, a synthetically perturbed baseline (>10% better than
+what the repo produces) fails, and the per-layer delta table renders.
+"""
+import copy
+import importlib.util
+import json
+import pathlib
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+BASELINE = REPO / "benchmarks" / "baselines" / "BENCH_resnet18.json"
+
+
+def _bench_kernels():
+    spec = importlib.util.spec_from_file_location(
+        "bench_kernels", REPO / "benchmarks" / "bench_kernels.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture(scope="module")
+def bk():
+    return _bench_kernels()
+
+
+@pytest.fixture(scope="module")
+def baseline():
+    with open(BASELINE) as f:
+        return json.load(f)
+
+
+class TestCompareBaseline:
+    def test_committed_baseline_shape(self, baseline):
+        """The committed artifact carries everything the gate re-run
+        needs (settings) and per-layer rows with the gated metrics."""
+        assert baseline["net"] == "resnet18"
+        assert {"image_size", "num_classes", "batch",
+                "densities"} <= set(baseline)
+        layer_rows = [r for r in baseline["rows"] if r["layer"] != "__net__"]
+        assert layer_rows
+        for r in layer_rows:
+            assert {"cycle_speedup", "bytes_halo", "bytes_stack"} <= set(r)
+
+    def test_identical_rows_pass(self, bk, baseline):
+        failures, lines = bk.compare_baseline(baseline["rows"], baseline)
+        assert failures == []
+        # delta table renders one markdown row per gated metric
+        assert lines[0].startswith("| layer row |")
+        assert len(lines) > 2 + len(baseline["rows"])
+        assert all("| ok |" in l for l in lines[2:])
+
+    def test_synthetic_regression_fails(self, bk, baseline):
+        """Perturb the baseline >10% better than reality: the gate must
+        fail — this is exactly what a real perf regression looks like to
+        CI (current worse than committed)."""
+        perturbed = copy.deepcopy(baseline)
+        victim = next(r for r in perturbed["rows"]
+                      if r["layer"] != "__net__")
+        victim["cycle_speedup"] = victim["cycle_speedup"] * 1.25
+        victim["bytes_halo"] = int(victim["bytes_halo"] * 0.8)
+        failures, lines = bk.compare_baseline(baseline["rows"], perturbed)
+        assert len(failures) == 2
+        assert any("cycle_speedup" in f for f in failures)
+        assert any("bytes_halo" in f for f in failures)
+        assert sum("| FAIL |" in l for l in lines) == 2
+
+    def test_small_regression_within_tolerance_passes(self, bk, baseline):
+        perturbed = copy.deepcopy(baseline)
+        for r in perturbed["rows"]:
+            if "cycle_speedup" in r:
+                r["cycle_speedup"] = r["cycle_speedup"] * 1.05  # < 10%
+        failures, _ = bk.compare_baseline(baseline["rows"], perturbed)
+        assert failures == []
+
+    def test_missing_row_fails(self, bk, baseline):
+        rows = [r for r in baseline["rows"]
+                if r["name"] != baseline["rows"][0]["name"]]
+        failures, _ = bk.compare_baseline(rows, baseline)
+        assert any("missing" in f for f in failures)
+
+    def test_new_rows_are_not_failures(self, bk, baseline):
+        rows = baseline["rows"] + [{"name": "resnet99_conv1_density_1.0",
+                                    "cycle_speedup": 1.0,
+                                    "bytes_halo": 1, "bytes_stack": 1}]
+        failures, _ = bk.compare_baseline(rows, baseline)
+        assert failures == []
+
+
+class TestRunNetworkSmoke:
+    def test_mobilenet_rows_have_dw_geometry(self, bk):
+        """The generalized per-network bench runs the depthwise net and
+        tags dw layers in the geometry column (tiny config)."""
+        rows = bk.run_network("mobilenet_v1", densities=(0.5,),
+                              image_size=16, num_classes=8)
+        dw = [r for r in rows if r.get("geometry", "").endswith("_dw")]
+        assert len(dw) == 13
+        net_row = next(r for r in rows if r["layer"] == "__net__")
+        assert net_row["bytes_halo"] < net_row["bytes_stack"]
