@@ -15,12 +15,15 @@
    *both* conv input layouts (halo direct input vs row-tap stack), and the
    modeled HBM bytes of each layout — the bandwidth story is part of the
    benchmarked contract, not just the MAC skips.
-5. Per-network per-layer speedup-vs-density (``--net resnet18 | resnet50 |
-   mobilenet_v1``, ``--resnet18`` kept as an alias): the graph executor +
-   cycle model walked over every conv (residual blocks, BN folded,
-   depthwise stages), emitting a ``BENCH_<net>.json`` artifact so CI
-   tracks the perf trajectory — with per-layer bytes /
-   arithmetic-intensity columns for the halo and stack layouts.
+5. Per-network per-layer speedup-vs-density (``--net vgg16 | resnet18 |
+   resnet34 | resnet50 | mobilenet_v1``, ``--resnet18`` kept as an alias):
+   the graph executor + cycle model walked over every conv (residual
+   blocks, BN folded, depthwise stages), emitting a ``BENCH_<net>.json``
+   artifact so CI tracks the perf trajectory — with per-layer bytes /
+   arithmetic-intensity columns for the halo and stack layouts, and the
+   measured-vs-modeled columns (wall clock, compiled-HLO FLOPs/bytes,
+   calibrated ``predicted_us`` — see `repro.core.calibration`) next to
+   them.
 6. ``--gate-traffic``: CI smoke gate — runs both impls on the ResNet
    7x7/s2 stem geometry and a MobileNet depthwise 3x3/s2 layer (interpret
    parity) and fails unless the halo path's modeled ``bytes_accessed`` is
@@ -214,15 +217,41 @@ def run_conv_geometries(densities=(1.0, 0.5, 0.25)) -> list[dict]:
 
 def _net_builders() -> dict:
     from repro.models.graph import (
-        build_mobilenet_v1, build_resnet18, build_resnet50,
+        build_mobilenet_v1, build_resnet18, build_resnet34, build_resnet50,
+        build_vgg16,
     )
-    return {"resnet18": build_resnet18, "resnet50": build_resnet50,
+    return {"vgg16": build_vgg16, "resnet18": build_resnet18,
+            "resnet34": build_resnet34, "resnet50": build_resnet50,
             "mobilenet_v1": build_mobilenet_v1}
+
+
+MEASURED_COLS = ("measured_us", "hlo_flops", "hlo_bytes", "measured_ai",
+                 "flops_model_ratio", "modeled_flops", "predicted_us")
+
+
+def _measured_vs_modeled(net, params, x, density) -> dict:
+    """Per-layer measured-vs-modeled columns (`repro.core.calibration`):
+    median wall clock, compiled-HLO FLOPs/bytes, and the calibrated time
+    model's ``predicted_us``.  Reported next to the modeled columns, never
+    gated — only the deterministic metrics are stable enough for that."""
+    from repro.core.accel_model import load_calibration
+    from repro.core.calibration import (
+        attach_predictions, measured_vs_modeled_records,
+    )
+
+    recs = measured_vs_modeled_records(net, params, x, density=density,
+                                       repeats=3, warmup=1)
+    attach_predictions(recs, load_calibration())
+    keep = MEASURED_COLS + ("modeled_cycles", "modeled_bytes", "modeled_ai",
+                            "kind")
+    return {r["layer"]: {k: (round(r[k], 3) if k == "predicted_us" else r[k])
+                         for k in keep if k in r} for r in recs}
 
 
 def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
                 image_size: int = 32, num_classes: int = 200, batch: int = 1,
-                out_path: str | None = None) -> list[dict]:
+                out_path: str | None = None,
+                measure: bool = True) -> list[dict]:
     """Per-network per-layer speedup-vs-density through the graph executor.
 
     For each density: sparsify the whole network (BN folded, residuals
@@ -231,8 +260,12 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
     density, not the TPU claim), and walk the same graph through the
     accelerator cycle model for per-layer VSCNN-vs-dense cycle speedups
     plus the DRAM traffic model for per-layer bytes / arithmetic intensity
-    under both conv input layouts (halo vs stack).  ``out_path`` writes the
-    rows as a JSON artifact (``BENCH_<net>.json`` in CI).
+    under both conv input layouts (halo vs stack).  With ``measure`` (the
+    default) each per-layer row also carries the measured-vs-modeled
+    columns — standalone-jitted wall clock, compiled-HLO FLOPs/bytes, and
+    the calibrated model's ``predicted_us`` — and the FC head gets its own
+    (ungated) row.  ``out_path`` writes the rows as a JSON artifact
+    (``BENCH_<net>.json`` in CI).
     """
     from repro.core.accel_model import PE_4_14_3, aggregate, \
         network_cycle_reports, network_traffic_reports
@@ -264,6 +297,8 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
         traffic = collect_conv_traffic(net, pruned, x[:1])
         reports = network_cycle_reports(traffic, pe)
         byte_reports = dict(network_traffic_reports(traffic, sparse))
+        measured = _measured_vs_modeled(net, params, x, density) \
+            if measure else {}
         for name, rep in reports:
             layer = next(l for l in net.conv_layers() if l.name == name)
             tr = byte_reports[name]
@@ -273,7 +308,7 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
                     else f"_g{layer.groups}"
             if layer.dilation > 1:
                 geom += f"_d{layer.dilation}"
-            rows.append({
+            row = {
                 "name": f"{net_name}_{name}_density_{density}",
                 "layer": name,
                 "geometry": geom,
@@ -287,7 +322,23 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
                 "bytes_stack": tr["stack"].bytes_accessed,
                 "ai_halo": round(tr["halo"].arithmetic_intensity, 2),
                 "ai_stack": round(tr["stack"].arithmetic_intensity, 2),
-            })
+            }
+            if name in measured:
+                row.update({k: v for k, v in measured[name].items()
+                            if k in MEASURED_COLS})
+            rows.append(row)
+        # FC layers have no cycle-model row; their measured-vs-modeled
+        # record rides along as its own (ungated: no cycle/bytes metrics)
+        conv_names = {name for name, _ in reports}
+        for name, m in measured.items():
+            if name not in conv_names:
+                rows.append({
+                    "name": f"{net_name}_{name}_density_{density}",
+                    "layer": name,
+                    "geometry": "fc",
+                    "density": density,
+                    **m,
+                })
         agg = aggregate([r for _, r in reports])
         rows.append({
             "name": f"{net_name}_net_density_{density}",
@@ -499,7 +550,8 @@ def gate_traffic() -> int:
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--net", default=None,
-                    choices=["resnet18", "resnet50", "mobilenet_v1"],
+                    choices=["vgg16", "resnet18", "resnet34", "resnet50",
+                             "mobilenet_v1"],
                     help="run a per-layer network table instead of the "
                          "kernel micro-benches")
     ap.add_argument("--resnet18", action="store_true",

@@ -1,0 +1,202 @@
+"""Calibration CLI: measure wall-clock per layer, fit the cost model.
+
+The modeled numbers in ``BENCH_<net>.json`` (cycles, bytes, arithmetic
+intensity) come from the analytic accelerator model; this tool closes the
+measured-vs-modeled loop (`repro.core.calibration`):
+
+1. Default run: walk every conv/FC layer of the registered nets (VGG-16,
+   ResNet-18/34/50, MobileNetV1 at the reduced CI geometry) through the
+   structural sparse path as standalone jitted functions, recording
+   median-of-k wall clock, compiled-HLO FLOPs/bytes (`utils.hlo.analyze`,
+   trip-count aware) and the analytic model's numbers side by side.
+2. ``--fit``: non-negative least squares over those measurements fits the
+   time model's free constants (cycle time, per-tap overhead, vsmm flush
+   cost, DMA overlap, dispatch floor) and writes the calibration artifact
+   — constants + fit settings + every per-layer record with its
+   ``predicted_us`` — to ``benchmarks/baselines/CALIB_<backend>.json``
+   (committed; ``accel_model.load_calibration`` picks it up).
+3. ``--gate-calibration``: the CI drift gate.  Re-measures the fast gated
+   layer subset and fails the build when prediction error leaves the band:
+   bit-exact round-trip of stored constants -> stored predictions, a tight
+   band (default 2%) on deterministic HLO/model features, and a wide
+   machine-normalized band (default 4x) on fresh wall clock.  Per-layer
+   delta table goes to ``$GITHUB_STEP_SUMMARY`` when set.
+
+Run with ``PYTHONPATH=src`` from the repo root, like the other benches.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.calibration import (
+    attach_predictions,
+    compare_calibration,
+    default_calib_path,
+    fit_constants,
+    load_calibration_file,
+    measured_vs_modeled_records,
+    save_calibration,
+)
+
+# Reduced CI geometry — matches the BENCH_<net>.json baselines, so the
+# calibration rows describe the same layers CI already tracks.
+IMAGE_SIZE = 32
+NUM_CLASSES = 200
+DEFAULT_DENSITY = 0.5
+DEFAULT_NETS = ("vgg16", "resnet18", "resnet34", "resnet50", "mobilenet_v1")
+# The gate re-measures one small net: ~20 layers, a few seconds of CI time,
+# but every feature family (7x7 stem, 3x3, 1x1 projection, stride-2
+# downsample, FC head) appears in the subset.
+GATE_NET = "resnet18"
+
+
+def _builders() -> dict:
+    from repro.models.graph import (
+        build_mobilenet_v1, build_resnet18, build_resnet34, build_resnet50,
+        build_vgg16,
+    )
+    return {
+        "vgg16": build_vgg16,
+        "resnet18": build_resnet18,
+        "resnet34": build_resnet34,
+        "resnet50": build_resnet50,
+        "mobilenet_v1": build_mobilenet_v1,
+    }
+
+
+def collect_records(nets=DEFAULT_NETS, *, density: float = DEFAULT_DENSITY,
+                    repeats: int = 5, warmup: int = 2,
+                    layers: set[str] | None = None,
+                    measure: bool = True) -> list[dict]:
+    """Measured-vs-modeled rows for every conv/FC layer of ``nets``."""
+    from repro.models.layers import init_params
+
+    builders = _builders()
+    rows: list[dict] = []
+    for i, name in enumerate(nets):
+        net = builders[name](NUM_CLASSES, image_size=IMAGE_SIZE)
+        if layers is not None and not any(
+                ln.startswith(f"{net.name}/") for ln in layers):
+            continue
+        params = init_params(net.schema(), jax.random.PRNGKey(i), jnp.float32)
+        rng = np.random.default_rng(100 + i)
+        x = jnp.asarray(
+            rng.standard_normal((1, IMAGE_SIZE, IMAGE_SIZE, 3)), jnp.float32)
+        rows += measured_vs_modeled_records(
+            net, params, x, density=density, repeats=repeats, warmup=warmup,
+            layers=layers, measure=measure)
+    return rows
+
+
+def run_fit(out_path: str | None, *, nets=DEFAULT_NETS,
+            density: float = DEFAULT_DENSITY, repeats: int = 5,
+            warmup: int = 2) -> int:
+    """Measure everything, fit the constants, write the artifact."""
+    backend = jax.default_backend()
+    rows = collect_records(nets, density=density, repeats=repeats,
+                           warmup=warmup)
+    constants = fit_constants(
+        [r["features"] for r in rows],
+        [r["measured_us"] * 1e-6 for r in rows],
+        backend=backend)
+    attach_predictions(rows, constants)
+    path = out_path or default_calib_path(backend)
+    gate_layers = [r["name"] for r in rows if r["net"] == GATE_NET]
+    save_calibration(
+        path, constants, rows,
+        fit_settings={
+            "nets": list(nets),
+            "image_size": IMAGE_SIZE,
+            "num_classes": NUM_CLASSES,
+            "density": density,
+            "repeats": repeats,
+            "warmup": warmup,
+            "weighting": "relative",
+            "jax": jax.__version__,
+        },
+        gate_layers=gate_layers)
+    print(f"fitted {backend} constants over {len(rows)} layers "
+          f"({len(nets)} nets):")
+    for k, v in constants.to_dict().items():
+        print(f"  {k:>18}: {v}")
+    ratios = sorted(r["measured_us"] / max(r["predicted_us"], 1e-9)
+                    for r in rows)
+    print(f"measured/predicted ratio: min {ratios[0]:.2f} / median "
+          f"{ratios[len(ratios) // 2]:.2f} / max {ratios[-1]:.2f}")
+    print(f"wrote {path} (gate subset: {len(gate_layers)} {GATE_NET} layers)")
+    return 0
+
+
+def gate_calibration(baseline_path: str | None, *, band: float = 4.0,
+                     feature_tol: float = 0.02, repeats: int = 5,
+                     warmup: int = 2) -> int:
+    """CI drift gate: re-measure the gated subset vs the committed calib."""
+    backend = jax.default_backend()
+    path = baseline_path or default_calib_path(backend)
+    calib = load_calibration_file(path)
+    fit = calib.get("fit", {})
+    gate_layers = set(calib["gate_layers"])
+    fresh = collect_records(
+        tuple(fit.get("nets", DEFAULT_NETS)),
+        density=fit.get("density", DEFAULT_DENSITY),
+        repeats=repeats, warmup=warmup, layers=gate_layers)
+    failures, lines = compare_calibration(
+        fresh, calib, feature_tol=feature_tol, band=band)
+    summary = "\n".join(
+        [f"## Calibration drift gate — `{path}` "
+         f"({'FAIL' if failures else 'PASS'})", ""]
+        + lines + [""]
+        + [f"- {f}" for f in failures])
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary + "\n")
+    print(summary)
+    if failures:
+        print(f"calibration gate: FAIL ({len(failures)} drift(s))")
+        return 1
+    print("calibration gate: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.split("\n", 1)[0])
+    ap.add_argument("--fit", action="store_true",
+                    help="fit the model constants to fresh measurements and "
+                         "write benchmarks/baselines/CALIB_<backend>.json")
+    ap.add_argument("--gate-calibration", action="store_true",
+                    help="CI drift gate: re-measure the gated layer subset "
+                         "and fail if prediction error leaves the band")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="calibration artifact to fit into / gate against "
+                         "(default: benchmarks/baselines/CALIB_<backend>"
+                         ".json)")
+    ap.add_argument("--nets", default=",".join(DEFAULT_NETS),
+                    help="comma-separated net list for measurement/fit")
+    ap.add_argument("--density", type=float, default=DEFAULT_DENSITY)
+    ap.add_argument("--repeats", type=int, default=5,
+                    help="median-of-k wall-clock repeats per layer")
+    ap.add_argument("--warmup", type=int, default=2)
+    ap.add_argument("--band", type=float, default=4.0,
+                    help="wall-clock band (x) for --gate-calibration")
+    ap.add_argument("--feature-tol", type=float, default=0.02,
+                    help="tight relative band for deterministic features")
+    args = ap.parse_args()
+    nets = tuple(n for n in args.nets.split(",") if n)
+    if args.gate_calibration:
+        raise SystemExit(gate_calibration(
+            args.baseline, band=args.band, feature_tol=args.feature_tol,
+            repeats=args.repeats, warmup=args.warmup))
+    if args.fit:
+        raise SystemExit(run_fit(
+            args.baseline, nets=nets, density=args.density,
+            repeats=args.repeats, warmup=args.warmup))
+    for r in collect_records(nets, density=args.density,
+                             repeats=args.repeats, warmup=args.warmup):
+        print(json.dumps(r))

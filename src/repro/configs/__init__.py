@@ -9,7 +9,8 @@ default for ArchConfig) when a tool accepts both.
 from . import (
     internvl2_26b, gemma3_12b, nemotron_4_340b, qwen15_4b, phi3_medium_14b,
     jamba_v01_52b, granite_moe_3b, kimi_k2_1t, hubert_xlarge, rwkv6_3b,
-    vscnn_vgg16, vscnn_resnet18, vscnn_resnet50, vscnn_mobilenet_v1,
+    vscnn_vgg16, vscnn_resnet18, vscnn_resnet34, vscnn_resnet50,
+    vscnn_mobilenet_v1,
 )
 from .base import ArchConfig, LayerSpec, Segment, ShapeSpec, SparsityConfig, SHAPES
 
@@ -23,8 +24,8 @@ REGISTRY = {m.CONFIG.name: m.CONFIG for m in _MODULES}
 # CNN serving archs (VSCNN): separate registry so LM-only iterators
 # (train, dryrun, models smoke) keep seeing homogeneous ArchConfigs.
 CNN_REGISTRY = {m.CONFIG.name: m.CONFIG
-                for m in [vscnn_vgg16, vscnn_resnet18, vscnn_resnet50,
-                          vscnn_mobilenet_v1]}
+                for m in [vscnn_vgg16, vscnn_resnet18, vscnn_resnet34,
+                          vscnn_resnet50, vscnn_mobilenet_v1]}
 
 
 def get_config(name: str):

@@ -4,6 +4,8 @@
 - `pruning`            Mao-style vector pruning (global + balanced)
 - `sparse_ops`         structural sparse matmul/conv (jnp + Pallas dispatch)
 - `accel_model`        cycle-accurate PE-array simulator (paper Table I/Figs 12-13)
+- `calibration`        measured-vs-modeled loop: per-layer wall-clock + HLO
+                       cost features, fitted model constants, CI drift gate
 """
 from .vector_sparse import (
     VectorSparse, encode, decode, from_mask, tile_mask, conv_cin_major,
@@ -38,4 +40,13 @@ from .accel_model import (
     network_cycle_reports,
     network_traffic_reports,
     table1_example,
+    load_calibration,
+    predicted_layer_time_s,
+)
+from .calibration import (
+    CalibConstants,
+    fit_constants,
+    predict_time_s,
+    compare_calibration,
+    measured_vs_modeled_records,
 )

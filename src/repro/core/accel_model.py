@@ -34,6 +34,14 @@ so one fetched vector feeds every PE): modeled HBM bytes per conv layer for
 the TPU kernels' two input layouts — the halo-blocked direct input vs the
 materialized row-tap stack — plus arithmetic intensity, sharing the exact
 formulas the kernels hand XLA as `pl.CostEstimate`.
+
+The model's free constants (seconds per cycle, per-tap overhead, vsmm
+flush cost, DMA overlap) are *calibrated, not guessed*: `load_calibration`
+returns the constants fitted against per-layer wall-clock measurements
+(committed as ``benchmarks/baselines/CALIB_<backend>.json``; see
+`core.calibration` and ``benchmarks/calibrate.py``), and
+`predicted_layer_time_s` turns a layer's modeled features into calibrated
+wall time.  CI re-measures a layer subset and fails on prediction drift.
 """
 from __future__ import annotations
 
@@ -44,7 +52,8 @@ import numpy as np
 
 __all__ = ["PEConfig", "CycleReport", "TrafficReport", "conv_layer_cycles",
            "conv_layer_traffic", "aggregate", "network_cycle_reports",
-           "network_traffic_reports"]
+           "network_traffic_reports", "load_calibration",
+           "predicted_layer_time_s"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -484,6 +493,34 @@ def network_cycle_reports(traffic, pe: PEConfig) -> list[tuple[str, CycleReport]
             x, np.asarray(w), pe, stride=stride, groups=groups,
             dilation=dilation)))
     return reports
+
+
+def load_calibration(backend: str | None = None, path=None):
+    """The fitted cost-model constants for ``backend`` (default: the active
+    jax backend) — `core.calibration.CalibConstants` loaded from the
+    committed ``benchmarks/baselines/CALIB_<backend>.json``, or the
+    uncalibrated defaults when none exists.  This is what makes the
+    modeled numbers calibrated rather than guessed; re-fit with
+    ``benchmarks/calibrate.py --fit``."""
+    from .calibration import load_constants
+    return load_constants(backend, path=path)
+
+
+def predicted_layer_time_s(traffic: TrafficReport, *, nb: int, s_steps: int,
+                           blocks: int, vk: int, vn: int,
+                           constants=None) -> float:
+    """Calibrated wall-time prediction for one layer.
+
+    ``blocks`` is the kernel's spatial grid sweep per strip (row-blocks for
+    a conv, M-tiles for the matmul path); the remaining geometry comes from
+    the encoded weight.  ``constants`` defaults to `load_calibration()`."""
+    from .calibration import layer_features, predict_time_s
+
+    c = constants if constants is not None else load_calibration()
+    feat = layer_features(flops=traffic.flops,
+                          bytes_accessed=traffic.bytes_accessed, nb=nb,
+                          s_steps=s_steps, blocks=blocks, vk=vk, vn=vn)
+    return predict_time_s(feat, c)
 
 
 def aggregate(reports: list[CycleReport]) -> CycleReport:

@@ -70,9 +70,9 @@ __all__ = [
     "SparseNet", "SparseConv", "SparseFC", "BatchedApply",
     "sparse_conv_from_dense", "apply_sparse_conv", "apply_sparse_fc",
     "net_schema", "net_apply", "sparsify", "collect_conv_traffic",
-    "build_vgg16", "build_resnet18", "build_resnet50", "build_mobilenet_v1",
-    "build_resnet_stem",
-    "VGG16_LAYERS", "RESNET18_STAGES", "RESNET50_STAGES",
+    "build_vgg16", "build_resnet18", "build_resnet34", "build_resnet50",
+    "build_mobilenet_v1", "build_resnet_stem",
+    "VGG16_LAYERS", "RESNET18_STAGES", "RESNET34_STAGES", "RESNET50_STAGES",
     "MOBILENET_V1_PLAN", "BN_EPS",
 ]
 
@@ -451,7 +451,7 @@ def _pool(l: Pool, x):
 
 
 def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "auto",
-              collect=None):
+              collect=None, collect_fc=None):
     """Walk the graph: x (N, H, W, C) -> logits / features.
 
     sparse: {layer_name: SparseConv | SparseFC | VectorSparse} — layers
@@ -459,7 +459,10 @@ def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "auto",
     + input-side skip, bias + residual + ReLU fused into the kernel
     epilogue); absent layers run dense.  ``collect`` (a list) records
     (name, layer input NHWC, weight, stride) per conv for the accelerator
-    cycle model.
+    cycle model; ``collect_fc`` (a separate list, so the conv record's
+    shape stays stable for its consumers) records (name, layer input,
+    weight) per FC layer — the calibration harness measures FC layers on
+    their real flattened activations through this hook.
     """
     sparse = sparse or {}
     saved: dict[str, jax.Array] = {}
@@ -507,6 +510,8 @@ def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "auto",
             x = x.reshape(x.shape[0], -1)
         elif isinstance(l, FC):
             p = params[l.name]
+            if collect_fc is not None:
+                collect_fc.append((l.name, x, p["w"]))
             if l.name in sparse:
                 entry = sparse[l.name]
                 spec = (entry if isinstance(entry, SparseFC)
@@ -718,6 +723,33 @@ def build_resnet18(num_classes: int = 1000, *,
             cin = c
     layers += [Pool("gap"), Flatten(), Classifier("fc", 512, num_classes)]
     return SparseNet("resnet18", tuple(layers))
+
+
+# (channels, blocks) per stage — the ResNet-34 basic-block plan: the
+# ResNet-50 stage depths on ResNet-18's block type.
+RESNET34_STAGES = ((64, 3), (128, 4), (256, 6), (512, 3))
+
+
+def build_resnet34(num_classes: int = 1000, *,
+                   image_size: int = 224) -> SparseNet:
+    """ResNet-34: ResNet-18's basic-block architecture at the (3, 4, 6, 3)
+    stage depths — no new conv geometry at all (7x7/s2 stem, 3x3 bodies,
+    1x1/s2 BN-projection downsamples), so the builder is the whole cost of
+    the network; schema, sparsification, serving and the cycle/traffic
+    models come from the shared walker."""
+    del image_size  # geometry is size-agnostic; kept for config symmetry
+    layers: list = [
+        Conv("conv1", 3, 64, 7, 7, 2, bn=True),
+        Pool("max", 3, stride=2, padding="SAME"),
+    ]
+    cin = 64
+    for si, (c, blocks) in enumerate(RESNET34_STAGES):
+        for bi in range(blocks):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            _basic_block(layers, f"layer{si + 1}_{bi}", cin, c, stride)
+            cin = c
+    layers += [Pool("gap"), Flatten(), Classifier("fc", 512, num_classes)]
+    return SparseNet("resnet34", tuple(layers))
 
 
 # (bottleneck width, blocks) per stage — ResNet-50's plan; output channels

@@ -21,7 +21,8 @@ import dataclasses
 import math
 import re
 
-__all__ = ["HloCost", "parse_hlo", "analyze", "collective_report"]
+__all__ = ["HloCost", "parse_hlo", "analyze", "analyze_compiled",
+           "collective_report"]
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
@@ -451,6 +452,17 @@ def analyze(hlo_text: str, entry: str | None = None) -> HloCost:
             entry = next((n for n in roots if "main" in n),
                          roots[-1] if roots else list(comps)[-1])
     return _cost_of(comps[entry], comps, {})
+
+
+def analyze_compiled(compiled) -> HloCost:
+    """`analyze` over a jax `Compiled` object's optimized HLO text.
+
+    FLOPs come from dot/convolution shapes only: a program whose math is
+    fused elementwise multiply-adds (e.g. the depthwise conv path) reports
+    zero FLOPs — still deterministic, so calibration gates pin the value,
+    but don't divide by it.
+    """
+    return analyze(compiled.as_text())
 
 
 def collective_report(cost: HloCost, top: int = 12) -> str:

@@ -16,7 +16,7 @@ import json
 
 from .hlo import HloCost
 
-__all__ = ["HW", "V5E", "RooflineReport", "report"]
+__all__ = ["HW", "V5E", "HOST_CPU", "RooflineReport", "report"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +30,12 @@ class HW:
 
 V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9, link_bw=50e9,
          hbm_bytes=16e9)
+
+# Nominal CI-runner class host: one AVX2 core's f32 FMA peak and a
+# conservative DRAM stream bandwidth (the denominator the calibration's
+# byte term uses — core.calibration.CPU_HBM_GBPS is this figure in GB/s).
+HOST_CPU = HW(name="host-cpu", peak_flops=1e11, hbm_bw=20e9, link_bw=0.0,
+              hbm_bytes=16e9)
 
 
 @dataclasses.dataclass

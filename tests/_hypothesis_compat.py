@@ -1,10 +1,17 @@
-"""Optional-`hypothesis` shim.
+"""Optional-`hypothesis` shim with a deterministic fallback runner.
 
 Property-based test modules import ``given``/``settings``/``st`` from here
-instead of from ``hypothesis`` directly.  With hypothesis installed this is a
-pure re-export; without it the ``@given`` decorator turns each property test
-into a pytest skip, so a bare environment *collects* every module cleanly
-instead of erroring at import time (the tier-1 regression this file guards).
+instead of from ``hypothesis`` directly.  With hypothesis installed this is
+a pure re-export.  Without it, ``@given`` no longer turns the test into a
+silent skip (the seed-era behavior that let property coverage vanish in
+bare environments): a miniature deterministic runner draws a fixed number
+of examples from the small strategy vocabulary these tests use
+(``integers`` / ``floats`` / ``sampled_from`` / ``booleans`` /
+``composite``) and runs the test body on each.  Fewer examples and no
+shrinking — real hypothesis in CI remains the authority (the CI tier-1 job
+sets ``REQUIRE_HYPOTHESIS=1`` so the fallback can never mask a missing
+install there) — but a bare environment now *executes* every property test
+instead of collecting-then-skipping it.
 """
 from __future__ import annotations
 
@@ -13,40 +20,112 @@ try:
 
     HAVE_HYPOTHESIS = True
 except ImportError:  # pragma: no cover - exercised only without hypothesis
-    import pytest
+    import functools
+    import inspect
+    import random
 
     HAVE_HYPOTHESIS = False
 
+    FALLBACK_MAX_EXAMPLES = 10  # per-test cap for the deterministic runner
+
     class _Strategy:
-        """Stands in for any strategy object/combinator at collection time.
+        """A strategy the fallback runner can draw from deterministically."""
 
-        Every attribute access and call returns another ``_Strategy``, so
-        module-level strategy definitions (``st.integers(...)``,
-        ``@st.composite``, nested ``draw`` helpers) all evaluate without
-        touching hypothesis.  Nothing is ever drawn: ``@given`` skips first.
-        """
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
 
-        def __call__(self, *args, **kwargs):
-            return self
+        def draw(self, rnd: random.Random):
+            return self._draw(rnd)
 
-        def __getattr__(self, name):
-            return self
+        def map(self, f):
+            return _Strategy(lambda rnd: f(self.draw(rnd)))
 
-    st = _Strategy()
-    HealthCheck = _Strategy()
+        def filter(self, pred, _tries: int = 100):
+            def draw(rnd):
+                for _ in range(_tries):
+                    v = self.draw(rnd)
+                    if pred(v):
+                        return v
+                raise ValueError("filter predicate never satisfied")
+            return _Strategy(draw)
 
-    def given(*args, **kwargs):
+    class _StrategyNamespace:
+        """The subset of ``hypothesis.strategies`` the suite uses."""
+
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1):
+            return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw):
+            return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(choices):
+            seq = list(choices)
+            return _Strategy(lambda rnd: seq[rnd.randrange(len(seq))])
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rnd: bool(rnd.getrandbits(1)))
+
+        @staticmethod
+        def lists(elements, min_size=0, max_size=8):
+            def draw(rnd):
+                n = rnd.randint(min_size, max_size)
+                return [elements.draw(rnd) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def composite(fn):
+            # hypothesis passes ``draw`` as the first argument of the
+            # decorated function; calling the decorated symbol returns a
+            # strategy closed over the remaining args.
+            @functools.wraps(fn)
+            def build(*args, **kwargs):
+                def draw_value(rnd):
+                    return fn(lambda s: s.draw(rnd), *args, **kwargs)
+                return _Strategy(draw_value)
+            return build
+
+    st = _StrategyNamespace()
+
+    class HealthCheck:  # noqa: D401 - placeholder enum
+        """Placeholder for ``hypothesis.HealthCheck`` attributes."""
+
+        too_slow = data_too_large = filter_too_much = None
+
+    def given(*gargs, **gkwargs):
         def decorate(fn):
-            return pytest.mark.skip(
-                reason="hypothesis not installed (property-based test)"
-            )(fn)
-
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = min(getattr(runner, "_fallback_max_examples",
+                                FALLBACK_MAX_EXAMPLES),
+                        FALLBACK_MAX_EXAMPLES)
+                for i in range(n):
+                    rnd = random.Random(0xC0FFEE + i)
+                    drawn = tuple(s.draw(rnd) for s in gargs)
+                    kdrawn = {k: s.draw(rnd) for k, s in gkwargs.items()}
+                    fn(*args, *drawn, **kwargs, **kdrawn)
+            # pytest must not see the drawn parameters as fixtures: expose a
+            # signature with the strategy-filled ones removed (hypothesis
+            # does the same; the drawn args right-fill the parameter list)
+            sig = inspect.signature(fn)
+            params = list(sig.parameters.values())
+            if gargs:
+                params = params[:-len(gargs)]
+            params = [p for p in params if p.name not in gkwargs]
+            runner.__signature__ = sig.replace(parameters=params)
+            del runner.__wrapped__
+            runner.is_fallback_property_test = True
+            return runner
         return decorate
 
-    def settings(*args, **kwargs):
+    def settings(max_examples: int | None = None, **_kw):
         def decorate(fn):
+            if max_examples is not None:
+                fn._fallback_max_examples = max_examples
             return fn
-
         return decorate
 
 

@@ -1,8 +1,23 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the real (single-CPU) device count; only launch/dryrun.py forces 512."""
+import os
+
 import jax
 import numpy as np
 import pytest
+
+
+def pytest_configure(config):
+    # CI's gating path sets REQUIRE_HYPOTHESIS=1: the property-based tests
+    # must run under the real hypothesis there, never the deterministic
+    # fallback runner (tests/_hypothesis_compat.py) — and never skip.
+    if os.environ.get("REQUIRE_HYPOTHESIS"):
+        from _hypothesis_compat import HAVE_HYPOTHESIS
+        if not HAVE_HYPOTHESIS:
+            raise pytest.UsageError(
+                "REQUIRE_HYPOTHESIS is set but the real hypothesis package "
+                "is not installed — property tests would run under the "
+                "reduced fallback strategy runner")
 
 
 @pytest.fixture(scope="session")

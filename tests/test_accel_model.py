@@ -109,3 +109,64 @@ class TestBlockMapWidth:
         pe = PEConfig(blocks=2, rows=5, cols=3, block_map="width")
         r = conv_layer_cycles(x, w, pe)
         assert r.dense == 1 * 5 * 3 * 1 * 1  # width 10 / 2 blocks = 5 groups
+
+
+class TestModelInvariances:
+    """Structural properties the calibrated model is trusted to keep."""
+
+    def test_vscnn_cycles_monotonic_in_density(self):
+        """Nested masks (rising magnitude threshold) can only remove
+        (input vec, weight col) pairs — vscnn cycles never increase as
+        weights get sparser, at any PE shape."""
+        rng = np.random.default_rng(11)
+        x = np.maximum(rng.standard_normal((14, 14, 16)), 0)
+        w = rng.standard_normal((3, 3, 16, 64))
+        for pe in (PE_4_14_3, PE_8_7_3):
+            prev = None
+            for thresh in (0.0, 0.5, 1.0, 1.5, 2.0, 3.0):
+                wt = np.where(np.abs(w) > thresh, w, 0.0)
+                r = conv_layer_cycles(x, wt, pe)
+                if prev is not None:
+                    assert r.vscnn <= prev.vscnn
+                    assert r.macs_nonzero <= prev.macs_nonzero
+                prev = r
+
+    def test_grouped_dilated_slices_sum_to_whole(self):
+        """A grouped (dilated) layer's additive counts equal the sum of
+        its per-group ungrouped slices — the rearrangement in
+        `conv_layer_cycles` is exact, not an approximation.  (The ideal
+        bounds ceil over global packing, so only the additive fields.)"""
+        rng = np.random.default_rng(12)
+        groups, cin_g, cout_g = 4, 8, 16
+        x = np.maximum(rng.standard_normal((14, 14, groups * cin_g)), 0)
+        w = rng.standard_normal((3, 3, cin_g, groups * cout_g))
+        w[np.abs(w) < 0.8] = 0
+        for dilation in (1, 2):
+            whole = conv_layer_cycles(x, w, PE_4_14_3, groups=groups,
+                                      dilation=dilation)
+            parts = [
+                conv_layer_cycles(
+                    x[:, :, g * cin_g:(g + 1) * cin_g],
+                    w[:, :, :, g * cout_g:(g + 1) * cout_g],
+                    PE_4_14_3, dilation=dilation)
+                for g in range(groups)
+            ]
+            for field in ("dense", "vscnn", "macs_nonzero", "macs_dense"):
+                assert getattr(whole, field) == \
+                    sum(getattr(p, field) for p in parts), field
+
+    def test_1x1_traffic_impl_invariant(self):
+        """A pointwise ungrouped conv has no halo and no row-tap stack:
+        both input layouts must model identical HBM bytes (and identical
+        arithmetic intensity)."""
+        from repro.core.accel_model import conv_layer_traffic
+
+        for cin, cout, stride in [(64, 128, 1), (128, 128, 2), (32, 256, 1)]:
+            halo, stack = (
+                conv_layer_traffic(
+                    (1, 14, 14, cin), kh=1, kw=1, stride=stride, cout=cout,
+                    s_steps=2, vk=32, vn=128, impl=impl)
+                for impl in ("halo", "stack"))
+            assert halo.bytes_accessed == stack.bytes_accessed, (cin, stride)
+            assert halo.arithmetic_intensity == stack.arithmetic_intensity
+            assert halo.flops == stack.flops

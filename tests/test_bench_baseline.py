@@ -45,7 +45,11 @@ class TestCompareBaseline:
                 "densities"} <= set(baseline)
         layer_rows = [r for r in baseline["rows"] if r["layer"] != "__net__"]
         assert layer_rows
-        for r in layer_rows:
+        # conv rows carry the gated deterministic metrics; FC rows are the
+        # (ungated) measured-vs-modeled ride-alongs
+        conv_rows = [r for r in layer_rows if r.get("geometry") != "fc"]
+        assert conv_rows
+        for r in conv_rows:
             assert {"cycle_speedup", "bytes_halo", "bytes_stack"} <= set(r)
 
     def test_identical_rows_pass(self, bk, baseline):
@@ -96,10 +100,26 @@ class TestCompareBaseline:
 class TestRunNetworkSmoke:
     def test_mobilenet_rows_have_dw_geometry(self, bk):
         """The generalized per-network bench runs the depthwise net and
-        tags dw layers in the geometry column (tiny config)."""
+        tags dw layers in the geometry column (tiny config; model-only —
+        the measured columns have their own test below)."""
         rows = bk.run_network("mobilenet_v1", densities=(0.5,),
-                              image_size=16, num_classes=8)
+                              image_size=16, num_classes=8, measure=False)
         dw = [r for r in rows if r.get("geometry", "").endswith("_dw")]
         assert len(dw) == 13
         net_row = next(r for r in rows if r["layer"] == "__net__")
         assert net_row["bytes_halo"] < net_row["bytes_stack"]
+
+    def test_vgg16_rows_carry_measured_vs_modeled_columns(self, bk):
+        """Every per-layer row (VGG-16 here; all registered nets in CI)
+        carries the measured-vs-modeled columns next to the modeled ones,
+        and the FC head rides along as its own row."""
+        rows = bk.run_network("vgg16", densities=(0.5,),
+                              image_size=32, num_classes=8)
+        layer_rows = [r for r in rows if r["layer"] != "__net__"]
+        for r in layer_rows:
+            assert set(bk.MEASURED_COLS) <= set(r), r["name"]
+            assert r["measured_us"] > 0
+        assert any(r.get("geometry") == "fc" for r in layer_rows)
+        # conv rows keep the gated deterministic metrics untouched
+        conv = next(r for r in layer_rows if r.get("geometry") != "fc")
+        assert {"cycle_speedup", "bytes_halo", "bytes_stack"} <= set(conv)

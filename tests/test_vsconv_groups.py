@@ -229,10 +229,10 @@ class TestGroupedCycles:
 
 
 class TestNewNetsEndToEnd:
-    @pytest.mark.parametrize("builder", ["build_resnet50",
+    @pytest.mark.parametrize("builder", ["build_resnet34", "build_resnet50",
                                          "build_mobilenet_v1"])
     def test_sparse_apply_matches_pruned_dense(self, builder, rng):
-        """Acceptance: ResNet-50 and MobileNetV1 run end-to-end sparse
+        """Acceptance: ResNet-34/50 and MobileNetV1 run end-to-end sparse
         through `SparseNet.apply` and match the BN-folded pruned dense
         oracle."""
         from repro.models import graph as G
@@ -267,7 +267,16 @@ class TestNewNetsEndToEnd:
         assert len(convs) == 1 + 16 * 3 + 4  # stem + blocks + projections
         assert convs[-1].cout == 2048
 
-    @pytest.mark.parametrize("arch", ["vscnn-resnet50",
+    def test_resnet34_basic_block_shapes(self):
+        from repro.models.graph import build_resnet34
+
+        net = build_resnet34(10)
+        convs = net.conv_layers()
+        # stem + 2 convs per basic block (3+4+6+3 blocks) + 3 projections
+        assert len(convs) == 1 + 16 * 2 + 3
+        assert convs[-1].cout == 512  # basic blocks: no 4x expansion
+
+    @pytest.mark.parametrize("arch", ["vscnn-resnet34", "vscnn-resnet50",
                                       "vscnn-mobilenet-v1"])
     def test_servable_configs(self, arch):
         from repro.configs import get_config, list_cnn_archs
