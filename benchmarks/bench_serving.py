@@ -23,6 +23,23 @@ Writes a ``BENCH_serving.json`` artifact (--out) with per-cell rows plus a
 summary checking that batched sparse throughput >= batch-1 throughput at
 equal density.
 
+Replica scaling (``--replicas R1 R2 ...``): serves the same request set
+through the data-parallel replica fleet (`launch.serve.ReplicaGroup` +
+`launch.scheduler.FleetScheduler`) at each fleet size and reports images/s
+plus scaling efficiency against the *achievable* ideal — min(replicas,
+cores), overridable with ``VSCNN_SCALING_IDEAL``.  On a forced-host CPU
+mesh (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) the replicas
+share the physical cores XLA's intra-op parallelism already saturates, so
+set ``VSCNN_SCALING_IDEAL=1`` there: the gate then bounds fleet-machinery
+*overhead* (and pins scheduling determinism), not parallel speedup — real
+replica speedup needs real devices (a TPU pod's data axis).  Scheduling
+columns (waves/steps/steals/digest) are deterministic: the fleet loop is
+synchronous and its control flow never reads the clock, so they gate
+exactly against the committed ``BENCH_serving_replicas.json`` baseline
+(``--compare-baseline``, modeled on bench_kernels).  ``--shard-fc``
+additionally cout-shards FC heads over each replica's model-axis devices
+and checks logits parity against the first fleet size.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --arch vscnn-vgg16
 (also: vscnn-resnet18 / vscnn-resnet50 / vscnn-mobilenet-v1 — any CNN
 registry arch; MobileNet exercises the depthwise tap kernels' traffic
@@ -31,7 +48,11 @@ columns.)
 from __future__ import annotations
 
 import argparse
+import hashlib
 import json
+import os
+import sys
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -131,6 +152,172 @@ def run(arch: str = "vscnn-vgg16", *, densities=(1.0, 0.5, 0.235),
     return artifact
 
 
+# --------------------------------------------------------------------------
+# Replica-fleet scaling (--replicas) + regression gate (--compare-baseline)
+# --------------------------------------------------------------------------
+
+# scheduling columns gated exactly against the committed baseline: the
+# fleet loop is synchronous Python whose control flow (placement, stealing,
+# wave/step counts) never reads the clock, and the class digest pins the
+# served outputs — wall-clock columns are reported, never gated.
+REPLICA_DET_COLS = ("waves", "steps", "backfills", "finished", "steals",
+                    "bit_identical_to_first", "class_digest")
+
+
+def _ideal_parallelism(replicas: int) -> int:
+    """Achievable ideal speedup at this fleet size: min(replicas, cores),
+    overridable with VSCNN_SCALING_IDEAL (set it to 1 on forced-host CPU
+    meshes, where XLA intra-op parallelism already saturates the cores)."""
+    cap = int(os.environ.get("VSCNN_SCALING_IDEAL", os.cpu_count() or 1))
+    return max(1, min(replicas, cap))
+
+
+def _class_digest(reqs) -> str:
+    h = hashlib.sha256()
+    for r in sorted(reqs, key=lambda r: r.rid):
+        h.update(np.int64(r.out[0]).tobytes())
+    return h.hexdigest()[:16]
+
+
+def run_replicas(arch: str = "vscnn-vgg16", *, replicas=(1, 2, 4, 8),
+                 images: int = 32, batch: int = 4, density: float = 0.5,
+                 size: int | None = None, impl: str = "jnp",
+                 shard_fc: bool = False,
+                 out_path: str | None = None) -> dict:
+    """Serve one request set at each fleet size; images/s + scaling
+    efficiency + deterministic scheduling columns per row."""
+    cfg = get_config(arch).reduce()
+    size = size or cfg.image_size
+    rows = []
+    ref_logits = None
+    base_ips = None
+    for nrep in replicas:
+        srv = CNNServer(cfg, batch=batch, density=density, impl=impl,
+                        replicas=nrep, shard_fc=shard_fc)
+        # warmup one wave per replica so every replica's executable is
+        # compiled off the clock
+        srv.serve(_requests(np.random.default_rng(0), batch * nrep, size))
+        reqs = _requests(np.random.default_rng(1), images, size)
+        t0 = time.time()
+        stats = srv.serve(reqs)
+        wall = time.time() - t0
+        logits = np.stack([r.logits
+                           for r in sorted(reqs, key=lambda r: r.rid)])
+        if ref_logits is None:
+            ref_logits = logits
+        ips = images / max(wall, 1e-9)
+        if base_ips is None:
+            base_ips = ips
+        ideal = _ideal_parallelism(nrep)
+        speedup = ips / base_ips
+        rows.append({
+            "replicas": nrep,
+            "images_per_s": round(ips, 2),
+            "wall_s": round(wall, 4),
+            "speedup_vs_first": round(speedup, 3),
+            "ideal_parallelism": ideal,
+            "scaling_efficiency": round(speedup / ideal, 3),
+            "waves": len(stats),
+            "steps": sum(s["steps"] for s in stats),
+            "backfills": sum(s["backfills"] for s in stats),
+            "finished": sum(s["finished"] for s in stats),
+            "steals": getattr(srv.scheduler, "steals", 0),
+            "replicas_used": sorted({s.get("replica", 0) for s in stats}),
+            "bit_identical_to_first": bool(np.array_equal(ref_logits,
+                                                          logits)),
+            "parity_max_abs_diff": float(np.abs(ref_logits - logits).max()),
+            "class_digest": _class_digest(reqs),
+        })
+    artifact = {
+        "bench": "cnn_serving_replicas",
+        "arch": arch,
+        "image_size": size,
+        "images": images,
+        "batch": batch,
+        "density": density,
+        "impl": impl,
+        "shard_fc": shard_fc,
+        "replicas": list(replicas),
+        "rows": rows,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=1)
+    return artifact
+
+
+def compare_replicas_baseline(rows: list[dict], baseline: dict
+                              ) -> tuple[list[str], list[str]]:
+    """Exact comparison of the deterministic scheduling columns against the
+    committed baseline; wall-clock columns are shown, not gated."""
+    cur = {r["replicas"]: r for r in rows}
+    failures: list[str] = []
+    lines = [
+        "| replicas | metric | baseline | current | status |",
+        "|---|---|---|---|---|",
+    ]
+    for b in baseline["rows"]:
+        c = cur.get(b["replicas"])
+        if c is None:
+            failures.append(f"replicas={b['replicas']}: row missing")
+            lines.append(f"| {b['replicas']} | — | — | MISSING | FAIL |")
+            continue
+        for metric in REPLICA_DET_COLS:
+            if metric not in b:
+                continue
+            bad = c.get(metric) != b[metric]
+            if bad:
+                failures.append(
+                    f"replicas={b['replicas']}: {metric} "
+                    f"{b[metric]!r} -> {c.get(metric)!r}")
+            lines.append(
+                f"| {b['replicas']} | {metric} | {b[metric]} "
+                f"| {c.get(metric)} | {'FAIL' if bad else 'ok'} |")
+        lines.append(
+            f"| {b['replicas']} | images_per_s (not gated) "
+            f"| {b.get('images_per_s')} | {c.get('images_per_s')} | — |")
+    return failures, lines
+
+
+def gate_replicas(baseline_path: str, *, min_efficiency: float | None = None,
+                  out_path: str | None = None) -> int:
+    """CI gate: re-run the replica bench at the committed baseline's
+    settings, fail on any deterministic-column drift, and (when
+    ``min_efficiency`` is set) on scaling efficiency below the bound at any
+    fleet size.  The fresh rows double as the run's trajectory artifact."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    art = run_replicas(
+        baseline["arch"], replicas=tuple(baseline["replicas"]),
+        images=baseline["images"], batch=baseline["batch"],
+        density=baseline["density"], size=baseline["image_size"],
+        impl=baseline["impl"], shard_fc=baseline.get("shard_fc", False),
+        out_path=out_path)
+    failures, lines = compare_replicas_baseline(art["rows"], baseline)
+    if min_efficiency is not None:
+        for r in art["rows"]:
+            if r["scaling_efficiency"] < min_efficiency:
+                failures.append(
+                    f"replicas={r['replicas']}: scaling efficiency "
+                    f"{r['scaling_efficiency']} < {min_efficiency} "
+                    f"(ideal parallelism {r['ideal_parallelism']})")
+    summary = "\n".join(
+        [f"## Replica-scaling gate — `{baseline_path}` "
+         f"({'FAIL' if failures else 'PASS'})", ""]
+        + lines + [""]
+        + [f"- {f}" for f in failures])
+    step_summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if step_summary:
+        with open(step_summary, "a") as f:
+            f.write(summary + "\n")
+    print(summary)
+    if failures:
+        print(f"replica gate: FAIL ({len(failures)} failure(s))")
+        return 1
+    print("replica gate: PASS")
+    return 0
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="vscnn-vgg16")
@@ -146,7 +333,45 @@ if __name__ == "__main__":
                          "interpret-mode and slow on CPU)")
     ap.add_argument("--out", default=None,
                     help="write the artifact (e.g. BENCH_serving.json)")
+    ap.add_argument("--replicas", type=int, nargs="+", default=None,
+                    help="replica-fleet scaling mode: fleet sizes to bench")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="wave width per replica (replica mode)")
+    ap.add_argument("--density", type=float, default=0.5,
+                    help="sparse density (replica mode)")
+    ap.add_argument("--shard-fc", action="store_true",
+                    help="cout-shard FC heads over each replica's model-"
+                         "axis devices (replica mode)")
+    ap.add_argument("--compare-baseline", default=None,
+                    help="replica-gate mode: re-run at this committed "
+                         "baseline's settings and fail on drift")
+    ap.add_argument("--min-efficiency", type=float, default=None,
+                    help="fail the gate below this scaling efficiency")
     args = ap.parse_args()
+    if args.compare_baseline:
+        sys.exit(gate_replicas(args.compare_baseline,
+                               min_efficiency=args.min_efficiency,
+                               out_path=args.out))
+    if args.replicas:
+        art = run_replicas(args.arch, replicas=tuple(args.replicas),
+                           images=args.images, batch=args.batch,
+                           density=args.density, size=args.size,
+                           impl=args.impl, shard_fc=args.shard_fc,
+                           out_path=args.out)
+        bad = []
+        for r in art["rows"]:
+            print(r)
+            if args.shard_fc and r["parity_max_abs_diff"] > 1e-4:
+                bad.append(f"replicas={r['replicas']}: sharded-FC logits "
+                           f"diverge ({r['parity_max_abs_diff']:g})")
+            if args.min_efficiency is not None \
+                    and r["scaling_efficiency"] < args.min_efficiency:
+                bad.append(f"replicas={r['replicas']}: efficiency "
+                           f"{r['scaling_efficiency']} < "
+                           f"{args.min_efficiency}")
+        for b in bad:
+            print("FAIL:", b)
+        sys.exit(1 if bad else 0)
     art = run(args.arch, densities=tuple(args.densities),
               batches=tuple(args.batches), images=args.images,
               size=args.size, impl=args.impl, out_path=args.out)

@@ -10,8 +10,17 @@ vector-sparse datapath, batches padded/bucketed on image shape, freed slots
 backfilled from the queue so the compiled batch shape is reused wave after
 wave.
 
+Multi-device: ``--replicas N`` serves a data-parallel replica fleet (one
+device-placed weight copy per replica, per-replica wave dispatch, work
+stealing); ``--shard-fc`` additionally cout-shards the FC heads over each
+replica's leftover devices.  On a CPU-only box fake a mesh with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Run:  PYTHONPATH=src python examples/serve_batched.py --arch rwkv6-3b
       PYTHONPATH=src python examples/serve_batched.py --cnn vscnn-vgg16
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python examples/serve_batched.py --cnn vscnn-vgg16 \\
+          --replicas 4 --shard-fc
 """
 import argparse
 
@@ -33,15 +42,17 @@ def serve_cnn(args) -> None:
                          image=rng.standard_normal((sz, sz, 3))
                                   .astype(np.float32))
             for i, sz in enumerate(sizes)]
-    srv = CNNServer(cfg, batch=args.batch)
+    srv = CNNServer(cfg, batch=args.batch, replicas=args.replicas,
+                    shard_fc=args.shard_fc)
     stats = srv.serve(reqs)
     total = sum(st["images"] for st in stats)
     run_s = sum(st["run_s"] for st in stats)
     backfills = sum(st["backfills"] for st in stats)
+    used = sorted({st.get("replica", 0) for st in stats})
     print(f"served {total} images in {len(stats)} lockstep runs "
           f"({backfills} backfills), {total / max(run_s, 1e-9):.1f} img/s "
-          f"(density {srv.density}, {srv.backend.apply.compiles} compiled "
-          f"batch shapes; CPU, reduced config)")
+          f"(density {srv.density}, replicas used {used}, "
+          f"shard_fc={args.shard_fc}; CPU, reduced config)")
     print("first request prediction:", reqs[0].out)
 
 
@@ -54,7 +65,8 @@ def serve_lm(args) -> None:
                     prompt=rng.integers(0, cfg.vocab,
                                         int(rng.integers(8, 40)),
                                         dtype=np.int32),
-                    max_new=args.tokens)
+                    max_new=args.tokens,
+                    temperature=args.temperature, top_k=args.top_k)
             for i in range(args.requests)]
     srv = Server(cfg, batch=args.batch, capacity=80)
     stats = srv.serve(reqs)
@@ -77,6 +89,15 @@ def main():
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="CNN mode: data-parallel replica fleet size")
+    ap.add_argument("--shard-fc", action="store_true",
+                    help="CNN mode: cout-shard FC heads over each "
+                         "replica's model devices")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="LM mode: sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="LM mode: top-k cutoff (0 = full vocab)")
     args = ap.parse_args()
     if args.cnn:
         serve_cnn(args)

@@ -325,7 +325,7 @@ def conv_layer_traffic(
     """
     from repro.kernels.vsconv import (  # lazy: keep accel_model numpy-first
         dw_halo_kernel_cost, dw_stack_kernel_cost, halo_kernel_cost,
-        stack_kernel_cost,
+        stack_kernel_cost, use_resident_halo,
     )
     from .sparse_ops import same_pads
 
@@ -380,16 +380,22 @@ def conv_layer_traffic(
                 * vn * itemsize
         else:
             cbg = cb // groups  # cin tiles reachable from one strip
+            resident = use_resident_halo(hop, groups)
             est = halo_kernel_cost(
                 n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp, bh=bh,
                 nb=nb, s_steps=s_steps, cb=cbg, vk=vk, vn=vn,
-                dilation=dilation,
+                dilation=dilation, resident=resident,
                 in_itemsize=itemsize, w_itemsize=itemsize,
                 out_itemsize=out_itemsize, residual_bytes=res_bytes,
             )
             hh = stride * (bh - 1) + ke_h
-            input_bytes = (n * hb * nb * min(s_steps, cbg) * hh * bwp * vk
-                           * itemsize)
+            if resident:
+                # tiny-feature-map layout: the whole-cin halo block is
+                # fetched once per (image, row-block), never per strip
+                input_bytes = n * hb * hh * bwp * cb * vk * itemsize
+            else:
+                input_bytes = (n * hb * nb * min(s_steps, cbg) * hh * bwp
+                               * vk * itemsize)
         # one jnp.pad: read the input, write the padded copy
         build = n * c * (h * w + rows * bwp) * itemsize
     elif impl == "stack":

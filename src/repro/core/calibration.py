@@ -309,10 +309,10 @@ def compiled_layer_cost(fn, *args):
     The cost comes from `utils.hlo.analyze` over the optimized HLO text —
     per-op FLOPs/bytes with while-bodies multiplied by their trip count,
     the parse `cost_analysis()` gets wrong for scan-over-strips programs.
-    FLOPs are dot/convolution FLOPs: depthwise layers compile to fused
-    elementwise multiply-adds and report ``hlo_flops == 0`` (deterministic,
-    gated as such; ``flops_model_ratio`` is 1.0 on every matmul-path layer
-    and 0.0 there).
+    FLOPs count dots/convolutions plus fused floating-point multiplies
+    (one MAC pair each), so depthwise layers — which compile to fused
+    elementwise multiply-adds — report their structural FLOPs too and
+    ``flops_model_ratio`` is 1.0 on every layer.
     """
     import jax
 

@@ -37,6 +37,14 @@ is fetched once per (strip, row-block), so input HBM traffic is ~1x the
 input plus the halo overlap — the paper's fetch-once-broadcast-everywhere
 data movement story, realized as index arithmetic.
 
+At tiny output heights (Hout < `RESIDENT_MAX_H`, e.g. ResNet layer4 on
+32px inputs) the per-strip fetch floor min(S, CB) re-reads a halo window
+that is essentially the whole padded input, so the ungrouped halo kernel
+switches to a *resident* layout (`use_resident_halo`): one block holding
+all CB cin tiles, offsets a function of the row-block only, the
+(image, row-block) grid axis outermost — the input is DMA'd exactly once
+per (image, row-block) and both tap and cin tile resolve in-kernel.
+
 **Row-tap/phase stack (`vsconv_pallas`, oracle + fallback)** materializes
 ``build_row_tap_stack``:
 
@@ -105,7 +113,8 @@ __all__ = [
     "vsconv_pallas", "vsconv_halo_pallas", "vsconv_dw_halo_pallas",
     "vsconv_dw_stack_pallas", "build_row_tap_stack", "build_halo_input",
     "stack_kernel_cost", "halo_kernel_cost", "dw_halo_kernel_cost",
-    "dw_stack_kernel_cost", "same_pads",
+    "dw_stack_kernel_cost", "same_pads", "use_resident_halo",
+    "RESIDENT_MAX_H",
 ]
 
 
@@ -138,11 +147,27 @@ def stack_kernel_cost(
     )
 
 
+# Below this output height the per-strip halo fetch floor (min(S, cb)
+# re-fetches of a window that is mostly the whole padded input) stops
+# amortizing; the halo kernel switches to the resident whole-input layout.
+RESIDENT_MAX_H = 4
+
+
+def use_resident_halo(h_out: int, groups: int) -> bool:
+    """True when the halo impl runs the tiny-feature-map resident layout:
+    the (padded) output height fits one VMEM-resident block of *all* cin
+    tiles, fetched once per (image, row-block) — grid reordered row-block
+    outermost so every strip and sparse step revisits it DMA-free.
+    Grouped convs keep the per-group streaming layout (a resident block
+    would fetch other groups' channels)."""
+    return h_out < RESIDENT_MAX_H and groups == 1
+
+
 def halo_kernel_cost(
     *, n: int, hop: int, w_out: int, kh: int, stride: int, bwp: int, bh: int,
     nb: int, s_steps: int, cb: int, vk: int, vn: int, dilation: int = 1,
-    in_itemsize: int = 4, w_itemsize: int = 4, out_itemsize: int = 4,
-    residual_bytes: int = 0,
+    resident: bool = False, in_itemsize: int = 4, w_itemsize: int = 4,
+    out_itemsize: int = 4, residual_bytes: int = 0,
 ) -> pl.CostEstimate:
     """Kernel-side cost of the halo impl.
 
@@ -154,14 +179,23 @@ def halo_kernel_cost(
     rows.  ``cb`` is the cin tiles *reachable from one strip* — Cin/vk for
     an ungrouped conv, Cin/(groups*vk) for a grouped one (a strip only ever
     touches its own group's channels, the per-group fetch accounting).
+
+    ``resident`` is the tiny-feature-map layout (`use_resident_halo`): one
+    block holding *all* ``cb`` cin tiles, offset independent of both strip
+    and sparse step, with the row-block grid axis outermost — fetched once
+    per (image, row-block), no per-strip re-fetch at all.
     """
     hb = hop // bh
     hh = stride * (bh - 1) + (kh - 1) * dilation + 1
-    fetches = min(s_steps, cb)
+    if resident:
+        input_bytes = n * hb * hh * bwp * cb * vk * in_itemsize
+    else:
+        input_bytes = n * hb * nb * min(s_steps, cb) * hh * bwp * vk \
+            * in_itemsize
     return pl.CostEstimate(
         flops=2 * n * hop * w_out * nb * s_steps * vk * vn,
         bytes_accessed=(
-            n * hb * nb * fetches * hh * bwp * vk * in_itemsize
+            input_bytes
             + nb * s_steps * vk * vn * w_itemsize
             + n * hop * w_out * nb * vn * out_itemsize
             + residual_bytes
@@ -366,6 +400,66 @@ def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
+def _halo_resident_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int,
+                          stride: int, dilation: int, bh: int, w_out: int,
+                          fuse_relu: bool, has_bias: bool, has_residual: bool,
+                          skip_zero_inputs: bool):
+    """Tiny-feature-map variant of `_halo_kernel`: the block holds ALL cb
+    cin tiles (offset independent of strip and sparse step; the row-block
+    axis is the outermost grid axis, so the whole thing is DMA'd once per
+    (image, row-block)) and the cin tile is resolved in-kernel alongside
+    the tap."""
+    it = iter(refs)
+    bias_ref = next(it) if has_bias else None
+    res_ref = next(it) if has_residual else None
+    o_ref = next(it)
+    acc_ref = next(it)
+    j = pl.program_id(1)
+    s = pl.program_id(2)
+
+    @pl.when(s == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # decode the K-tile id t = (ky*kw + kx) * cb + cin_tile — unlike the
+    # streaming kernel nothing is resolved by the index_map; tap AND cin
+    # tile are dynamic slices into the resident block
+    t = idx_ref[j, s]
+    tap = t // cb
+    ky = tap // kw
+    kx = tap % kw
+    ct = t % cb
+
+    rlen = stride * (bh - 1) + 1
+    clen = stride * (w_out - 1) + 1
+    xt = xh_ref[0, pl.ds(ky * dilation, rlen),
+                pl.ds(kx * dilation, clen), ct]  # (rlen, clen, vk)
+    if stride > 1:
+        xt = xt[::stride, ::stride]
+    xs2 = xt.reshape(bh * w_out, xt.shape[-1])
+
+    def _mac():
+        acc_ref[...] += jnp.dot(
+            xs2, w_ref[0, 0], preferred_element_type=jnp.float32
+        )
+
+    if skip_zero_inputs:
+        pl.when(jnp.any(xs2 != 0))(_mac)
+    else:
+        _mac()
+
+    @pl.when(s == pl.num_programs(2) - 1)
+    def _flush():
+        acc = acc_ref[...].reshape(o_ref.shape)
+        if has_bias:
+            acc = acc + bias_ref[0].astype(jnp.float32)
+        if has_residual:
+            acc = acc + res_ref[...].astype(jnp.float32)
+        if fuse_relu:
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -422,63 +516,89 @@ def vsconv_halo_pallas(
     out_dtype = out_dtype or xh.dtype
     has_bias = bias is not None
     has_residual = residual is not None
+    resident = use_resident_halo(h, groups)
 
-    in_specs = [
-        # one image, one overlapping halo row window, full width, one cin
-        # tile — element offsets (Unblocked): row-blocks overlap by
-        # ke_h - stride rows, and the offsets are tap-independent so
-        # consecutive sparse steps on one cin tile revisit the block
-        # without a new DMA (cin-major tile order makes that the common
-        # case).  A grouped strip's tile id is relative to its group, so
-        # the group's base tile is added here.
-        pl.BlockSpec(
-            (1, hh, bwp, 1, vk),
-            lambda j, m, s, idx: (
-                m // hb,                    # image
-                (m % hb) * stride * bh,     # halo window start row
-                0,
-                (j // spg) * cbg + idx[j, s] % cbg,  # cin tile (group base +)
-                0,
+    if resident:
+        # tiny-feature-map layout: ONE block of all cb cin tiles, offsets a
+        # function of the row-block only — with the (image, row-block) axis
+        # outermost every strip and sparse step revisits it, so the input
+        # is DMA'd exactly once per (image, row-block)
+        in_specs = [
+            pl.BlockSpec(
+                (1, hh, bwp, cb, vk),
+                lambda m, j, s, idx: (
+                    m // hb, (m % hb) * stride * bh, 0, 0, 0),
+                indexing_mode=pl.Unblocked(),
             ),
-            indexing_mode=pl.Unblocked(),
-        ),
-        pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
-    ]
-    args = [vs.idx, xh, vs.vals]
-    if has_bias:
-        in_specs.append(pl.BlockSpec((1, vn), lambda j, m, s, idx: (j, 0)))
-        args.append(bias.reshape(nb, vn))
-    if has_residual:
-        assert residual.shape == (n, h, w_out, nb * vn), (
-            residual.shape, (n, h, w_out, nb * vn))
-        in_specs.append(pl.BlockSpec(
-            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ))
-        args.append(residual)
-
-    grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(nb, n * hb, s_steps),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ),
-        scratch_shapes=[pltpu.VMEM((bh * w_out, vn), jnp.float32)],
-    )
-    return pl.pallas_call(
-        functools.partial(
+            pl.BlockSpec((1, 1, vk, vn), lambda m, j, s, idx: (j, s, 0, 0)),
+        ]
+        out_map = lambda m, j, s, idx: (m // hb, m % hb, 0, j)
+        bias_map = lambda m, j, s, idx: (j, 0)
+        grid = (n * hb, nb, s_steps)
+        kernel = functools.partial(
+            _halo_resident_kernel, cb=cb, kw=kw, stride=stride,
+            dilation=dilation, bh=bh, w_out=w_out, fuse_relu=fuse_relu,
+            has_bias=has_bias, has_residual=has_residual,
+            skip_zero_inputs=skip_zero_inputs,
+        )
+    else:
+        in_specs = [
+            # one image, one overlapping halo row window, full width, one
+            # cin tile — element offsets (Unblocked): row-blocks overlap by
+            # ke_h - stride rows, and the offsets are tap-independent so
+            # consecutive sparse steps on one cin tile revisit the block
+            # without a new DMA (cin-major tile order makes that the common
+            # case).  A grouped strip's tile id is relative to its group,
+            # so the group's base tile is added here.
+            pl.BlockSpec(
+                (1, hh, bwp, 1, vk),
+                lambda j, m, s, idx: (
+                    m // hb,                    # image
+                    (m % hb) * stride * bh,     # halo window start row
+                    0,
+                    (j // spg) * cbg + idx[j, s] % cbg,  # cin tile (+ group)
+                    0,
+                ),
+                indexing_mode=pl.Unblocked(),
+            ),
+            pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
+        ]
+        out_map = lambda j, m, s, idx: (m // hb, m % hb, 0, j)
+        bias_map = lambda j, m, s, idx: (j, 0)
+        grid = (nb, n * hb, s_steps)
+        kernel = functools.partial(
             _halo_kernel, cb=cbg, kw=kw, stride=stride, dilation=dilation,
             bh=bh, w_out=w_out,
             fuse_relu=fuse_relu, has_bias=has_bias,
             has_residual=has_residual,
             skip_zero_inputs=skip_zero_inputs,
-        ),
+        )
+    args = [vs.idx, xh, vs.vals]
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, vn), bias_map))
+        args.append(bias.reshape(nb, vn))
+    if has_residual:
+        assert residual.shape == (n, h, w_out, nb * vn), (
+            residual.shape, (n, h, w_out, nb * vn))
+        in_specs.append(pl.BlockSpec((1, bh, w_out, vn), out_map))
+        args.append(residual)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bh, w_out, vn), out_map),
+        scratch_shapes=[pltpu.VMEM((bh * w_out, vn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, h, w_out, nb * vn), out_dtype),
         interpret=interpret,
         cost_estimate=halo_kernel_cost(
             n=n, hop=h, w_out=w_out, kh=kh, stride=stride, bwp=bwp, bh=bh,
             nb=nb, s_steps=s_steps, cb=cbg, vk=vk, vn=vn, dilation=dilation,
+            resident=resident,
             in_itemsize=xh.dtype.itemsize,
             w_itemsize=vs.vals.dtype.itemsize,
             out_itemsize=jnp.dtype(out_dtype).itemsize,

@@ -42,13 +42,62 @@ the newcomer itself finishes instantly (e.g. ``max_new=1``: its admission
 emission already completes it).  A run ends when every slot is idle; a
 bucket's leftover requests that never fit an in-flight run (capacity,
 context length) get a fresh lockstep run of their own.
+
+Replica fleet
+-------------
+`FleetScheduler` scales the same protocol across N data-parallel backend
+replicas (one weight copy per replica, typically device-placed — see
+`launch.serve.ReplicaGroup`).  Admission becomes *per-replica bucket
+ladders*: each bucket's sorted queue is cut into wave-sized chunks placed
+on the least-loaded replica.  The run loop interleaves the replicas'
+lockstep runs one step per tick — per-replica wave dispatch, so a slow
+wave on replica 0 never stalls retirement or backfill on replicas
+1..N-1 — and an idle replica *steals* the tail half of the longest queue
+still waiting on any other replica.  Backends may split ``step`` into
+
+  dispatch(state, slots) -> handle
+  collect(state, handle, slots) -> (state, emissions)
+
+so one tick issues every replica's computation before blocking on any
+result (JAX async dispatch overlaps the replicas' device work); backends
+without the split fall back to the synchronous ``step``.  With one
+replica the ladder, admission order and step sequence are exactly
+`LockstepScheduler.serve`'s.
 """
 from __future__ import annotations
 
 import contextlib
 import time
 
-__all__ = ["LockstepScheduler"]
+__all__ = ["LockstepScheduler", "FleetScheduler"]
+
+
+def _deliver(be, state, slots, queue, emis):
+    """One delivery pass: append emissions, retire finished requests,
+    first-fit backfill from ``queue`` (consumed in place), chaining when a
+    backfilled request finishes on its admission emission.  Returns
+    ``(state, finished, backfills, emitted)``; ``slots`` mutates in place.
+    """
+    finished = backfills = emitted = 0
+    for j in range(len(slots)):
+        req = slots[j]
+        e = None if emis is None else emis[j]
+        while req is not None and e is not None:
+            done = be.append(req, e)
+            emitted += 1
+            e = None
+            if not done:
+                break
+            finished += 1
+            req = None
+            for qi, cand in enumerate(queue):
+                if be.can_backfill(state, cand):
+                    req = queue.pop(qi)
+                    backfills += 1
+                    state, e = be.backfill(state, j, req)
+                    break
+        slots[j] = req
+    return state, finished, backfills, emitted
 
 
 class LockstepScheduler:
@@ -93,24 +142,10 @@ class LockstepScheduler:
             start_s = time.time() - t0
             t1 = time.time()
             while True:
-                for j in range(width):
-                    req = slots[j]
-                    e = None if emis is None else emis[j]
-                    while req is not None and e is not None:
-                        done = be.append(req, e)
-                        emitted += 1
-                        e = None
-                        if not done:
-                            break
-                        finished += 1
-                        req = None
-                        for qi, cand in enumerate(queue):
-                            if be.can_backfill(state, cand):
-                                req = queue.pop(qi)
-                                backfills += 1
-                                state, e = be.backfill(state, j, req)
-                                break
-                    slots[j] = req
+                state, f, b, e = _deliver(be, state, slots, queue, emis)
+                finished += f
+                backfills += b
+                emitted += e
                 if all(s is None for s in slots):
                     break
                 state, emis = be.step(state, slots)
@@ -126,3 +161,192 @@ class LockstepScheduler:
         }
         out.update(be.finish(state) or {})
         return out
+
+
+class _ReplicaRun:
+    """One resumable in-flight lockstep run on one fleet replica.
+
+    The same lifecycle as `LockstepScheduler.run_lockstep`, unrolled so the
+    fleet loop can advance many replicas' runs one step at a time: admit +
+    start + deliver on construction, then repeated ``dispatch`` /
+    ``collect_and_deliver`` ticks until every slot is idle.
+    """
+
+    def __init__(self, replica: int, be, queue: list, width: int):
+        self.replica = replica
+        self.be = be
+        self.queue = queue
+        admitted = [queue.pop(0) for _ in range(min(width, len(queue)))]
+        self.slots: list = admitted + [None] * (width - len(admitted))
+        self.steps = self.finished = self.backfills = self.emitted = 0
+        self._handle = None
+        with self._ctx():
+            t0 = time.time()
+            self.state, emis = be.start(admitted, width)
+            self.start_s = time.time() - t0
+            self._t1 = time.time()
+            self._deliver(emis)
+
+    def _ctx(self):
+        ctx = getattr(self.be, "context", None)
+        return ctx() if ctx else contextlib.nullcontext()
+
+    def _deliver(self, emis):
+        self.state, f, b, e = _deliver(
+            self.be, self.state, self.slots, self.queue, emis)
+        self.finished += f
+        self.backfills += b
+        self.emitted += e
+
+    def drained(self) -> bool:
+        return all(s is None for s in self.slots)
+
+    def dispatch(self):
+        """Issue this replica's next step; backends with a dispatch/collect
+        split return without blocking on the result."""
+        fn = getattr(self.be, "dispatch", None)
+        with self._ctx():
+            if fn is not None:
+                self._handle = ("pending", fn(self.state, self.slots))
+            else:
+                self._handle = ("ready", self.be.step(self.state, self.slots))
+        self.steps += 1
+
+    def collect_and_deliver(self):
+        kind, h = self._handle
+        self._handle = None
+        with self._ctx():
+            if kind == "pending":
+                self.state, emis = self.be.collect(self.state, h, self.slots)
+            else:
+                self.state, emis = h
+            self._deliver(emis)
+
+    def finish(self) -> dict:
+        out = {
+            "replica": self.replica,
+            "steps": self.steps,
+            "finished": self.finished,
+            "backfills": self.backfills,
+            "emissions": self.emitted,
+            "start_s": self.start_s,
+            "run_s": time.time() - self._t1,
+        }
+        with self._ctx():
+            out.update(self.be.finish(self.state) or {})
+        return out
+
+
+class FleetScheduler:
+    """Data-parallel replica fleet: N backends, per-replica wave dispatch.
+
+    ``backends`` hold the same model behind the `LockstepScheduler` backend
+    protocol, one weight copy each (see module docstring).  ``serve``
+    returns one stats dict per lockstep run, tagged with the ``replica``
+    that ran it; ``steals`` counts queues moved between replicas since
+    construction.
+    """
+
+    def __init__(self, backends: list, *, batch: int):
+        assert backends, "FleetScheduler needs at least one backend"
+        assert batch >= 1
+        self.backends = list(backends)
+        self.batch = batch
+        self.steals = 0
+
+    @property
+    def replicas(self) -> int:
+        return len(self.backends)
+
+    def _place(self, requests: list) -> list[dict]:
+        """Per-replica bucket ladders: each bucket's sorted queue is cut
+        into wave-sized chunks, each placed on the least-loaded replica (by
+        queued request count; ties to the lowest index, so one replica
+        degenerates to `LockstepScheduler.serve`'s admission order)."""
+        be0 = self.backends[0]
+        buckets: dict = {}
+        for r in requests:
+            buckets.setdefault(be0.bucket_key(r), []).append(r)
+        ladders: list[dict] = [{} for _ in self.backends]
+        loads = [0] * len(self.backends)
+        for key, q in buckets.items():
+            q.sort(key=be0.sort_key)
+            while q:
+                chunk = q[: self.batch]
+                del q[: self.batch]
+                i = min(range(len(loads)), key=lambda j: (loads[j], j))
+                ladders[i].setdefault(key, []).extend(chunk)
+                loads[i] += len(chunk)
+        return ladders
+
+    def _claim(self, i: int, ladders: list[dict], runs: list):
+        """Next queue for replica ``i``: its own ladder first, then steal
+        the tail half (ceil, so lone stragglers move too) of the longest
+        queue still waiting on any other replica — a pending ladder queue,
+        or the *queued* remainder of an in-flight run's backfill source
+        (admitted slots never move; only requests still waiting do)."""
+        ladder = ladders[i]
+        for key in list(ladder):
+            if ladder[key]:
+                return ladder.pop(key)
+            del ladder[key]
+        victim = None
+        for j, other in enumerate(ladders):
+            if j != i:
+                for q in other.values():
+                    if q and (victim is None or len(q) > len(victim)):
+                        victim = q
+        for run in runs:
+            if run is not None and run.replica != i:
+                q = run.queue
+                if q and (victim is None or len(q) > len(victim)):
+                    victim = q
+        if victim is None:
+            return None
+        n = -(-len(victim) // 2)
+        stolen = victim[len(victim) - n:]
+        del victim[len(victim) - n:]
+        self.steals += 1
+        return stolen
+
+    def _retire(self, run, ladders: list[dict], stats: list[dict]):
+        """Record a drained run; leftover queued requests its backend
+        refused to backfill go back on the replica's ladder for a fresh run
+        (the `LockstepScheduler.serve` ``while queue`` loop, fleet-wise)."""
+        stats.append(run.finish())
+        if run.queue:
+            key = self.backends[0].bucket_key(run.queue[0])
+            ladders[run.replica].setdefault(key, []).extend(run.queue)
+            run.queue.clear()
+
+    def serve(self, requests: list) -> list[dict]:
+        """Place the queue on per-replica ladders, then drain every replica
+        with interleaved per-replica wave dispatch (one step per replica
+        per tick; each tick dispatches all replicas before collecting any,
+        so split backends overlap their device work)."""
+        ladders = self._place(requests)
+        runs: list = [None] * self.replicas
+        stats: list[dict] = []
+        while True:
+            for i in range(self.replicas):
+                while runs[i] is None:
+                    q = self._claim(i, ladders, runs)
+                    if q is None:
+                        break
+                    run = _ReplicaRun(i, self.backends[i], q, self.batch)
+                    if run.drained():  # instant finish (e.g. max_new=1 LM)
+                        self._retire(run, ladders, stats)
+                    else:
+                        runs[i] = run
+            active = [r for r in runs if r is not None]
+            if not active:
+                return stats
+            for run in active:
+                run.dispatch()
+            for i, run in enumerate(runs):
+                if run is None:
+                    continue
+                run.collect_and_deliver()
+                if run.drained():
+                    self._retire(run, ladders, stats)
+                    runs[i] = None

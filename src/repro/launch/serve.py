@@ -33,9 +33,23 @@ Both run end-to-end on CPU with reduced configs; the LM jits are the same
 step functions the decode_32k / long_500k dry-run cells lower on the
 production mesh.
 
+Multi-device serving: ``--replicas N`` serves a `ReplicaGroup` — N
+data-parallel CNN backend instances with `jax.device_put`-placed weight
+copies — behind `launch.scheduler.FleetScheduler` (per-replica wave
+dispatch, least-loaded placement, work stealing).  ``--shard-fc``
+additionally cout-shards the FC heads' strips over each replica's
+``model`` devices (`models.graph.shard_sparse`).  On CPU, force a device
+mesh with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+LM requests carry per-request sampling params (``temperature`` /
+``top_k``); temperature 0 is greedy argmax, bit-identical to the
+pre-sampling decode path.
+
 Usage (CPU examples):
   python -m repro.launch.serve --arch rwkv6-3b --requests 16 --tokens 32
   python -m repro.launch.serve --cnn vscnn-vgg16 --requests 16 --batch 8
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    python -m repro.launch.serve --cnn vscnn-vgg16 --replicas 4 --shard-fc
 """
 from __future__ import annotations
 
@@ -49,13 +63,13 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.launch.mesh import make_local_mesh
-from repro.launch.scheduler import LockstepScheduler
+from repro.launch.scheduler import FleetScheduler, LockstepScheduler
 from repro.models import transformer as tfm
 from repro.models.layers import init_params
 from repro.parallel import sharding as shd
 
 __all__ = [
-    "Request", "ImageRequest", "LMBackend", "CNNBackend",
+    "Request", "ImageRequest", "LMBackend", "CNNBackend", "ReplicaGroup",
     "Server", "CNNServer", "random_prompt_lengths", "main",
 ]
 
@@ -66,11 +80,20 @@ def _round_up(n: int, m: int) -> int:
 
 @dataclasses.dataclass
 class Request:
-    """One LM generation request."""
+    """One LM generation request.
+
+    ``temperature``/``top_k`` select per-request sampling for every token
+    this request emits: 0 temperature (the default) is greedy argmax,
+    bit-identical to a request that never set the fields; ``top_k > 0``
+    restricts sampling to the k highest logits.  Requests with different
+    sampling params share a batch — the sampler is per-slot.
+    """
 
     rid: int
     prompt: np.ndarray           # (L,) int32
     max_new: int
+    temperature: float = 0.0
+    top_k: int = 0
     out: list = dataclasses.field(default_factory=list)
 
 
@@ -89,6 +112,26 @@ class ImageRequest:
 # LM backend: prefill/decode lockstep with EOS retirement + cache-merge
 # backfill
 # --------------------------------------------------------------------------
+
+def _sample_tokens(logits, temp, top_k, keys):
+    """Per-slot temperature/top-k sampling over (B, V) logits.
+
+    Slots with ``temp == 0`` take the plain ``jnp.argmax`` branch of the
+    final select — the greedy operand is computed from the raw logits, so
+    a zero-temperature slot reproduces the greedy path bit-exactly even
+    when its batch neighbors sample.  ``top_k == 0`` means no truncation.
+    Ranking uses a stable double-argsort, so ``top_k=1`` keeps exactly the
+    argmax candidate (first max on ties, like argmax itself).
+    """
+    greedy = jnp.argmax(logits, -1).astype(jnp.int32)
+    order = jnp.argsort(-logits, axis=-1)
+    rank = jnp.argsort(order, axis=-1)          # 0 = largest logit
+    k = jnp.where(top_k > 0, top_k, logits.shape[-1])[:, None]
+    masked = jnp.where(rank < k, logits, -jnp.inf)
+    scaled = masked / jnp.maximum(temp, 1e-30)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled)
+    return jnp.where(temp > 0.0, sampled.astype(jnp.int32), greedy)
+
 
 def _positional_caches(cfg) -> bool:
     """True when every cached layer state is plain positional attention K/V.
@@ -132,7 +175,8 @@ class LMBackend:
     """
 
     def __init__(self, cfg, params, mesh, *, capacity: int,
-                 eos_id: int | None = None, len_bucket: int = 16):
+                 eos_id: int | None = None, len_bucket: int = 16,
+                 sample_seed: int = 0):
         self.cfg = cfg
         self.params = params
         self.mesh = mesh
@@ -141,6 +185,9 @@ class LMBackend:
         self.len_bucket = max(1, len_bucket)
         self.backfill_bucket = (self.len_bucket if _positional_caches(cfg)
                                 else 1)
+        self.sample_seed = sample_seed
+        self._bkey = None
+        self._sample = jax.jit(_sample_tokens)
         self._prefill = jax.jit(
             lambda p, b: tfm.prefill(p, b, cfg, capacity=capacity))
         # backfill prefill: logits at a chosen (traced) position, so the
@@ -157,6 +204,37 @@ class LMBackend:
             lambda caches, new, j: jax.tree.map(
                 lambda c, n: c.at[:, j].set(n[:, j]), caches, new),
             donate_argnums=(0,))
+
+    # -- per-slot sampling --------------------------------------------------
+
+    @staticmethod
+    def _greedy_lane() -> list:
+        return [0.0, 0, -1, 0]           # temperature, top_k, rid, count
+
+    def _base_key(self):
+        if self._bkey is None:
+            self._bkey = jax.random.PRNGKey(self.sample_seed)
+        return self._bkey
+
+    def _emit_tokens(self, state, logits, js):
+        """Next token for each slot index in ``js``; ``logits[i]`` is slot
+        ``js[i]``'s row.  All-greedy batches keep the legacy plain-argmax
+        path (bit-identical, no sampler dispatch); otherwise each sampling
+        slot draws with a key folded from (seed, rid, emission count), so
+        a request's stream is reproducible wherever its slot lands."""
+        sel = [state["samp"][j] for j in js]
+        if not any(s[0] > 0 for s in sel):
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        temps = jnp.asarray([s[0] for s in sel], jnp.float32)
+        topks = jnp.asarray([s[1] for s in sel], jnp.int32)
+        base = self._base_key()
+        keys = jnp.stack([jax.random.fold_in(
+            jax.random.fold_in(base, s[2] & 0x7FFFFFFF), s[3])
+            for s in sel])
+        toks = self._sample(logits, temps, topks, keys)
+        for s in sel:
+            s[3] += 1
+        return toks
 
     # -- scheduler protocol -------------------------------------------------
 
@@ -182,8 +260,12 @@ class LMBackend:
             toks[i, max_len - len(r.prompt):] = r.prompt
         logits, caches = self._prefill(
             self.params, {"tokens": jnp.asarray(toks)})
-        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        state = {"caches": caches, "nxt": nxt, "len": max_len, "i": 0}
+        samp = [[r.temperature, r.top_k, r.rid, 0] for r in requests]
+        samp += [self._greedy_lane() for _ in range(width - len(requests))]
+        state = {"caches": caches, "nxt": None, "len": max_len, "i": 0,
+                 "samp": samp}
+        nxt = self._emit_tokens(state, logits, range(width))[:, None]
+        state["nxt"] = nxt
         first = np.asarray(nxt[:, 0])
         emis = [int(first[j]) if j < len(requests) else None
                 for j in range(width)]
@@ -193,7 +275,10 @@ class LMBackend:
         logits, caches = self._decode(
             self.params, state["caches"], state["nxt"],
             jnp.int32(state["len"] + state["i"]))
-        nxt = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        for j, s in enumerate(slots):
+            if s is None:                # retired lane: back to greedy
+                state["samp"][j] = self._greedy_lane()
+        nxt = self._emit_tokens(state, logits, range(len(slots)))[:, None]
         state.update(caches=caches, nxt=nxt, i=state["i"] + 1)
         toks = np.asarray(nxt[:, 0])
         return state, [int(toks[j]) for j in range(len(slots))]
@@ -214,7 +299,8 @@ class LMBackend:
         toks[slot, cur - len(req.prompt):cur] = req.prompt
         logits, caches1 = self._prefill_at(
             self.params, {"tokens": jnp.asarray(toks)}, jnp.int32(cur - 1))
-        tok = int(jnp.argmax(logits[slot], -1))
+        state["samp"][slot] = [req.temperature, req.top_k, req.rid, 0]
+        tok = int(self._emit_tokens(state, logits[slot][None], [slot])[0])
         state["caches"] = self._merge(state["caches"], caches1, slot)
         state["nxt"] = state["nxt"].at[slot, 0].set(tok)
         return state, tok
@@ -299,16 +385,23 @@ class CNNBackend:
     the full width — instead of padding with zero images that burn full
     sparse-path FLOPs.  The pow2 ladder bounds the compile count per shape
     bucket at log2(width)+1 executables.
+
+    ``step`` is split into ``dispatch`` (build the padded batch and issue
+    the jitted apply — JAX async dispatch returns before the device
+    finishes) and ``collect`` (block on the result): the fleet scheduler
+    dispatches every replica's wave before collecting any, so replicas'
+    device work overlaps.  ``mesh``/``rules`` flow to `BatchedApply`'s
+    sharded compile path (sharded FC heads — see `ReplicaGroup`).
     """
 
     def __init__(self, net, params, *, sparse=None, impl: str = "auto",
                  density: float | None = None, image_size: int | None = None,
-                 pad_multiple: int = 8):
+                 pad_multiple: int = 8, mesh=None, rules=None):
         from repro.models.graph import BatchedApply
         self.image_size = image_size
         self.pad_multiple = pad_multiple
         self.apply = BatchedApply(net, params, sparse=sparse, impl=impl,
-                                  key=(density,))
+                                  key=(density,), mesh=mesh, rules=rules)
 
     # -- scheduler protocol -------------------------------------------------
 
@@ -329,7 +422,10 @@ class CNNBackend:
     def start(self, requests: list[ImageRequest], width: int):
         return {"width": width, "bucket": self.bucket_key(requests[0])}, None
 
-    def step(self, state, slots):
+    def dispatch(self, state, slots):
+        """Issue one wave: pad the occupied slots into a batch and call the
+        jitted apply.  The returned handle holds device arrays still in
+        flight (JAX async dispatch) — `collect` blocks on them."""
         hb, wb, c = state["bucket"]
         occ = [j for j, r in enumerate(slots) if r is not None]
         # shrink a partial wave to the occupied slots (pow2 ladder): zero
@@ -339,11 +435,18 @@ class CNNBackend:
         for i, j in enumerate(occ):
             h, w, _ = slots[j].image.shape
             x[i, :h, :w] = slots[j].image
-        y = np.asarray(self.apply(jnp.asarray(x)))
+        return occ, self.apply(jnp.asarray(x))
+
+    def collect(self, state, handle, slots):
+        occ, y_dev = handle
+        y = np.asarray(y_dev)
         emis = [None] * state["width"]
         for i, j in enumerate(occ):
             emis[j] = y[i]
         return state, emis
+
+    def step(self, state, slots):
+        return self.collect(state, self.dispatch(state, slots), slots)
 
     def can_backfill(self, state, req: ImageRequest) -> bool:
         return self.bucket_key(req) == state["bucket"]
@@ -360,6 +463,50 @@ class CNNBackend:
         return {"compiles": self.apply.compiles}
 
 
+class ReplicaGroup:
+    """N data-parallel CNN backend replicas with device-placed weights.
+
+    The available devices form a (data, model) grid: one device group per
+    replica along ``data`` (replicas beyond the grid wrap around, so CPU
+    tests run many replicas on one device), and — when ``shard_fc`` — a
+    per-replica ``model`` axis over which the FC heads' output strips are
+    sharded (`models.graph.shard_sparse`: each device computes its strip
+    slice of the cout-sharded `vsmm`, GSPMD all-gathers the logits in the
+    epilogue).  Each replica holds its own `jax.device_put` copy of the
+    params and sparse trees, so each compiles an executable resident on
+    its own devices and the fleet scheduler's dispatch-all-then-collect
+    tick overlaps the replicas' device work.
+    """
+
+    def __init__(self, net, params, *, sparse=None, impl: str = "auto",
+                 density: float | None = None, image_size: int | None = None,
+                 pad_multiple: int = 8, replicas: int = 1,
+                 shard_fc: bool = False, rules=None):
+        from repro.models import graph as G
+        assert replicas >= 1
+        self.replicas = replicas
+        self.shard_fc = shard_fc
+        self.rules = rules or shd.SERVE_RULES
+        ndev = jax.device_count()
+        model = max(1, ndev // replicas) if shard_fc else 1
+        data = max(1, ndev // model)
+        grid = np.array(jax.devices()[: data * model]).reshape(data, model)
+        self.meshes: list = []
+        self.backends: list[CNNBackend] = []
+        for i in range(replicas):
+            mesh = jax.sharding.Mesh(grid[i % data], ("model",))
+            with shd.use_mesh(mesh, self.rules) as ctx:
+                p_i = jax.device_put(
+                    params, shd.named_sharding((), ctx=ctx))
+                s_i = (None if sparse is None
+                       else G.shard_sparse(sparse, ctx=ctx))
+            self.meshes.append(mesh)
+            self.backends.append(CNNBackend(
+                net, p_i, sparse=s_i, impl=impl, density=density,
+                image_size=image_size, pad_multiple=pad_multiple,
+                mesh=mesh, rules=self.rules))
+
+
 class CNNServer:
     """Batched CNN serving: `SparseNet.apply` behind the lockstep scheduler.
 
@@ -367,12 +514,20 @@ class CNNServer:
     ``cfg.build()`` gives the `SparseNet`, ``cfg.weight_density`` the
     default pruning point.  ``sparse=False`` serves the dense jnp path (the
     XLA conv baseline the benchmarks compare against).
+
+    ``replicas > 1`` (or ``shard_fc``) serves a `ReplicaGroup` behind the
+    `FleetScheduler` — per-replica wave dispatch over device-placed weight
+    copies, with the FC heads optionally cout-sharded over each replica's
+    ``model`` devices.  One replica without sharding keeps the exact
+    single-backend `LockstepScheduler` path.
     """
 
     def __init__(self, cfg, *, batch: int, impl: str = "auto",
                  density: float | None = None, sparse: bool = True,
-                 seed: int = 0, pad_multiple: int = 8):
+                 seed: int = 0, pad_multiple: int = 8, replicas: int = 1,
+                 shard_fc: bool = False):
         self.cfg = cfg
+        self.replicas = replicas
         self.net = cfg.build()
         self.params = init_params(
             self.net.schema(), jax.random.PRNGKey(seed), jnp.float32)
@@ -382,11 +537,22 @@ class CNNServer:
             self.sparse, _ = self.net.sparsify(
                 self.params, self.density, vk=cfg.vk, vn=cfg.vn)
         image_size = cfg.image_size if cfg.fixed_image_size else None
-        self.backend = CNNBackend(
-            self.net, self.params, sparse=self.sparse, impl=impl,
-            density=self.density if sparse else None,
-            image_size=image_size, pad_multiple=pad_multiple)
-        self.scheduler = LockstepScheduler(self.backend, batch=batch)
+        if replicas == 1 and not shard_fc:
+            self.backend = CNNBackend(
+                self.net, self.params, sparse=self.sparse, impl=impl,
+                density=self.density if sparse else None,
+                image_size=image_size, pad_multiple=pad_multiple)
+            self.backends = [self.backend]
+            self.scheduler = LockstepScheduler(self.backend, batch=batch)
+        else:
+            self.group = ReplicaGroup(
+                self.net, self.params, sparse=self.sparse, impl=impl,
+                density=self.density if sparse else None,
+                image_size=image_size, pad_multiple=pad_multiple,
+                replicas=replicas, shard_fc=shard_fc)
+            self.backends = self.group.backends
+            self.backend = self.backends[0]
+            self.scheduler = FleetScheduler(self.backends, batch=batch)
 
     def serve(self, requests: list[ImageRequest]) -> list[dict]:
         stats = self.scheduler.serve(list(requests))
@@ -425,6 +591,15 @@ def main():
                              "pallas-stack"],
                     help="CNN sparse path: auto = halo Pallas kernels on "
                          "TPU, structural jnp elsewhere")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="CNN data-parallel replica fleet size")
+    ap.add_argument("--shard-fc", action="store_true",
+                    help="cout-shard FC heads over each replica's model-"
+                         "axis devices")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="LM sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="LM top-k truncation (0 = full vocab)")
     args = ap.parse_args()
     if (args.arch is None) == (args.cnn is None):
         ap.error("choose exactly one of --arch (LM) or --cnn")
@@ -439,14 +614,17 @@ def main():
                     rid=i,
                     image=rng.standard_normal((s, s, 3)).astype(np.float32))
                 for i in range(args.requests)]
-        srv = CNNServer(cfg, batch=args.batch, impl=args.impl)
+        srv = CNNServer(cfg, batch=args.batch, impl=args.impl,
+                        replicas=args.replicas, shard_fc=args.shard_fc)
         t0 = time.time()
         stats = srv.serve(reqs)
         wall = time.time() - t0
         tot = sum(st["images"] for st in stats)
         print(f"served {tot} images in {len(stats)} lockstep runs, "
               f"{tot / max(wall, 1e-9):.1f} img/s "
-              f"(density {srv.density}, batch {args.batch})")
+              f"(density {srv.density}, batch {args.batch}, "
+              f"replicas {args.replicas}"
+              f"{', shard-fc' if args.shard_fc else ''})")
         for st in stats:
             print("  ", {k: (round(v, 4) if isinstance(v, float) else v)
                          for k, v in st.items()})
@@ -459,7 +637,8 @@ def main():
     reqs = [
         Request(rid=i,
                 prompt=rng.integers(0, cfg.vocab, lens[i], dtype=np.int32),
-                max_new=args.tokens)
+                max_new=args.tokens, temperature=args.temperature,
+                top_k=args.top_k)
         for i in range(args.requests)
     ]
     srv = Server(cfg, batch=args.batch,

@@ -67,7 +67,7 @@ from .layers import P
 
 __all__ = [
     "Conv", "FC", "Classifier", "Pool", "ResidualAdd", "Save", "Flatten",
-    "SparseNet", "SparseConv", "SparseFC", "BatchedApply",
+    "SparseNet", "SparseConv", "SparseFC", "BatchedApply", "shard_sparse",
     "sparse_conv_from_dense", "apply_sparse_conv", "apply_sparse_fc",
     "net_schema", "net_apply", "sparsify", "collect_conv_traffic",
     "build_vgg16", "build_resnet18", "build_resnet34", "build_resnet50",
@@ -542,6 +542,14 @@ class BatchedApply:
     weights); ``key`` adds a readable variant tag (e.g. ``(density,)``) so
     one *shared* ``cache`` dict can hold several sparsified nets side by
     side.  By default each instance gets its own cache.
+
+    Sharded compile path: when ``mesh`` (+ ``rules``) is set, tracing and
+    execution run inside ``sharding.use_mesh(mesh, rules)`` and the cache
+    key includes the mesh, so a weight tree whose leaves carry
+    `NamedSharding`s (see `shard_sparse`) compiles to a GSPMD-partitioned
+    executable — e.g. an FC head cout-sharded over the ``model`` axis runs
+    each device's strip slice locally and all-gathers the logits in the
+    epilogue.
     """
 
     net: SparseNet
@@ -550,12 +558,14 @@ class BatchedApply:
     impl: str = "auto"
     key: tuple = ()
     cache: dict = dataclasses.field(default_factory=dict)
+    mesh: object = None
+    rules: object = None
 
     def cache_key(self, shape) -> tuple:
         # id() is stable and unique here: self (and every cached closure)
         # keeps the weight trees alive
         return (self.net.name, id(self.params), id(self.sparse), self.key,
-                self.impl, tuple(shape))
+                self.impl, id(self.mesh), tuple(shape))
 
     def __call__(self, x):
         k = self.cache_key(x.shape)
@@ -563,8 +573,16 @@ class BatchedApply:
         if fn is None:
             net, params = self.net, self.params
             sparse, impl = self.sparse, self.impl
-            fn = jax.jit(lambda xx: net_apply(net, params, xx, sparse=sparse,
-                                              impl=impl))
+            jitted = jax.jit(lambda xx: net_apply(net, params, xx,
+                                                  sparse=sparse, impl=impl))
+            if self.mesh is not None:
+                from repro.parallel import sharding as shd
+                mesh, rules = self.mesh, self.rules
+                def fn(xx, _j=jitted):
+                    with shd.use_mesh(mesh, rules or shd.SERVE_RULES):
+                        return _j(xx)
+            else:
+                fn = jitted
             self.cache[k] = fn
         return fn(x)
 
@@ -572,6 +590,52 @@ class BatchedApply:
     def compiles(self) -> int:
         """Distinct compiled entries in the cache (all variants)."""
         return len(self.cache)
+
+
+def shard_sparse(sparse: dict, *, ctx=None) -> dict:
+    """Device-place a `sparsify` tree under the active mesh context.
+
+    FC heads shard over their output strips: `VectorSparse.vals`
+    (NB, S, vk, vn) and ``idx`` (NB, S) split on the leading NB axis — the
+    cout strip axis, the paper's per-strip PE-block parallelism — via the
+    ``ff`` logical rule (``model`` mesh axis by default); the bias stays
+    replicated (it is sliced per-strip inside the epilogue by GSPMD).
+    Conv entries follow the ``conv`` rule, replicated by default (serving
+    shards the cheap wide FC heads; convs scale across replicas instead) —
+    map ``conv`` to a mesh axis to cout-shard them the same way.  Strip
+    counts that don't divide the mesh axis demote to replicated
+    (`sharding.spec_for`), so odd heads degrade gracefully.
+    """
+    from repro.parallel import sharding as shd
+
+    ctx = ctx or shd.current()
+    assert ctx is not None, "shard_sparse requires an active use_mesh()"
+
+    def place(arr, axes):
+        s = shd.named_sharding(axes, shape=arr.shape, ctx=ctx)
+        return jax.device_put(arr, s)
+
+    def place_vs(vs: VectorSparse, axis: str) -> VectorSparse:
+        return VectorSparse(
+            vals=place(vs.vals, (axis, None, None, None)),
+            idx=place(vs.idx, (axis, None)),
+            shape=vs.shape)
+
+    out = {}
+    for name, entry in sparse.items():
+        if isinstance(entry, SparseFC):
+            out[name] = dataclasses.replace(
+                entry, vs=place_vs(entry.vs, "ff"),
+                bias=None if entry.bias is None
+                else place(entry.bias, (None,)))
+        elif isinstance(entry, SparseConv):
+            out[name] = dataclasses.replace(
+                entry, vs=place_vs(entry.vs, "conv"),
+                bias=None if entry.bias is None
+                else place(entry.bias, (None,)))
+        else:  # bare VectorSparse entry (FC-style)
+            out[name] = place_vs(entry, "ff")
+    return out
 
 
 def collect_conv_traffic(net: SparseNet, params, x):

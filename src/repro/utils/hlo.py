@@ -7,7 +7,9 @@ from `compiled.as_text()`:
 
   * per-computation recursive costing, while bodies multiplied by their trip
     count (extracted from the loop-condition's compare-against-constant),
-  * FLOPs from dot/convolution shapes (2 * result * contraction),
+  * FLOPs from dot/convolution shapes (2 * result * contraction) plus
+    fused floating-point multiplies counted as multiply-add pairs (the
+    depthwise path's elementwise MACs),
   * HBM bytes with fusion-boundary semantics (a fusion touches its params +
     result; internals stay on-chip) — the roofline-correct convention,
   * collective wire bytes per device with ring-algorithm factors and
@@ -92,6 +94,14 @@ def _shape_dims(type_str: str):
         return []
     dims = m.group(2)
     return [int(d) for d in dims.split(",")] if dims else []
+
+
+_FLOAT_DTYPES = {"f16", "bf16", "f32", "f64", "f8e4m3fn", "f8e5m2"}
+
+
+def _is_float(type_str: str) -> bool:
+    m = _SHAPE_RE.search(type_str)
+    return bool(m) and m.group(1) in _FLOAT_DTYPES
 
 
 @dataclasses.dataclass
@@ -384,10 +394,20 @@ def _cost_of(comp: Computation, comps: dict, memo: dict,
         elif op in _SKIP_MEM:
             continue
         else:
-            # generic elementwise-ish op outside a fusion: touches operands+result
             if fusion_ctx:
-                # inside fusion: only count compute-dense ops (none here)
+                # inside a fusion, a floating-point multiply is the only
+                # elementwise op that counts: one fused multiply-add pair
+                # (2 FLOPs per result element) — the depthwise structural
+                # path's MACs lower to exactly these, never to dots.  Adds,
+                # maxima, selects etc. stay free so epilogue fusions (bias +
+                # ReLU) don't perturb the matmul-path FLOP anchor.
+                if op == "multiply" and _is_float(ins.type_str):
+                    total = total + HloCost(
+                        flops=2.0 * math.prod(_shape_dims(ins.type_str)
+                                              or [1]))
                 continue
+            # generic elementwise-ish op outside a fusion: touches
+            # operands+result
             opbytes = sum(
                 table[o].result_bytes for o in _operand_names(ins.rest) if o in table
             )
@@ -457,10 +477,10 @@ def analyze(hlo_text: str, entry: str | None = None) -> HloCost:
 def analyze_compiled(compiled) -> HloCost:
     """`analyze` over a jax `Compiled` object's optimized HLO text.
 
-    FLOPs come from dot/convolution shapes only: a program whose math is
-    fused elementwise multiply-adds (e.g. the depthwise conv path) reports
-    zero FLOPs — still deterministic, so calibration gates pin the value,
-    but don't divide by it.
+    FLOPs come from dot/convolution shapes plus fused floating-point
+    multiplies (each counted as a multiply-add pair): a program whose math
+    lowers to fused elementwise MACs — the depthwise conv path — reports
+    its structural FLOPs too, so `flops_model_ratio` holds on every layer.
     """
     return analyze(compiled.as_text())
 

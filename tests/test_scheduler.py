@@ -1,13 +1,17 @@
 """Lockstep scheduler unit tests (no jax): bucketing, retirement order,
-backfill (including instant-finish chaining), can_backfill refusal.
+backfill (including instant-finish chaining), can_backfill refusal — plus
+the replica fleet: per-replica wave dispatch (a stalled replica never
+blocks the others' retirement), least-loaded placement, work stealing,
+and N-replica output parity with the single-replica scheduler.
 
 A scripted pure-python backend stands in for the model: each request
 carries the emission stream its slot will produce, so slot lifecycle logic
-is pinned independently of prefill/decode numerics.
+is pinned independently of prefill/decode numerics.  Fleet backends share
+an event log, so cross-replica interleaving is asserted directly.
 """
 import dataclasses
 
-from repro.launch.scheduler import LockstepScheduler
+from repro.launch.scheduler import FleetScheduler, LockstepScheduler
 
 
 @dataclasses.dataclass
@@ -148,3 +152,119 @@ class TestLockstep:
         assert stats[0]["backfills"] == 1
         assert be.started == [[0, 1], [2]]
         assert len(reqs[3].out) == 2     # rid 3 rode rid 0's slot
+
+
+class FleetScript(ScriptBackend):
+    """One fleet replica's scripted backend; all replicas share ``events``
+    so cross-replica ordering is observable."""
+
+    def __init__(self, replica, events, **kw):
+        super().__init__(**kw)
+        self.replica = replica
+        self.events = events
+
+    def start(self, reqs, width):
+        self.events.append(("start", self.replica, [r.rid for r in reqs]))
+        return super().start(reqs, width)
+
+    def step(self, state, slots):
+        self.events.append(("step", self.replica))
+        return super().step(state, slots)
+
+    def backfill(self, state, slot, req):
+        self.events.append(("backfill", self.replica, req.rid))
+        return super().backfill(state, slot, req)
+
+
+def _fleet(n, batch, **kw):
+    events = []
+    bes = [FleetScript(i, events, **kw) for i in range(n)]
+    return FleetScheduler(bes, batch=batch), bes, events
+
+
+class TestFleet:
+    def test_stalled_replica_never_blocks_retirement_and_steal(self):
+        """The headline fleet property: replica 0 grinds a 10-step wave
+        while replica 1 retires its own waves AND steals replica 0's
+        queued straggler — nothing waits on the slow wave."""
+        sched, bes, events = _fleet(2, 1)
+        a = Req(0, [9] * 10, 10)                 # 10 emissions: 9 steps
+        b, c, d = (Req(i, [i], 1) for i in (1, 2, 3))
+        # chunk placement (batch=1, least-loaded): a->r0, b->r1, c->r0, d->r1
+        stats = sched.serve([a, b, c, d])
+        assert len(a.out) == 10
+        assert all(len(r.out) == 1 for r in (b, c, d))
+        # c was queued behind a on replica 0 and moved to idle replica 1
+        assert sched.steals == 1
+        assert ("start", 1, [2]) in events
+        # every replica-1 event precedes replica 0's first step: the slow
+        # wave never gated the fast replica's retirement
+        first_r0_step = events.index(("step", 0))
+        assert all(e[1] == 0 for e in events[first_r0_step:])
+        # retirement order: both replica-1 runs retire before replica 0's
+        assert [s["replica"] for s in stats] == [1, 1, 0]
+        assert stats[-1]["steps"] == 9 and stats[-1]["finished"] == 1
+
+    def test_per_replica_wave_dispatch_interleaves(self):
+        """Two busy replicas advance one step per tick each — interleaved,
+        not drained sequentially."""
+        sched, bes, events = _fleet(2, 2)
+        reqs = [Req(i, [i] * 4, 4) for i in range(4)]
+        sched.serve(reqs)
+        steps = [e[1] for e in events if e[0] == "step"]
+        assert steps == [0, 1, 0, 1, 0, 1]       # 3 ticks, both replicas
+        assert all(len(r.out) == 4 for r in reqs)
+
+    def test_least_loaded_chunk_placement(self):
+        """Wave-sized chunks land on the least-loaded replica, ties to the
+        lowest index."""
+        sched, bes, events = _fleet(3, 2)
+        reqs = [Req(i, [i] * 2, 2) for i in range(10)]   # 5 chunks of 2
+        sched.serve(reqs)
+        waves = {e[1]: e[2] for e in events if e[0] == "start"}
+        assert waves[0] == [0, 1] and waves[1] == [2, 3] and \
+            waves[2] == [4, 5]
+        # chunks 4 and 5 backfill replicas 0 and 1's runs (same bucket)
+        assert all(len(r.out) == 2 for r in reqs)
+        assert sched.steals == 0
+
+    def test_fleet_of_one_matches_lockstep(self):
+        """One replica reproduces `LockstepScheduler.serve` exactly:
+        admission waves, stats counters, and emissions."""
+        mk = lambda: [Req(0, [1] * 8, 2), Req(1, [2] * 8, 6),
+                      Req(2, [3] * 8, 3)]
+        solo_be = ScriptBackend()
+        solo_reqs = mk()
+        solo = LockstepScheduler(solo_be, batch=2).serve(solo_reqs)
+        sched, bes, _ = _fleet(1, 2)
+        fleet_reqs = mk()
+        fleet = sched.serve(fleet_reqs)
+        assert [r.out for r in fleet_reqs] == [r.out for r in solo_reqs]
+        assert bes[0].started == solo_be.started
+        keys = ("steps", "finished", "backfills", "emissions")
+        assert [{k: s[k] for k in keys} for s in fleet] == \
+            [{k: s[k] for k in keys} for s in solo]
+
+    def test_n_replica_outputs_match_single(self):
+        """Every request's emission stream is identical however many
+        replicas serve the queue (the fleet analogue of the CNN
+        bit-identity gate, scripted)."""
+        def serve(n):
+            reqs = [Req(i, [10 + i] * 6, 1 + i % 4) for i in range(12)]
+            sched, _, _ = _fleet(n, 2)
+            sched.serve(reqs)
+            return [r.out for r in reqs]
+        ref = serve(1)
+        for n in (2, 3, 5):
+            assert serve(n) == ref
+
+    def test_leftover_queue_gets_fresh_run(self):
+        """Requests a backend refuses to backfill are not lost on the
+        fleet path: they get a fresh run on their replica."""
+        sched, bes, events = _fleet(1, 2,
+                                    admit=lambda req: req.rid != 2)
+        reqs = [Req(0, [1] * 4, 2), Req(1, [2] * 4, 2), Req(2, [3] * 4, 2)]
+        stats = sched.serve(reqs)
+        assert [len(r.out) for r in reqs] == [2, 2, 2]
+        assert len(stats) == 2
+        assert bes[0].started == [[0, 1], [2]]

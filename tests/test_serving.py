@@ -256,3 +256,149 @@ class TestCNNServing:
             jnp.asarray(np.stack([r.image for r in reqs]))))
         np.testing.assert_allclose(
             np.stack([r.logits for r in reqs]), ref, rtol=1e-5, atol=1e-5)
+
+
+def _cnn_queue(n, seed=1, size=32):
+    rng = np.random.default_rng(seed)
+    return [ImageRequest(rid=i,
+                         image=rng.standard_normal((size, size, 3))
+                                  .astype(np.float32))
+            for i in range(n)]
+
+
+class TestCNNFleet:
+    """Replica fleet on a single device: data-parallel replicas are weight
+    copies, so the bar is *bit-identical* logits to the legacy
+    single-backend path — not allclose."""
+
+    def test_three_replicas_bit_identical_to_one(self):
+        cfg = get_config("vscnn-vgg16").reduce()
+        solo = CNNServer(cfg, batch=2, seed=0)
+        ref_reqs = _cnn_queue(10)
+        solo.serve(ref_reqs)
+        fleet = CNNServer(cfg, batch=2, seed=0, replicas=3)
+        reqs = _cnn_queue(10)
+        stats = fleet.serve(reqs)
+        # every replica actually served work
+        assert {s["replica"] for s in stats} == {0, 1, 2}
+        for r, ref in zip(reqs, ref_reqs):
+            np.testing.assert_array_equal(np.asarray(r.logits),
+                                          np.asarray(ref.logits))
+            assert r.out == ref.out
+
+    def test_shard_fc_single_device_parity(self):
+        """shard_fc on one device degenerates to a replicated mesh; the
+        sharded compile path must still match the legacy path bit-exactly."""
+        cfg = get_config("vscnn-vgg16").reduce()
+        solo = CNNServer(cfg, batch=2, seed=0)
+        ref_reqs = _cnn_queue(4, seed=6)
+        solo.serve(ref_reqs)
+        srv = CNNServer(cfg, batch=2, seed=0, shard_fc=True)
+        assert len(srv.group.meshes) == 1
+        reqs = _cnn_queue(4, seed=6)
+        srv.serve(reqs)
+        for r, ref in zip(reqs, ref_reqs):
+            np.testing.assert_array_equal(np.asarray(r.logits),
+                                          np.asarray(ref.logits))
+
+    def test_fleet_multi_device_subprocess(self):
+        """8 forced host devices: 4 replicas land on 4 distinct devices,
+        shard_fc cout-shards the big FC heads over each replica's model
+        axis, and logits stay bit-identical to the 1-replica serve."""
+        import os
+        import subprocess
+        import sys
+        prog = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, numpy as np
+from repro.configs import get_config
+from repro.launch.serve import CNNServer, ImageRequest
+
+assert jax.device_count() == 8
+cfg = get_config("vscnn-vgg16").reduce()
+def queue():
+    rng = np.random.default_rng(1)
+    return [ImageRequest(rid=i,
+                         image=rng.standard_normal((32, 32, 3))
+                                  .astype(np.float32))
+            for i in range(8)]
+solo = CNNServer(cfg, batch=2, seed=0)
+ref = queue()
+solo.serve(ref)
+srv = CNNServer(cfg, batch=2, seed=0, replicas=4, shard_fc=True)
+devs = {m.devices.flat[0] for m in srv.group.meshes}
+assert len(devs) == 4, devs                     # distinct replica devices
+shards = {e.vs.vals.sharding.spec for e in srv.backend.apply.sparse.values()
+          if type(e).__name__ == "SparseFC" and e.vs.vals.shape[0] > 1}
+assert jax.sharding.PartitionSpec("model", None, None, None) in shards
+reqs = queue()
+stats = srv.serve(reqs)
+assert {s["replica"] for s in stats} == {0, 1, 2, 3}
+for r, x in zip(reqs, ref):
+    np.testing.assert_array_equal(np.asarray(r.logits),
+                                  np.asarray(x.logits))
+print("FLEET-OK")
+"""
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        r = subprocess.run(
+            [sys.executable, "-c", prog], capture_output=True, text=True,
+            timeout=600, cwd=root,
+            env={**os.environ, "PYTHONPATH": os.path.join(root, "src")})
+        assert r.returncode == 0, r.stderr[-4000:]
+        assert "FLEET-OK" in r.stdout
+
+
+class TestLMSampling:
+    """Per-request temperature / top-k through the LM backend."""
+
+    def _sreqs(self, cfg, specs, seed=11):
+        rng = np.random.default_rng(seed)
+        return [Request(rid=100 + i,
+                        prompt=rng.integers(0, cfg.vocab, 6, dtype=np.int32),
+                        max_new=mn, temperature=t, top_k=k)
+                for i, (mn, t, k) in enumerate(specs)]
+
+    def test_temperature_zero_is_greedy_bit_exact(self, lm_server):
+        """temp=0 requests take the exact legacy greedy path — same tokens,
+        whether top_k is set or not."""
+        cfg = lm_server.cfg
+        ref = self._sreqs(cfg, [(5, 0.0, 0), (5, 0.0, 0)])
+        lm_server.serve(ref)
+        got = self._sreqs(cfg, [(5, 0.0, 7), (5, 0.0, 3)])
+        lm_server.serve(got)
+        assert [r.out for r in got] == [r.out for r in ref]
+
+    def test_top_k_one_matches_greedy(self, lm_server):
+        """top_k=1 leaves only the argmax in the distribution, so any
+        temperature still reproduces greedy decoding."""
+        cfg = lm_server.cfg
+        ref = self._sreqs(cfg, [(5, 0.0, 0)])
+        lm_server.serve(ref)
+        got = self._sreqs(cfg, [(5, 1.5, 1)])
+        lm_server.serve(got)
+        assert got[0].out == ref[0].out
+
+    def test_sampling_reproducible_and_not_greedy(self, lm_server):
+        """Sampled streams are keyed by (seed, rid, step): the same request
+        re-served emits the same tokens, and a hot temperature actually
+        leaves the greedy path."""
+        cfg = lm_server.cfg
+        a = self._sreqs(cfg, [(8, 5.0, 0)])
+        lm_server.serve(a)
+        b = self._sreqs(cfg, [(8, 5.0, 0)])
+        lm_server.serve(b)
+        assert a[0].out == b[0].out
+        greedy = self._sreqs(cfg, [(8, 0.0, 0)])
+        lm_server.serve(greedy)
+        assert a[0].out != greedy[0].out
+
+    def test_mixed_batch_keeps_greedy_lane_bit_exact(self, lm_server):
+        """A sampled neighbour in the batch must not perturb a greedy
+        lane's tokens (the `where(temp > 0, ...)` lane isolation)."""
+        cfg = lm_server.cfg
+        ref = self._sreqs(cfg, [(6, 0.0, 0), (6, 0.0, 0)])
+        lm_server.serve(ref)
+        mixed = self._sreqs(cfg, [(6, 0.0, 0), (6, 2.0, 20)])
+        lm_server.serve(mixed)
+        assert mixed[0].out == ref[0].out

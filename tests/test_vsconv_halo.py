@@ -106,13 +106,13 @@ class TestHaloParity:
 class TestTinyFeatureMap:
     """The degenerate Hout < 4 case (ResNet layer4 on 32px inputs).
 
-    Parity must hold — the halo window just degenerates to (almost) the
-    whole padded input per row-block — but the halo layout over-fetches its
-    kh-row halo relative to the stack path there: with bh == Hout rows per
-    block, the halo overlap stops amortizing.  The parity tests are the
-    contract; the traffic assertions are xfail documentation of the known
-    overfetch until a multi-row-block halo (larger bh at small Hout) lands
-    (ROADMAP follow-up).
+    The ungrouped halo kernel switches to the resident whole-input layout
+    there (`use_resident_halo`): one block of all cin tiles, fetched once
+    per (image, row-block) with the row-block grid axis outermost, tap AND
+    cin tile resolved in-kernel.  Parity must hold through the layout
+    switch, and the traffic model's resident accounting must put the halo
+    path back below the stack path — the two assertions that were strict
+    xfail while the per-strip streaming layout over-fetched here.
     """
 
     @pytest.mark.parametrize("h,stride", [(1, 1), (2, 1), (2, 2), (4, 2),
@@ -128,10 +128,20 @@ class TestTinyFeatureMap:
             assert out.shape == ref.shape
             assert _rel(out, ref) < 1e-5, impl
 
-    @pytest.mark.xfail(
-        reason="known tiny-feature-map halo overfetch: at Hout <= 2 the "
-               "kh-row halo no longer amortizes over the row block "
-               "(ROADMAP: multi-row-block halo)", strict=True)
+    def test_resident_parity_with_epilogue(self, rng):
+        """The resident kernel's fused bias+residual+ReLU epilogue against
+        the reference at Hout == 2."""
+        c, co, vk, vn = 32, 64, 16, 64
+        vs = _sparse_conv_weight(rng, 3, 3, c, co, vk, vn, 0.5)
+        x = jnp.asarray(
+            np.maximum(rng.standard_normal((2, 4, 4, c)), 0), jnp.float32)
+        b = jnp.asarray(rng.standard_normal((co,)), jnp.float32)
+        res = jnp.asarray(rng.standard_normal((2, 2, 2, co)), jnp.float32)
+        kw_args = dict(stride=2, bias=b, residual=res, fuse_relu=True)
+        halo = vsconv(x, vs, impl="halo", **kw_args)
+        ref = vsconv_ref(x, vs, **kw_args)
+        assert _rel(halo, ref) < 1e-5
+
     def test_halo_kernel_input_bytes_below_stack_hout2(self):
         # ResNet-18 layer3/4-class geometry at 32px: 4x4 input, 3x3/s2
         tr = {impl: conv_layer_traffic(
@@ -140,16 +150,18 @@ class TestTinyFeatureMap:
               for impl in ("halo", "stack")}
         assert tr["halo"].input_bytes < tr["stack"].input_bytes
 
-    @pytest.mark.xfail(
-        reason="known tiny-feature-map halo overfetch: at Hout == 1 even "
-               "total modeled bytes (build pass included) lose to the "
-               "stack (ROADMAP: multi-row-block halo)", strict=True)
     def test_halo_total_bytes_below_stack_hout1(self):
         tr = {impl: conv_layer_traffic(
                   (1, 1, 1, 512), kh=3, kw=3, stride=1, cout=512,
                   s_steps=36, vk=32, vn=128, impl=impl)
               for impl in ("halo", "stack")}
         assert tr["halo"].bytes_accessed < tr["stack"].bytes_accessed
+
+    def test_resident_threshold_and_grouped_exclusion(self):
+        from repro.kernels.vsconv import use_resident_halo
+        assert use_resident_halo(2, 1) and use_resident_halo(3, 1)
+        assert not use_resident_halo(4, 1)   # image-64 nets stay streaming
+        assert not use_resident_halo(2, 4)   # grouped: per-group fetch wins
 
 
 class TestCinMajorOrder:
