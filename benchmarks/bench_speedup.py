@@ -13,9 +13,6 @@ fine-grained zeros.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.configs.vscnn_vgg16 import CONFIG
 from repro.core.accel_model import PEConfig, aggregate, conv_layer_cycles
 from .bench_density import vgg_traffic
 

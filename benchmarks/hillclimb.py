@@ -1,103 +1,134 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-"""§Perf hillclimb driver: re-lower the three selected cells under config
-deltas (hypothesis -> change -> re-analyse), appending tagged rows to
-benchmarks/results/hillclimb.json.  Each row carries the full roofline terms
-so EXPERIMENTS.md §Perf can show before/after per iteration.
+"""Per-layer density hillclimb against a modeled cycle/byte budget.
 
-Cells (selection rationale in EXPERIMENTS.md):
-  A nemotron-4-340b x train_4k  — paper-representative (squared-ReLU input
-    sparsity) + biggest absolute step time
-  B kimi-k2-1t     x decode_32k — most collective-bound cell
-  C granite-moe-3b x train_4k   — worst roofline fraction (large cells)
+The ROADMAP "accuracy-vs-density frontier" item needs a search loop that
+assigns each conv layer its own density instead of one uniform knob:
+prune the layers whose modeled cost drops fastest per unit of weight
+kept, until the whole net fits a budget.  This driver is that loop over
+the *static* cost model (`core.accel_model.conv_layer_traffic` at the
+geometry `repro.analysis.ir.check_net` derives) — no weights and no
+execution, so it runs anywhere CI runs.  The accuracy term is a
+placeholder (`kept_weight_fraction`) until the pretrained-checkpoint
+importer lands; swap `score_fn` for a real eval then.
+
+Usage:
+  python benchmarks/hillclimb.py --net resnet18 --budget 0.5 \
+      --out benchmarks/results/hillclimb.json
 """
+from __future__ import annotations
+
+import argparse
+import dataclasses
 import json
-import traceback
+import pathlib
+import sys
 
-from repro.launch.dryrun import run_cell
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-MATRIX = [
-    # (arch, shape, tag, overrides)
-    ("nemotron-4-340b", "train_4k", "A0_baseline", {"microbatches": 1}),
-    ("nemotron-4-340b", "train_4k", "A1_mb64", {"microbatches": 64}),
-    ("nemotron-4-340b", "train_4k", "A2_mb64_bf16flow",
-     {"microbatches": 64, "bf16_flow": True}),
-    ("nemotron-4-340b", "train_4k", "A3_mb64_bf16_fremat",
-     {"microbatches": 64, "bf16_flow": True, "flash_remat": True}),
-    ("nemotron-4-340b", "train_4k", "A4_mb16_bf16_fremat",
-     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
-    ("kimi-k2-1t-a32b", "decode_32k", "B0_baseline", {}),
-    ("kimi-k2-1t-a32b", "decode_32k", "B1_resident",
-     {"moe_dispatch": "resident"}),
-    ("kimi-k2-1t-a32b", "decode_32k", "B2_resident_bf16",
-     {"moe_dispatch": "resident", "bf16_flow": True}),
-    ("granite-moe-3b-a800m", "train_4k", "C0_baseline", {"microbatches": 1}),
-    ("granite-moe-3b-a800m", "train_4k", "C1_bf16flow",
-     {"microbatches": 1, "bf16_flow": True}),
-    ("granite-moe-3b-a800m", "train_4k", "C2_bf16_fremat",
-     {"microbatches": 1, "bf16_flow": True, "flash_remat": True}),
-    ("granite-moe-3b-a800m", "train_4k", "C3_bf16_fremat_mb4",
-     {"microbatches": 4, "bf16_flow": True, "flash_remat": True}),
-    # iteration 2: pin projection-output sharding (gather AFTER the dot);
-    # fixes GSPMD computing K/V projections replicated over the model axis
-    ("granite-moe-3b-a800m", "train_4k", "C4_projpin_bf16",
-     {"microbatches": 1, "bf16_flow": True}),
-    ("granite-moe-3b-a800m", "train_4k", "C5_projpin_bf16_fremat_mb4",
-     {"microbatches": 4, "bf16_flow": True, "flash_remat": True}),
-    ("nemotron-4-340b", "train_4k", "A5_projpin_mb16_bf16_fremat",
-     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
-    ("nemotron-4-340b", "train_4k", "A6_projpin_mb32_bf16_fremat",
-     {"microbatches": 32, "bf16_flow": True, "flash_remat": True}),
-    # iteration 3: cast-boundary fixes (bf16 cotangents before TP psums)
-    ("granite-moe-3b-a800m", "train_4k", "C6_castfix_bf16_fremat",
-     {"microbatches": 1, "bf16_flow": True, "flash_remat": True}),
-    ("nemotron-4-340b", "train_4k", "A7_castfix_mb16_bf16_fremat",
-     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
-    ("nemotron-4-340b", "train_4k", "A8_castfix_mb16_bf16acc",
-     {"microbatches": 16, "bf16_flow": True, "flash_remat": True,
-      "grad_accum_dtype": "bfloat16"}),
-    ("kimi-k2-1t-a32b", "decode_32k", "B3_resident_castfix",
-     {"moe_dispatch": "resident", "bf16_flow": True}),
-    # iteration 4: grad-accumulator sharding pin + Megatron-SP residuals
-    ("nemotron-4-340b", "train_4k", "A9_gpin_mb16_bf16_fremat",
-     {"microbatches": 16, "bf16_flow": True, "flash_remat": True}),
-    ("nemotron-4-340b", "train_4k", "A10_gpin_seqres_mb16",
-     {"microbatches": 16, "bf16_flow": True, "flash_remat": True,
-      "seq_shard_residual": True}),
-    ("granite-moe-3b-a800m", "train_4k", "C7_seqres_bf16_fremat",
-     {"microbatches": 1, "bf16_flow": True, "flash_remat": True,
-      "seq_shard_residual": True}),
-    # paper-representative: vector-sparse FFN in the serve path (23.5%)
-    ("nemotron-4-340b", "prefill_32k", "P0_dense_prefill", {}),
-    ("nemotron-4-340b", "prefill_32k", "P1_sparse_ffn_prefill",
-     {"use_sparse_ffn": True}),
-    ("nemotron-4-340b", "prefill_32k", "P2_sparse_ffn_bf16",
-     {"use_sparse_ffn": True, "bf16_flow": True}),
-]
+from repro.analysis.ir import ConvSite, check_net          # noqa: E402
+from repro.core.accel_model import conv_layer_traffic      # noqa: E402
+from repro.models.graph import SparseNet, strip_steps      # noqa: E402
+
+DENSITY_STEPS = (1.0, 0.75, 0.5, 0.375, 0.25, 0.125)
 
 
-def main():
-    out = "benchmarks/results/hillclimb.json"
-    rows = []
-    if os.path.exists(out):
-        rows = json.load(open(out))
-    done = {r.get("tag") for r in rows}
-    for arch, shape, tag, ov in MATRIX:
-        if tag in done:
-            print(f"skip {tag} (done)")
-            continue
-        print(f"=== {tag}: {arch} x {shape} {ov}", flush=True)
-        try:
-            row = run_cell(arch, shape, overrides=ov, tag=tag)
-        except Exception as e:
-            traceback.print_exc()
-            row = {"arch": arch, "shape": shape, "tag": tag, "status": "error",
-                   "error": f"{type(e).__name__}: {e}"}
+@dataclasses.dataclass
+class LayerState:
+    """One conv layer's knob position in the search."""
+
+    site: ConvSite
+    step: int  # index into DENSITY_STEPS
+
+    @property
+    def density(self) -> float:
+        return DENSITY_STEPS[self.step]
+
+    def bytes_at(self, step: int, *, impl: str = "halo") -> int:
+        s = strip_steps(self.site.geom.kb, DENSITY_STEPS[step],
+                        prune=True)
+        tr = conv_layer_traffic(
+            self.site.x_shape, kh=self.site.kh, kw=self.site.kw,
+            stride=self.site.stride, groups=self.site.groups,
+            dilation=self.site.dilation, cout=self.site.cout, s_steps=s,
+            vk=self.site.geom.vk, vn=self.site.geom.vn, impl=impl,
+            residual=self.site.has_residual)
+        return tr.bytes_accessed
+
+
+def kept_weight_fraction(layers: list[LayerState]) -> float:
+    """Accuracy placeholder: the fraction of stored weight tiles kept,
+    weighted by tile count.  Replace with a real eval once the
+    checkpoint importer (ROADMAP) lands."""
+    kept = sum(
+        st.site.geom.nb * strip_steps(st.site.geom.kb, st.density,
+                                      prune=True)
+        for st in layers)
+    total = sum(st.site.geom.nb * st.site.geom.kb for st in layers)
+    return kept / max(total, 1)
+
+
+def hillclimb(net: SparseNet, *, size: int, batch: int, budget: float,
+              impl: str = "halo", verbose: bool = True) -> dict:
+    """Greedy coordinate descent: repeatedly prune the layer whose next
+    density step buys the most modeled bytes per kept-weight point, until
+    total modeled bytes <= ``budget`` x the dense-density total."""
+    nc = check_net(net, (batch, size, size, 3), density=1.0)
+    nc.report.raise_errors()
+    layers = [LayerState(site=s, step=0) for s in nc.conv_sites]
+    start = sum(st.bytes_at(st.step, impl=impl) for st in layers)
+    target = int(start * budget)
+    total = start
+    while total > target:
+        best, best_gain = None, 0.0
+        for st in layers:
+            if st.step + 1 >= len(DENSITY_STEPS):
+                continue
+            gain = st.bytes_at(st.step, impl=impl) \
+                - st.bytes_at(st.step + 1, impl=impl)
+            if gain > best_gain:
+                best, best_gain = st, gain
+        if best is None:  # every knob at the floor; budget unreachable
+            break
+        best.step += 1
+        total -= int(best_gain)
+        if verbose:
+            print(f"  {best.site.path:<40} -> density {best.density:<6} "
+                  f"total {total / start:.3f}x dense")
+    return {
+        "net": net.name,
+        "impl": impl,
+        "budget": budget,
+        "reached": total / start,
+        "start_bytes": start,
+        "total_bytes": total,
+        "kept_weight_fraction": round(kept_weight_fraction(layers), 4),
+        "densities": {st.site.name: st.density for st in layers},
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    from repro.analysis.__main__ import NETS
+
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--net", choices=sorted(NETS), default="resnet18")
+    p.add_argument("--size", type=int, default=32)
+    p.add_argument("--batch", type=int, default=1)
+    p.add_argument("--budget", type=float, default=0.5,
+                   help="target modeled-bytes fraction of density-1.0")
+    p.add_argument("--impl", choices=("halo", "stack"), default="halo")
+    p.add_argument("--out", default="")
+    args = p.parse_args(argv)
+
+    row = hillclimb(NETS[args.net](image_size=args.size), size=args.size,
+                    batch=args.batch, budget=args.budget, impl=args.impl)
+    print(json.dumps(row, indent=1))
+    if args.out:
+        out = pathlib.Path(args.out)
+        out.parent.mkdir(parents=True, exist_ok=True)
+        rows = json.loads(out.read_text()) if out.exists() else []
         rows.append(row)
-        with open(out, "w") as f:
-            json.dump(rows, f, indent=1, default=str)
-    print("hillclimb matrix complete")
+        out.write_text(json.dumps(rows, indent=1))
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

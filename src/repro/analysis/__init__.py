@@ -1,0 +1,47 @@
+"""vscheck — static IR/kernel contract verification for the sparse stack.
+
+Three passes, runnable standalone (``python -m repro.analysis``) and as
+the CI static-analysis gate:
+
+  1. `analysis.ir`         — shape/geometry inference over `SparseNet`
+                             layer graphs (rules VSC1xx);
+  2. `analysis.contracts`  — abstract index-map evaluation proving every
+                             registered kernel invocation in-bounds and
+                             its `pl.CostEstimate` byte/FLOP contract
+                             exact (rules VSC2xx);
+  3. `analysis.lint`       — repo-specific AST lint (rules VSC3xx).
+
+Only `diagnostics`/`intervals` are imported eagerly: `models.graph`
+imports `analysis.diagnostics` for its error vocabulary, while
+`analysis.ir` imports `models.graph` — the submodules that close that
+loop load lazily via ``__getattr__``.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Any
+
+from .diagnostics import RULES, Diagnostic, Report, VSCheckError
+from .intervals import AbstractIdx, Interval
+
+__all__ = [
+    "RULES", "Diagnostic", "Report", "VSCheckError",
+    "AbstractIdx", "Interval",
+    # lazy (see __getattr__): walker + contract + lint entry points
+    "check_net", "check_contracts", "check_one_net", "lint_paths",
+    "ConvSite", "FCSite", "NetCheck", "PlanSummary",
+]
+
+_LAZY = {
+    "check_net": "ir", "ConvSite": "ir", "FCSite": "ir", "NetCheck": "ir",
+    "check_contracts": "contracts", "PlanSummary": "contracts",
+    "lint_paths": "lint",
+    "check_one_net": "__main__",
+}
+
+
+def __getattr__(name: str) -> Any:
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

@@ -47,8 +47,12 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import TYPE_CHECKING
 
 import numpy as np
+
+if TYPE_CHECKING:
+    from .calibration import CalibConstants
 
 __all__ = ["PEConfig", "CycleReport", "TrafficReport", "conv_layer_cycles",
            "conv_layer_traffic", "aggregate", "network_cycle_reports",
@@ -438,7 +442,7 @@ def conv_layer_traffic(
 
 
 def network_traffic_reports(
-    traffic, sparse: dict, *, bh: int = 8,
+    traffic: list[tuple], sparse: dict, *, bh: int = 8,
     impls: tuple[str, ...] = ("halo", "stack"),
 ) -> list[tuple[str, dict]]:
     """Per-layer DRAM traffic for one network's conv traffic, per impl.
@@ -476,7 +480,7 @@ def network_traffic_reports(
     return out
 
 
-def network_cycle_reports(traffic, pe: PEConfig) -> list[tuple[str, CycleReport]]:
+def network_cycle_reports(traffic: list[tuple], pe: PEConfig) -> list[tuple[str, CycleReport]]:
     """Per-layer cycle reports for one network's conv traffic.
 
     ``traffic`` is the record produced by `models.graph.collect_conv_traffic`
@@ -501,7 +505,8 @@ def network_cycle_reports(traffic, pe: PEConfig) -> list[tuple[str, CycleReport]
     return reports
 
 
-def load_calibration(backend: str | None = None, path=None):
+def load_calibration(backend: str | None = None,
+                     path: str | None = None) -> CalibConstants:
     """The fitted cost-model constants for ``backend`` (default: the active
     jax backend) — `core.calibration.CalibConstants` loaded from the
     committed ``benchmarks/baselines/CALIB_<backend>.json``, or the
@@ -514,7 +519,8 @@ def load_calibration(backend: str | None = None, path=None):
 
 def predicted_layer_time_s(traffic: TrafficReport, *, nb: int, s_steps: int,
                            blocks: int, vk: int, vn: int,
-                           constants=None) -> float:
+                           constants: CalibConstants | None = None
+                           ) -> float:
     """Calibrated wall-time prediction for one layer.
 
     ``blocks`` is the kernel's spatial grid sweep per strip (row-blocks for

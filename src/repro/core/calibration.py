@@ -68,6 +68,7 @@ import json
 import math
 import os
 import pathlib
+from typing import Any, Callable
 import time
 
 import numpy as np
@@ -235,7 +236,7 @@ def default_calib_path(backend: str) -> pathlib.Path:
     return repo / "benchmarks" / "baselines" / f"CALIB_{backend}.json"
 
 
-def save_calibration(path, constants: CalibConstants, rows: list[dict], *,
+def save_calibration(path: str | pathlib.Path, constants: CalibConstants, rows: list[dict], *,
                      fit_settings: dict | None = None,
                      gate_layers: list[str] | None = None) -> dict:
     """Write the calibration artifact: constants + per-layer records.
@@ -258,13 +259,14 @@ def save_calibration(path, constants: CalibConstants, rows: list[dict], *,
     return artifact
 
 
-def load_calibration_file(path) -> dict:
+def load_calibration_file(path: str | pathlib.Path) -> dict:
     with open(path) as f:
         return json.load(f)
 
 
 def load_constants(backend: str | None = None,
-                   path=None) -> CalibConstants:
+                   path: str | pathlib.Path | None = None
+                   ) -> CalibConstants:
     """Fitted constants for ``backend`` (default: the active jax backend).
 
     Returns the uncalibrated defaults when no committed
@@ -284,7 +286,8 @@ def load_constants(backend: str | None = None,
 # Measurement
 # --------------------------------------------------------------------------
 
-def median_time_s(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+def median_time_s(fn: Callable[..., Any], *args: Any, repeats: int = 5,
+                  warmup: int = 2) -> float:
     """Median-of-k wall clock of an already-compiled callable.
 
     ``jax.block_until_ready`` on every call; ``warmup`` calls are discarded
@@ -303,7 +306,8 @@ def median_time_s(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
     return ts[len(ts) // 2]
 
 
-def compiled_layer_cost(fn, *args):
+def compiled_layer_cost(fn: Callable[..., Any],
+                        *args: Any) -> tuple[Any, Any]:
     """jit-compile ``fn(*args)`` and return ``(compiled, HloCost)``.
 
     The cost comes from `utils.hlo.analyze` over the optimized HLO text —
@@ -331,7 +335,7 @@ def _matmul_blocks(m: int, bm: int = 8) -> int:
 
 
 def measured_vs_modeled_records(
-    net, params, x, *, density: float = 0.5, vk: int = 32, vn: int = 128,
+    net: Any, params: Any, x: Any, *, density: float = 0.5, vk: int = 32, vn: int = 128,
     impl: str = "jnp", repeats: int = 5, warmup: int = 2,
     layers: set[str] | None = None, measure: bool = True,
 ) -> list[dict]:
@@ -454,7 +458,8 @@ def measured_vs_modeled_records(
     return rows
 
 
-def _measured_cols(compiled, cost, modeled_flops: int, args, *,
+def _measured_cols(compiled: Callable[..., Any], cost: Any,
+                   modeled_flops: int, args: tuple[Any, ...], *,
                    repeats: int, warmup: int) -> dict:
     t = median_time_s(compiled, *args, repeats=repeats, warmup=warmup)
     return {
@@ -509,7 +514,8 @@ def compare_calibration(
         "|---|---|---|---|---|---|",
     ]
 
-    def _check(name, check, rec, new, tol):
+    def _check(name: str, check: str, rec: float, new: float,
+               tol: float) -> None:
         delta = (new - rec) / max(abs(rec), 1e-12)
         bad = abs(delta) > tol
         if bad:

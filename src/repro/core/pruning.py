@@ -15,6 +15,8 @@ granularity for the accelerator model.
 """
 from __future__ import annotations
 
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -28,7 +30,7 @@ __all__ = [
 ]
 
 
-def element_density(w) -> float:
+def element_density(w: np.ndarray | jax.Array) -> float:
     w = np.asarray(w)
     return float(np.count_nonzero(w)) / w.size
 
@@ -46,7 +48,8 @@ def _apply_tile_mask(w: np.ndarray, mask: np.ndarray, vk: int, vn: int) -> np.nd
     return (w * m).astype(w.dtype)
 
 
-def prune_vectors(w, density: float, vk: int, vn: int) -> np.ndarray:
+def prune_vectors(w: np.ndarray, density: float, vk: int,
+                  vn: int) -> np.ndarray:
     """Global magnitude vector pruning to ~`density` fraction of tiles kept."""
     w = np.asarray(w)
     scores = vector_scores(w, vk, vn)
@@ -56,7 +59,8 @@ def prune_vectors(w, density: float, vk: int, vn: int) -> np.ndarray:
     return _apply_tile_mask(w, mask, vk, vn)
 
 
-def prune_vectors_balanced(w, density: float, vk: int, vn: int):
+def prune_vectors_balanced(w: np.ndarray, density: float, vk: int,
+                           vn: int) -> tuple[np.ndarray, np.ndarray]:
     """Per-strip equal-quota vector pruning.
 
     Returns (pruned_dense, mask) where mask is (KB, NB) with identical per-
@@ -87,7 +91,8 @@ def prune_conv_columns(w: np.ndarray, density: float) -> np.ndarray:
     return (w * mask).astype(w.dtype)
 
 
-def prune_tree_balanced(params, density: float, vk: int, vn: int, *, min_dim: int = 256):
+def prune_tree_balanced(params: Any, density: float, vk: int, vn: int,
+                        *, min_dim: int = 256) -> tuple[Any, dict]:
     """Vector-prune every 2-D matmul weight in a pytree (leaves named arrays).
 
     Matrices smaller than `min_dim` on either axis (norms, embeddings' last
@@ -95,7 +100,7 @@ def prune_tree_balanced(params, density: float, vk: int, vn: int, *, min_dim: in
     """
     report = {}
 
-    def visit(path, leaf):
+    def visit(path: Any, leaf: Any) -> Any:
         if not hasattr(leaf, "ndim") or leaf.ndim != 2:
             return leaf
         k, n = leaf.shape

@@ -17,7 +17,7 @@ impl:
 """
 from __future__ import annotations
 
-from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -66,7 +66,7 @@ def vs_matmul(
     residual: jax.Array | None = None,
     fuse_relu: bool = False,
     impl: str = "jnp",
-    out_dtype=None,
+    out_dtype: Any = None,
     skip_zero_inputs: bool = True,
 ) -> jax.Array:
     """x (..., K) @ sparse W (K, N) -> (..., N).
@@ -98,7 +98,8 @@ def vs_matmul(
     kb = k // vk
     x2 = x.reshape(-1, kb, vk)  # (M, KB, vk)
 
-    def step(acc, sv):
+    def step(acc: jax.Array, sv: tuple[jax.Array, jax.Array]
+             ) -> tuple[jax.Array, None]:
         idx_s, w_s = sv  # (NB,), (NB, vk, vn)
         xg = jnp.take(x2, idx_s, axis=1)  # (M, NB, vk)
         acc = acc + jnp.einsum(
@@ -165,7 +166,8 @@ def _vs_conv2d_depthwise_jnp(
     _, ho, wo, _ = p.shape
     p4 = p.reshape(n * ho * wo, kh * kw, c // vc, vc)
 
-    def step(acc, sv):
+    def step(acc: jax.Array, sv: tuple[jax.Array, jax.Array]
+             ) -> tuple[jax.Array, None]:
         idx_s, w_s = sv  # (NB,), (NB, 1, vc)
         xg = jnp.take_along_axis(p4, idx_s[None, None, :, None], axis=1)[:, 0]
         return acc + xg.astype(jnp.float32) * w_s[:, 0].astype(jnp.float32), None

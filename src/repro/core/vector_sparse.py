@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -40,11 +41,14 @@ class VectorSparse:
     shape: tuple[int, int]
 
     # -- pytree plumbing (idx is a leaf so it can live in param trees) -------
-    def tree_flatten(self):
+    def tree_flatten(self) -> tuple[tuple[jax.Array, jax.Array],
+                                    tuple[tuple[int, int]]]:
         return (self.vals, self.idx), (self.shape,)
 
     @classmethod
-    def tree_unflatten(cls, aux, children):
+    def tree_unflatten(cls, aux: tuple[tuple[int, int]],
+                       children: tuple[jax.Array, jax.Array]
+                       ) -> VectorSparse:
         vals, idx = children
         return cls(vals=vals, idx=idx, shape=aux[0])
 
@@ -75,10 +79,10 @@ class VectorSparse:
         return self.nnz_per_strip / self.kb
 
     @property
-    def dtype(self):
+    def dtype(self) -> np.dtype:
         return self.vals.dtype
 
-    def astype(self, dtype) -> "VectorSparse":
+    def astype(self, dtype: Any) -> VectorSparse:
         return VectorSparse(self.vals.astype(dtype), self.idx, self.shape)
 
 

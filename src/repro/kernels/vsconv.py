@@ -114,7 +114,10 @@ __all__ = [
     "vsconv_dw_stack_pallas", "build_row_tap_stack", "build_halo_input",
     "stack_kernel_cost", "halo_kernel_cost", "dw_halo_kernel_cost",
     "dw_stack_kernel_cost", "same_pads", "use_resident_halo",
-    "RESIDENT_MAX_H",
+    "RESIDENT_MAX_H", "halo_in_index_map", "resident_in_index_map",
+    "dw_halo_in_index_map", "stack_in_index_map", "dw_stack_in_index_map",
+    "conv_weight_index_map", "conv_out_index_map", "conv_bias_index_map",
+    "halo_layout_dims", "stack_layout_dims",
 ]
 
 
@@ -253,6 +256,147 @@ def dw_stack_kernel_cost(
 
 
 # --------------------------------------------------------------------------
+# BlockSpec index maps (named factories — shared with `repro.analysis`)
+# --------------------------------------------------------------------------
+#
+# Every index map below is closed arithmetic (+ - * // %) over the grid
+# indices and the prefetched idx table, with a uniform (g0, g1, g2, idx)
+# signature in *grid order*.  Naming them (instead of inlining lambdas in
+# the pallas_call specs) lets the static analyzer evaluate the exact same
+# functions abstractly — over `analysis.intervals.Interval` grid axes for
+# the in-bounds proof, and over concrete numpy index arrays for the
+# DMA-byte derivation — so the kernels and their verifier can never use
+# different offset arithmetic.
+#
+# Grid orders: streaming conv kernels (j, m, s) = (cout strip,
+# image*row-block, sparse step); the resident halo kernel (m, j, s) with
+# the row-block outermost; vsmm (j, mi, s).
+
+
+def halo_in_index_map(hb: int, stride: int, bh: int, cbg: int, spg: int):
+    """Streaming halo input (element offsets, `pl.Unblocked`): one image,
+    one overlapping halo row window, full width, one cin tile.  The offset
+    is tap-independent, so consecutive sparse steps on one cin tile revisit
+    the block without a new DMA; a grouped strip adds its group's base cin
+    tile."""
+    def index_map(j, m, s, idx):
+        return (
+            m // hb,                    # image
+            (m % hb) * stride * bh,     # halo window start row
+            0,
+            (j // spg) * cbg + idx[j, s] % cbg,  # cin tile (+ group base)
+            0,
+        )
+    return index_map
+
+
+def resident_in_index_map(hb: int, stride: int, bh: int):
+    """Resident (tiny-feature-map) halo input: one block holding ALL cin
+    tiles, offset a function of the row-block only — with the
+    (image, row-block) grid axis outermost the block is DMA'd exactly once
+    per (image, row-block)."""
+    def index_map(m, j, s, idx):
+        return (m // hb, (m % hb) * stride * bh, 0, 0, 0)
+    return index_map
+
+
+def dw_halo_in_index_map(hb: int, stride: int, bh: int):
+    """Depthwise halo input: strip j IS the channel tile; the offset is
+    tap-independent, so the halo is fetched once per (strip, row-block)."""
+    def index_map(j, m, s, idx):
+        return (m // hb, (m % hb) * stride * bh, 0, j, 0)
+    return index_map
+
+
+def stack_in_index_map(hb: int, cbg: int, spg: int, kw: int, stride: int,
+                       dilation: int):
+    """Row-tap stack input (block indices): the plane id is the generalized
+    tap select ``ky*stride + (kx*dilation) % stride`` decoded from the
+    stored tile id, plus the strip's group-based cin tile."""
+    def index_map(j, m, s, idx):
+        t = idx[j, s]
+        return (
+            m // hb,                                            # image
+            (t // cbg // kw) * stride
+            + (((t // cbg) % kw) * dilation) % stride,          # (ky, phase)
+            m % hb,                                             # row block
+            0,
+            (j // spg) * cbg + t % cbg,                         # cin tile
+        )
+    return index_map
+
+
+def dw_stack_in_index_map(hb: int, kw: int, stride: int, dilation: int):
+    """Depthwise row-tap stack input: idx[j, s] is the bare tap id and the
+    strip is the channel tile."""
+    def index_map(j, m, s, idx):
+        t = idx[j, s]
+        return (
+            m // hb,
+            (t // kw) * stride + ((t % kw) * dilation) % stride,  # (ky, ph)
+            m % hb,
+            0,
+            j,
+        )
+    return index_map
+
+
+def conv_weight_index_map(resident: bool = False):
+    """The s-th stored weight tile of strip j (both conv grid orders)."""
+    if resident:
+        def index_map(m, j, s, idx):
+            return (j, s, 0, 0)
+    else:
+        def index_map(j, m, s, idx):
+            return (j, s, 0, 0)
+    return index_map
+
+
+def conv_out_index_map(hb: int, resident: bool = False):
+    """Output/residual row-block tile of (strip j, image*row-block m)."""
+    if resident:
+        def index_map(m, j, s, idx):
+            return (m // hb, m % hb, 0, j)
+    else:
+        def index_map(j, m, s, idx):
+            return (m // hb, m % hb, 0, j)
+    return index_map
+
+
+def conv_bias_index_map(resident: bool = False):
+    """Strip j's bias tile (excluded from the byte contract: one (1, vn)
+    tile per strip, noise next to the input/weight/output terms)."""
+    if resident:
+        def index_map(m, j, s, idx):
+            return (j, 0)
+    else:
+        def index_map(j, m, s, idx):
+            return (j, 0)
+    return index_map
+
+
+def halo_layout_dims(h: int, w: int, *, kh: int, kw: int, stride: int,
+                     dilation: int, h_out: int, sublane: int = 8
+                     ) -> tuple[int, int]:
+    """(rows, bW) of `build_halo_input`'s padded buffer for the given
+    geometry — the single source the builder, the cost model, and the
+    analyzer's bounds proof all share."""
+    wo, _, _ = same_pads(w, kw, stride, dilation)
+    rows = stride * (h_out - 1) + (kh - 1) * dilation + 1
+    bw = -(-(stride * (wo - 1) + (kw - 1) * dilation + 1) // sublane) * sublane
+    return rows, bw
+
+
+def stack_layout_dims(h: int, w: int, *, kh: int, kw: int, stride: int,
+                      dilation: int, h_out: int, sublane: int = 8
+                      ) -> tuple[int, int]:
+    """(planes, bW) of `build_row_tap_stack`'s materialized buffer."""
+    wo, _, _ = same_pads(w, kw, stride, dilation)
+    bw = -(-(wo + ((kw - 1) * dilation) // stride) // sublane) * sublane
+    return kh * stride, bw
+
+
+# --------------------------------------------------------------------------
 # Input layouts
 # --------------------------------------------------------------------------
 
@@ -280,10 +424,10 @@ def build_halo_input(
     n, h, w, c = x.shape
     assert c % vk == 0, (c, vk)
     ho, pt, _ = same_pads(h, kh, stride, dilation)
-    wo, pl_, _ = same_pads(w, kw, stride, dilation)
+    _, pl_, _ = same_pads(w, kw, stride, dilation)
     ho = h_out or ho
-    rows = stride * (ho - 1) + (kh - 1) * dilation + 1
-    bw = -(-(stride * (wo - 1) + (kw - 1) * dilation + 1) // sublane) * sublane
+    rows, bw = halo_layout_dims(h, w, kh=kh, kw=kw, stride=stride,
+                                dilation=dilation, h_out=ho, sublane=sublane)
     xp = jnp.pad(
         x,
         ((0, 0), (pt, rows - h - pt), (pl_, bw - w - pl_), (0, 0)),
@@ -313,9 +457,10 @@ def build_row_tap_stack(
     """
     n, h, w, c = x.shape
     ho, pt, _ = same_pads(h, kh, stride, dilation)
-    wo, pl_, _ = same_pads(w, kw, stride, dilation)
+    _, pl_, _ = same_pads(w, kw, stride, dilation)
     ho = h_out or ho
-    bw = -(-(wo + ((kw - 1) * dilation) // stride) // sublane) * sublane
+    _, bw = stack_layout_dims(h, w, kh=kh, kw=kw, stride=stride,
+                              dilation=dilation, h_out=ho, sublane=sublane)
     # padded-row index ceiling (effective kernel extent)
     rows_needed = stride * (ho - 1) + (kh - 1) * dilation + 1
     cols_needed = stride * bw  # every phase plane must reach bw columns
@@ -526,14 +671,13 @@ def vsconv_halo_pallas(
         in_specs = [
             pl.BlockSpec(
                 (1, hh, bwp, cb, vk),
-                lambda m, j, s, idx: (
-                    m // hb, (m % hb) * stride * bh, 0, 0, 0),
+                resident_in_index_map(hb, stride, bh),
                 indexing_mode=pl.Unblocked(),
             ),
-            pl.BlockSpec((1, 1, vk, vn), lambda m, j, s, idx: (j, s, 0, 0)),
+            pl.BlockSpec((1, 1, vk, vn), conv_weight_index_map(resident=True)),
         ]
-        out_map = lambda m, j, s, idx: (m // hb, m % hb, 0, j)
-        bias_map = lambda m, j, s, idx: (j, 0)
+        out_map = conv_out_index_map(hb, resident=True)
+        bias_map = conv_bias_index_map(resident=True)
         grid = (n * hb, nb, s_steps)
         kernel = functools.partial(
             _halo_resident_kernel, cb=cb, kw=kw, stride=stride,
@@ -552,19 +696,13 @@ def vsconv_halo_pallas(
             # so the group's base tile is added here.
             pl.BlockSpec(
                 (1, hh, bwp, 1, vk),
-                lambda j, m, s, idx: (
-                    m // hb,                    # image
-                    (m % hb) * stride * bh,     # halo window start row
-                    0,
-                    (j // spg) * cbg + idx[j, s] % cbg,  # cin tile (+ group)
-                    0,
-                ),
+                halo_in_index_map(hb, stride, bh, cbg, spg),
                 indexing_mode=pl.Unblocked(),
             ),
-            pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
+            pl.BlockSpec((1, 1, vk, vn), conv_weight_index_map()),
         ]
-        out_map = lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        bias_map = lambda j, m, s, idx: (j, 0)
+        out_map = conv_out_index_map(hb)
+        bias_map = conv_bias_index_map()
         grid = (nb, n * hb, s_steps)
         kernel = functools.partial(
             _halo_kernel, cb=cbg, kw=kw, stride=stride, dilation=dilation,
@@ -722,36 +860,25 @@ def vsconv_pallas(
         # and a grouped strip's cin tile gets its group's base added.
         pl.BlockSpec(
             (1, 1, bh, bw, vk),
-            lambda j, m, s, idx: (
-                m // hb,                                      # image
-                (idx[j, s] // cbg // kw) * stride
-                + (((idx[j, s] // cbg) % kw) * dilation) % stride,  # (ky, ph)
-                m % hb,                                       # row block
-                0,
-                (j // spg) * cbg + idx[j, s] % cbg,           # cin tile
-            ),
+            stack_in_index_map(hb, cbg, spg, kw, stride, dilation),
         ),
-        pl.BlockSpec((1, 1, vk, vn), lambda j, m, s, idx: (j, s, 0, 0)),
+        pl.BlockSpec((1, 1, vk, vn), conv_weight_index_map()),
     ]
     args = [vs.idx, xt, vs.vals]
     if has_bias:
-        in_specs.append(pl.BlockSpec((1, vn), lambda j, m, s, idx: (j, 0)))
+        in_specs.append(pl.BlockSpec((1, vn), conv_bias_index_map()))
         args.append(bias.reshape(nb, vn))
     if has_residual:
         assert residual.shape == (n, h, w_out, nb * vn), (
             residual.shape, (n, h, w_out, nb * vn))
-        in_specs.append(pl.BlockSpec(
-            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ))
+        in_specs.append(pl.BlockSpec((1, bh, w_out, vn), conv_out_index_map(hb)))
         args.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, n * hb, s_steps),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, bh, w_out, vn), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ),
+        out_specs=pl.BlockSpec((1, bh, w_out, vn), conv_out_index_map(hb)),
         scratch_shapes=[pltpu.VMEM((bh * w_out, vn), jnp.float32)],
     )
     return pl.pallas_call(
@@ -898,31 +1025,26 @@ def vsconv_dw_halo_pallas(
     in_specs = [
         pl.BlockSpec(
             (1, hh, bwp, 1, vc),
-            lambda j, m, s, idx: (
-                m // hb, (m % hb) * stride * bh, 0, j, 0),
+            dw_halo_in_index_map(hb, stride, bh),
             indexing_mode=pl.Unblocked(),
         ),
-        pl.BlockSpec((1, 1, 1, vc), lambda j, m, s, idx: (j, s, 0, 0)),
+        pl.BlockSpec((1, 1, 1, vc), conv_weight_index_map()),
     ]
     args = [vs.idx, xh, vs.vals]
     if has_bias:
-        in_specs.append(pl.BlockSpec((1, vc), lambda j, m, s, idx: (j, 0)))
+        in_specs.append(pl.BlockSpec((1, vc), conv_bias_index_map()))
         args.append(bias.reshape(nb, vc))
     if has_residual:
         assert residual.shape == (n, h, w_out, nb * vc), (
             residual.shape, (n, h, w_out, nb * vc))
-        in_specs.append(pl.BlockSpec(
-            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ))
+        in_specs.append(pl.BlockSpec((1, bh, w_out, vc), conv_out_index_map(hb)))
         args.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, n * hb, s_steps),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ),
+        out_specs=pl.BlockSpec((1, bh, w_out, vc), conv_out_index_map(hb)),
         scratch_shapes=[pltpu.VMEM((bh * w_out, vc), jnp.float32)],
     )
     return pl.pallas_call(
@@ -1031,36 +1153,25 @@ def vsconv_dw_stack_pallas(
     in_specs = [
         pl.BlockSpec(
             (1, 1, bh, bw, vc),
-            lambda j, m, s, idx: (
-                m // hb,
-                (idx[j, s] // kw) * stride
-                + ((idx[j, s] % kw) * dilation) % stride,   # (ky, phase)
-                m % hb,
-                0,
-                j,                                          # channel tile
-            ),
+            dw_stack_in_index_map(hb, kw, stride, dilation),
         ),
-        pl.BlockSpec((1, 1, 1, vc), lambda j, m, s, idx: (j, s, 0, 0)),
+        pl.BlockSpec((1, 1, 1, vc), conv_weight_index_map()),
     ]
     args = [vs.idx, xt, vs.vals]
     if has_bias:
-        in_specs.append(pl.BlockSpec((1, vc), lambda j, m, s, idx: (j, 0)))
+        in_specs.append(pl.BlockSpec((1, vc), conv_bias_index_map()))
         args.append(bias.reshape(nb, vc))
     if has_residual:
         assert residual.shape == (n, h, w_out, c), (
             residual.shape, (n, h, w_out, c))
-        in_specs.append(pl.BlockSpec(
-            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ))
+        in_specs.append(pl.BlockSpec((1, bh, w_out, vc), conv_out_index_map(hb)))
         args.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, n * hb, s_steps),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec(
-            (1, bh, w_out, vc), lambda j, m, s, idx: (m // hb, m % hb, 0, j)
-        ),
+        out_specs=pl.BlockSpec((1, bh, w_out, vc), conv_out_index_map(hb)),
         scratch_shapes=[pltpu.VMEM((bh * w_out, vc), jnp.float32)],
     )
     return pl.pallas_call(

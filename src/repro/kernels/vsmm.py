@@ -39,7 +39,65 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.vector_sparse import VectorSparse
 
-__all__ = ["vsmm_pallas"]
+__all__ = [
+    "vsmm_pallas", "vsmm_kernel_cost", "vsmm_x_index_map", "vsmm_w_index_map",
+    "vsmm_out_index_map", "vsmm_bias_index_map",
+]
+
+
+def vsmm_kernel_cost(
+    *, m: int, nb: int, s_steps: int, vk: int, vn: int, in_itemsize: int = 4,
+    w_itemsize: int = 4, out_itemsize: int = 4, residual_bytes: int = 0,
+) -> pl.CostEstimate:
+    """Kernel-side cost of the sparse matmul: every sparse step gathers a
+    fresh (bm, vk) activation K-tile, the stored weight tiles stream once,
+    the output strip is written once.  ``m`` is the kernel's (padded) row
+    count — `core.accel_model.conv_layer_traffic` quotes the same formulas
+    at the unpadded row count for the 1x1-conv route."""
+    return pl.CostEstimate(
+        flops=2 * m * nb * s_steps * vk * vn,
+        bytes_accessed=(
+            m * nb * s_steps * vk * in_itemsize
+            + nb * s_steps * vk * vn * w_itemsize
+            + m * nb * vn * out_itemsize
+            + residual_bytes
+        ),
+        transcendentals=0,
+    )
+
+
+# --------------------------------------------------------------------------
+# BlockSpec index maps (named factories — shared with `repro.analysis`).
+# Grid order (j, mi, s) = (output strip, activation row-block, sparse step).
+# --------------------------------------------------------------------------
+
+def vsmm_x_index_map():
+    """Activation K-tile gather: the paper's index system — the s-th issued
+    vector of strip j reads activation K-tile idx[j, s]."""
+    def index_map(j, mi, s, idx):
+        return (mi, idx[j, s])
+    return index_map
+
+
+def vsmm_w_index_map():
+    """The s-th stored weight vector of strip j."""
+    def index_map(j, mi, s, idx):
+        return (j, s, 0, 0)
+    return index_map
+
+
+def vsmm_out_index_map():
+    """Output/residual (row-block, strip) tile."""
+    def index_map(j, mi, s, idx):
+        return (mi, j)
+    return index_map
+
+
+def vsmm_bias_index_map():
+    """Strip j's bias tile (excluded from the byte contract)."""
+    def index_map(j, mi, s, idx):
+        return (j, 0)
+    return index_map
 
 
 def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_bias: bool,
@@ -121,26 +179,23 @@ def vsmm_pallas(
     has_residual = residual is not None
 
     in_specs = [
-        # activation K-tile gather: the paper's index system
-        pl.BlockSpec((bm, vk), lambda j, mi, s, idx: (mi, idx[j, s])),
-        # the s-th stored weight vector of strip j
-        pl.BlockSpec((1, 1, vk, vn), lambda j, mi, s, idx: (j, s, 0, 0)),
+        pl.BlockSpec((bm, vk), vsmm_x_index_map()),
+        pl.BlockSpec((1, 1, vk, vn), vsmm_w_index_map()),
     ]
     args = [vs.idx, x, vs.vals]
     if has_bias:
-        in_specs.append(pl.BlockSpec((1, vn), lambda j, mi, s, idx: (j, 0)))
+        in_specs.append(pl.BlockSpec((1, vn), vsmm_bias_index_map()))
         args.append(bias.reshape(nb, vn))
     if has_residual:
         assert residual.shape == (m, nb * vn), (residual.shape, m, nb * vn)
-        in_specs.append(
-            pl.BlockSpec((bm, vn), lambda j, mi, s, idx: (mi, j)))
+        in_specs.append(pl.BlockSpec((bm, vn), vsmm_out_index_map()))
         args.append(residual)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(nb, m // bm, s_steps),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, vn), lambda j, mi, s, idx: (mi, j)),
+        out_specs=pl.BlockSpec((bm, vn), vsmm_out_index_map()),
         scratch_shapes=[pltpu.VMEM((bm, vn), jnp.float32)],
     )
     return pl.pallas_call(
@@ -150,15 +205,12 @@ def vsmm_pallas(
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nb * vn), out_dtype),
         interpret=interpret,
-        cost_estimate=pl.CostEstimate(
-            flops=2 * m * nb * s_steps * vk * vn,
-            bytes_accessed=(
-                m * nb * s_steps * vk * x.dtype.itemsize
-                + vs.vals.size * vs.vals.dtype.itemsize
-                + m * nb * vn * jnp.dtype(out_dtype).itemsize
-                + (residual.size * residual.dtype.itemsize
-                   if has_residual else 0)
-            ),
-            transcendentals=0,
+        cost_estimate=vsmm_kernel_cost(
+            m=m, nb=nb, s_steps=s_steps, vk=vk, vn=vn,
+            in_itemsize=x.dtype.itemsize,
+            w_itemsize=vs.vals.dtype.itemsize,
+            out_itemsize=jnp.dtype(out_dtype).itemsize,
+            residual_bytes=(residual.size * residual.dtype.itemsize
+                            if has_residual else 0),
         ),
     )(*args)

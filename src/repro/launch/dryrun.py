@@ -1,4 +1,5 @@
 import os
+# vscheck: ignore[VSC303] — must run before the jax import below
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

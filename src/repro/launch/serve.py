@@ -481,9 +481,11 @@ class ReplicaGroup:
     def __init__(self, net, params, *, sparse=None, impl: str = "auto",
                  density: float | None = None, image_size: int | None = None,
                  pad_multiple: int = 8, replicas: int = 1,
-                 shard_fc: bool = False, rules=None):
+                 shard_fc: bool = False, rules=None, validate: bool = True):
         from repro.models import graph as G
         assert replicas >= 1
+        if validate and image_size is not None:
+            validate_net(net, image_size, density=density)
         self.replicas = replicas
         self.shard_fc = shard_fc
         self.rules = rules or shd.SERVE_RULES
@@ -507,6 +509,21 @@ class ReplicaGroup:
                 mesh=mesh, rules=self.rules))
 
 
+def validate_net(net, image_size: int, *, density: float | None = None,
+                 vk: int = 32, vn: int = 128) -> None:
+    """vscheck IR gate before any device placement: walk the net's shapes
+    and tile geometry at the serving input size and refuse placement
+    (`analysis.VSCheckError`) on structural errors — a malformed net
+    otherwise fails mid-compile on one replica after the others already
+    hold weights."""
+    from repro.analysis.ir import check_net
+    cin = next((l.cin for l in net.conv_layers()), 3)
+    nc = check_net(net, (1, image_size, image_size, cin),
+                   density=density if density is not None else 0.25,
+                   vk=vk, vn=vn)
+    nc.report.raise_errors()
+
+
 class CNNServer:
     """Batched CNN serving: `SparseNet.apply` behind the lockstep scheduler.
 
@@ -525,13 +542,16 @@ class CNNServer:
     def __init__(self, cfg, *, batch: int, impl: str = "auto",
                  density: float | None = None, sparse: bool = True,
                  seed: int = 0, pad_multiple: int = 8, replicas: int = 1,
-                 shard_fc: bool = False):
+                 shard_fc: bool = False, validate: bool = True):
         self.cfg = cfg
         self.replicas = replicas
         self.net = cfg.build()
+        self.density = cfg.weight_density if density is None else density
+        if validate:
+            validate_net(self.net, cfg.image_size, density=self.density,
+                         vk=cfg.vk, vn=cfg.vn)
         self.params = init_params(
             self.net.schema(), jax.random.PRNGKey(seed), jnp.float32)
-        self.density = cfg.weight_density if density is None else density
         self.sparse = None
         if sparse:
             self.sparse, _ = self.net.sparsify(
@@ -549,7 +569,7 @@ class CNNServer:
                 self.net, self.params, sparse=self.sparse, impl=impl,
                 density=self.density if sparse else None,
                 image_size=image_size, pad_multiple=pad_multiple,
-                replicas=replicas, shard_fc=shard_fc)
+                replicas=replicas, shard_fc=shard_fc, validate=False)
             self.backends = self.group.backends
             self.backend = self.backends[0]
             self.scheduler = FleetScheduler(self.backends, batch=batch)

@@ -18,13 +18,11 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
 import statistics
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_config

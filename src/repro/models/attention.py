@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.parallel import sharding as shd
 from repro.parallel.sharding import logical
-from .layers import P, dense, matmul_out_dtype, rope, rms_norm
+from .layers import P, matmul_out_dtype, rope, rms_norm
 
 __all__ = ["attn_schema", "attention_apply", "flash_attention", "init_kv_cache"]
 

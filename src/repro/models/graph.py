@@ -49,11 +49,13 @@ the remainder strip, so every FC runs sparse.
 from __future__ import annotations
 
 import dataclasses
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.diagnostics import Diagnostic, VSCheckError
 from repro.core import (
     VectorSparse,
     conv_cin_major,
@@ -68,6 +70,8 @@ from .layers import P
 __all__ = [
     "Conv", "FC", "Classifier", "Pool", "ResidualAdd", "Save", "Flatten",
     "SparseNet", "SparseConv", "SparseFC", "BatchedApply", "shard_sparse",
+    "ConvTileGeometry", "FCTileGeometry", "conv_tile_geometry",
+    "fc_tile_geometry", "strip_steps",
     "sparse_conv_from_dense", "apply_sparse_conv", "apply_sparse_fc",
     "net_schema", "net_apply", "sparsify", "collect_conv_traffic",
     "build_vgg16", "build_resnet18", "build_resnet34", "build_resnet50",
@@ -108,6 +112,11 @@ class Conv:
     residual: str | None = None  # slot added before ReLU (fused epilogue)
     src: str | None = None       # read input from slot, not the stream
     dst: str | None = None       # write output to slot, leave stream as-is
+    # a depthwise conv with channel multiplier > 1 (groups == cin,
+    # cout == m*cin) has no per-channel tap encoding; it can only run the
+    # general grouped kernels with vk == 1 — correct but MXU-wasteful.
+    # `sparsify`/vscheck refuse it (rule VSC109) unless explicitly allowed.
+    allow_fallback: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,17 +174,20 @@ class SparseNet:
     def schema(self) -> dict:
         return net_schema(self)
 
-    def apply(self, params, x, *, sparse=None, impl: str = "auto",
-              collect=None):
+    def apply(self, params: dict, x: jax.Array, *,
+              sparse: dict | None = None, impl: str = "auto",
+              collect: list | None = None) -> jax.Array:
         return net_apply(self, params, x, sparse=sparse, impl=impl,
                          collect=collect)
 
-    def sparsify(self, params, density: float, *, vk: int = 32,
-                 vn: int = 128, include_fc: bool = True):
+    def sparsify(self, params: dict, density: float, *, vk: int = 32,
+                 vn: int = 128,
+                 include_fc: bool = True) -> tuple[dict, dict]:
         return sparsify(self, params, density, vk=vk, vn=vn,
                         include_fc=include_fc)
 
-    def batched_apply(self, params, *, sparse=None, impl: str = "auto",
+    def batched_apply(self, params: dict, *,
+                      sparse: dict | None = None, impl: str = "auto",
                       key: tuple = (), cache: dict | None = None
                       ) -> "BatchedApply":
         """Serving entry point: jit-compiled apply with a compile cache
@@ -234,8 +246,122 @@ class SparseFC:
     bias: jax.Array | None = None
 
 
+# --------------------------------------------------------------------------
+# Tile geometry (the single source for sparsify AND the static analyzer)
+# --------------------------------------------------------------------------
+
+def _largest_divisor(n: int, cap: int) -> int:
+    """The largest divisor of ``n`` that is <= ``cap``."""
+    d = min(cap, n)
+    while n % d:
+        d -= 1
+    return d
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvTileGeometry:
+    """How one conv layer's weights encode into the balanced block-CSR.
+
+    ``vk``/``vn`` are the *encoded* tile dims (possibly shrunk from the
+    requested ones), ``cin_pad`` the zero channels appended to the input,
+    ``kb`` the stored-tile-id bound per strip (idx values < kb) and ``nb``
+    the output-strip count.  `sparse_conv_from_dense` follows exactly this
+    geometry; `repro.analysis` re-derives kernel plans from it.
+    """
+
+    depthwise: bool
+    vk: int
+    vn: int
+    cin_pad: int
+    kb: int
+    nb: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FCTileGeometry:
+    """FC encoding geometry: ``pad`` zero output columns (the remainder
+    strip for non-tileable heads), ``kb`` K-tiles, ``nb`` output strips."""
+
+    vk: int
+    vn: int
+    pad: int
+    kb: int
+    nb: int
+
+
+def conv_tile_geometry(
+    kh: int, kw: int, cin_g: int, cout: int, *, vk: int = 32, vn: int = 128,
+    groups: int = 1, allow_fallback: bool = False, path: str = "conv",
+) -> ConvTileGeometry:
+    """Tile geometry of a (kh, kw, cin/groups, cout) conv weight.
+
+    Depthwise (groups == cin, multiplier 1): the (kh*kw, C) per-channel tap
+    matrix, vk == 1, strips over channel tiles.  Grouped: K-tiles stay
+    inside the group (vk shrinks to a divisor of cin/groups, no padding),
+    strips to a divisor of cout/groups.  Ungrouped: channel-pad to a
+    multiple of a reduced K-tile when cin doesn't tile.
+
+    A depthwise conv with channel multiplier > 1 (groups > 1, cin_g == 1,
+    cout != groups) would fall back to the general grouped kernels with
+    vk == 1 — correct but MXU-wasteful (vk-1 dead lanes every issue).
+    Raises `VSCheckError` (rule VSC109) unless ``allow_fallback``.
+    """
+    depthwise = groups > 1 and cin_g == 1 and cout == groups
+    if depthwise:
+        vn_l = _largest_divisor(cout, vn)
+        return ConvTileGeometry(
+            depthwise=True, vk=1, vn=vn_l, cin_pad=0, kb=kh * kw,
+            nb=cout // vn_l)
+    if groups > 1 and cin_g == 1 and not allow_fallback:
+        raise VSCheckError(Diagnostic(
+            "VSC109", "error", path,
+            f"depthwise channel-multiplier {cout // groups} > 1 "
+            f"(groups={groups}, cout={cout}) has no per-channel tap "
+            f"encoding and would run grouped kernels with vk == 1",
+            hint="set Conv(allow_fallback=True) to accept the vk==1 "
+                 "grouped fallback, or split into depthwise + 1x1",
+        ))
+    if groups > 1:
+        # K-tiles stay inside the group; no channel padding (shrink vk to a
+        # divisor of Cin/groups instead — padding would interleave zeros
+        # into every group)
+        vk_l = _largest_divisor(cin_g, vk)
+        cp = 0
+        vn_l = _largest_divisor(cout // groups, vn)
+    else:
+        if cin_g % vk == 0:
+            vk_l, cp = vk, 0
+        else:
+            vk_l = min(vk, 8)
+            cp = -cin_g % vk_l
+        vn_l = _largest_divisor(cout, vn)
+    return ConvTileGeometry(
+        depthwise=False, vk=vk_l, vn=vn_l, cin_pad=cp,
+        kb=kh * kw * (cin_g + cp) // vk_l, nb=cout // vn_l)
+
+
+def fc_tile_geometry(din: int, dout: int, *, vk: int = 32, vn: int = 128
+                     ) -> FCTileGeometry | None:
+    """FC encoding geometry, or None when the layer stays dense (fan-in not
+    a vk multiple — rule VSC116)."""
+    if din % vk:
+        return None
+    vn_l = min(vn, dout)
+    pad = -dout % vn_l
+    return FCTileGeometry(vk=vk, vn=vn_l, pad=pad, kb=din // vk,
+                          nb=(dout + pad) // vn_l)
+
+
+def strip_steps(kb: int, density: float, *, prune: bool = True) -> int:
+    """Stored tiles per strip after balanced pruning — the S grid axis.
+    Mirrors `core.pruning.prune_vectors_balanced`'s per-strip quota."""
+    if not prune or density >= 1.0:
+        return kb
+    return max(1, int(round(kb * density)))
+
+
 def sparse_conv_from_dense(
-    w,
+    w: np.ndarray | jax.Array,
     density: float,
     *,
     vk: int = 32,
@@ -244,8 +370,10 @@ def sparse_conv_from_dense(
     groups: int = 1,
     dilation: int = 1,
     prune: bool = True,
-    dtype=None,
-):
+    dtype: Any = None,
+    allow_fallback: bool = False,
+    path: str = "conv",
+) -> tuple[SparseConv, np.ndarray]:
     """Dense (kh, kw, Cin/groups, Cout) weight -> (SparseConv, pruned dense
     weight).
 
@@ -267,14 +395,12 @@ def sparse_conv_from_dense(
     w = np.asarray(w, np.float32)
     kh, kw, cin_g, cout = w.shape
     dtype = dtype or jnp.float32
-    depthwise = groups > 1 and cin_g == 1 and cout == groups
-    if depthwise:
+    g = conv_tile_geometry(kh, kw, cin_g, cout, vk=vk, vn=vn, groups=groups,
+                           allow_fallback=allow_fallback, path=path)
+    vk_l, vn_l, cp = g.vk, g.vn, g.cin_pad
+    if g.depthwise:
         # per-channel tap matrix: one row per tap, strips = channel tiles
         wm = w.reshape(kh * kw, cout)
-        vk_l, cp = 1, 0
-        vn_l = min(vn, cout)
-        while cout % vn_l:
-            vn_l -= 1
         if prune and density < 1.0:
             wp, mask = prune_vectors_balanced(wm, density, vk_l, vn_l)
         else:
@@ -284,27 +410,6 @@ def sparse_conv_from_dense(
         spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, groups=groups,
                           dilation=dilation)
         return spec, wp.reshape(kh, kw, 1, cout)
-    if groups > 1:
-        # K-tiles stay inside the group; no channel padding (shrink vk to a
-        # divisor of Cin/groups instead — padding would interleave zeros
-        # into every group)
-        vk_l = min(vk, cin_g)
-        while cin_g % vk_l:
-            vk_l -= 1
-        cp = 0
-        cout_g = cout // groups
-        vn_l = min(vn, cout_g)
-        while cout_g % vn_l:
-            vn_l -= 1
-    else:
-        if cin_g % vk == 0:
-            vk_l, cp = vk, 0
-        else:
-            vk_l = min(vk, 8)
-            cp = -cin_g % vk_l
-        vn_l = min(vn, cout)
-        while cout % vn_l:
-            vn_l -= 1
     wpad = np.pad(w, ((0, 0), (0, 0), (0, cp), (0, 0))) if cp else w
     wm = wpad.reshape(kh * kw * (cin_g + cp), cout)
     if prune and density < 1.0:
@@ -327,8 +432,10 @@ def sparse_conv_from_dense(
     return spec, wp_dense
 
 
-def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True, residual=None,
-                      impl: str = "auto"):
+def apply_sparse_conv(x: jax.Array, entry: SparseConv | VectorSparse, *,
+                      bias: jax.Array | None = None, fuse_relu: bool = True,
+                      residual: jax.Array | None = None,
+                      impl: str = "auto") -> jax.Array:
     """Run one conv through the vector-sparse path.
 
     ``entry`` is a `SparseConv` or a bare `VectorSparse` (legacy 3x3/s1).
@@ -345,8 +452,10 @@ def apply_sparse_conv(x, entry, *, bias=None, fuse_relu=True, residual=None,
     )
 
 
-def apply_sparse_fc(x, entry, *, bias=None, fuse_relu=False, residual=None,
-                    impl: str = "auto"):
+def apply_sparse_fc(x: jax.Array, entry: SparseFC | VectorSparse, *,
+                    bias: jax.Array | None = None, fuse_relu: bool = False,
+                    residual: jax.Array | None = None,
+                    impl: str = "auto") -> jax.Array:
     """Run one FC layer through the vector-sparse path.
 
     ``entry`` is a `SparseFC` or a bare `VectorSparse`.  The encoded matrix
@@ -406,7 +515,7 @@ def net_schema(net: SparseNet) -> dict:
 # Executor
 # --------------------------------------------------------------------------
 
-def _bn_fold(p) -> tuple[np.ndarray, np.ndarray]:
+def _bn_fold(p: dict) -> tuple[np.ndarray, np.ndarray]:
     """Inference BN -> (per-cout scale g, bias b): y*g + b == BN(y)."""
     g = (np.asarray(p["scale"], np.float32)
          / np.sqrt(np.asarray(p["var"], np.float32) + BN_EPS))
@@ -415,7 +524,8 @@ def _bn_fold(p) -> tuple[np.ndarray, np.ndarray]:
     return g, b
 
 
-def _dense_conv(l: Conv, p, x, res):
+def _dense_conv(l: Conv, p: dict, x: jax.Array,
+                res: jax.Array | None) -> jax.Array:
     """Dense oracle for one Conv layer (BN applied explicitly if present)."""
     w = p["w"].astype(jnp.float32)
     y = dense_conv2d(x.astype(jnp.float32), w, stride=l.stride,
@@ -434,7 +544,7 @@ def _dense_conv(l: Conv, p, x, res):
     return y.astype(x.dtype)
 
 
-def _pool(l: Pool, x):
+def _pool(l: Pool, x: jax.Array) -> jax.Array:
     if l.kind == "gap":
         return jnp.mean(x, axis=(1, 2), keepdims=True)
     stride = l.stride or l.size
@@ -450,8 +560,10 @@ def _pool(l: Pool, x):
     raise ValueError(l.kind)
 
 
-def net_apply(net: SparseNet, params, x, *, sparse=None, impl: str = "auto",
-              collect=None, collect_fc=None):
+def net_apply(net: SparseNet, params: dict, x: jax.Array, *,
+              sparse: dict | None = None, impl: str = "auto",
+              collect: list | None = None,
+              collect_fc: list | None = None) -> jax.Array:
     """Walk the graph: x (N, H, W, C) -> logits / features.
 
     sparse: {layer_name: SparseConv | SparseFC | VectorSparse} — layers
@@ -561,13 +673,13 @@ class BatchedApply:
     mesh: object = None
     rules: object = None
 
-    def cache_key(self, shape) -> tuple:
+    def cache_key(self, shape: tuple) -> tuple:
         # id() is stable and unique here: self (and every cached closure)
         # keeps the weight trees alive
         return (self.net.name, id(self.params), id(self.sparse), self.key,
                 self.impl, id(self.mesh), tuple(shape))
 
-    def __call__(self, x):
+    def __call__(self, x: jax.Array) -> jax.Array:
         k = self.cache_key(x.shape)
         fn = self.cache.get(k)
         if fn is None:
@@ -578,7 +690,7 @@ class BatchedApply:
             if self.mesh is not None:
                 from repro.parallel import sharding as shd
                 mesh, rules = self.mesh, self.rules
-                def fn(xx, _j=jitted):
+                def fn(xx: jax.Array, _j: Any = jitted) -> jax.Array:
                     with shd.use_mesh(mesh, rules or shd.SERVE_RULES):
                         return _j(xx)
             else:
@@ -592,7 +704,7 @@ class BatchedApply:
         return len(self.cache)
 
 
-def shard_sparse(sparse: dict, *, ctx=None) -> dict:
+def shard_sparse(sparse: dict, *, ctx: Any = None) -> dict:
     """Device-place a `sparsify` tree under the active mesh context.
 
     FC heads shard over their output strips: `VectorSparse.vals`
@@ -611,7 +723,7 @@ def shard_sparse(sparse: dict, *, ctx=None) -> dict:
     ctx = ctx or shd.current()
     assert ctx is not None, "shard_sparse requires an active use_mesh()"
 
-    def place(arr, axes):
+    def place(arr: jax.Array, axes: tuple) -> jax.Array:
         s = shd.named_sharding(axes, shape=arr.shape, ctx=ctx)
         return jax.device_put(arr, s)
 
@@ -638,7 +750,8 @@ def shard_sparse(sparse: dict, *, ctx=None) -> dict:
     return out
 
 
-def collect_conv_traffic(net: SparseNet, params, x):
+def collect_conv_traffic(net: SparseNet, params: dict,
+                         x: jax.Array) -> list:
     """Forward pass recording (name, conv input NHWC, weight, stride,
     groups, dilation) per conv layer — the input of
     `core.accel_model.network_cycle_reports` / `network_traffic_reports`."""
@@ -651,8 +764,9 @@ def collect_conv_traffic(net: SparseNet, params, x):
 # Generic sparsification (BN folding + vector pruning + remainder strips)
 # --------------------------------------------------------------------------
 
-def sparsify(net: SparseNet, params, density: float, *, vk: int = 32,
-             vn: int = 128, include_fc: bool = True):
+def sparsify(net: SparseNet, params: dict, density: float, *,
+             vk: int = 32, vn: int = 128,
+             include_fc: bool = True) -> tuple[dict, dict]:
     """Vector-prune a whole network to `density` (fraction of kept vectors).
 
     Returns ``(sparse, pruned)``:
@@ -688,6 +802,7 @@ def sparsify(net: SparseNet, params, density: float, *, vk: int = 32,
             spec, wp = sparse_conv_from_dense(
                 w, density, vk=vk, vn=vn, stride=l.stride, groups=l.groups,
                 dilation=l.dilation, prune=prune, dtype=wdt,
+                allow_fallback=l.allow_fallback, path=f"{net.name}/{l.name}",
             )
             spec.bias = jnp.asarray(b, wdt)
             sparse[l.name] = spec
@@ -698,13 +813,12 @@ def sparsify(net: SparseNet, params, density: float, *, vk: int = 32,
             wdt = p["w"].dtype
             w = np.asarray(p["w"], np.float32)
             din, dout = w.shape
-            if din % vk:
+            fg = fc_tile_geometry(din, dout, vk=vk, vn=vn)
+            if fg is None:
                 continue  # non-tileable K: stays dense (none of our nets)
-            vn_l = min(vn, dout)
-            pad = -dout % vn_l
-            wpad = np.pad(w, ((0, 0), (0, pad))) if pad else w
-            wp, mask = prune_vectors_balanced(wpad, density, vk, vn_l)
-            vs = from_mask(jnp.asarray(wp, wdt), mask, vk, vn_l)
+            wpad = np.pad(w, ((0, 0), (0, fg.pad))) if fg.pad else w
+            wp, mask = prune_vectors_balanced(wpad, density, fg.vk, fg.vn)
+            vs = from_mask(jnp.asarray(wp, wdt), mask, fg.vk, fg.vn)
             sparse[l.name] = SparseFC(vs, dout=dout, bias=p["b"])
             pruned[l.name] = {"w": jnp.asarray(wp[:, :dout], wdt),
                               "b": p["b"]}

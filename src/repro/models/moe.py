@@ -18,7 +18,6 @@ logits are -inf (granite 40 -> 48 on tp=16).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 
 import jax
@@ -27,7 +26,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as PS
 
 from repro.parallel import sharding as shd
-from .layers import P, dense, matmul_out_dtype
+from .layers import P, matmul_out_dtype
 
 __all__ = ["MoEConfig", "moe_schema", "moe_apply"]
 

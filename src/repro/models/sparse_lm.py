@@ -25,7 +25,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as PS
 
 from repro.parallel import sharding as shd
-from .layers import P, matmul_out_dtype
+from .layers import P
 
 __all__ = ["sparse_mlp_schema", "sparse_mlp_apply"]
 

@@ -62,7 +62,9 @@ def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
             v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
             upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
             upd = upd + weight_decay * p.astype(jnp.float32)
-            return (-lr * upd).astype(p.dtype), m_new.astype(moment_dtype), v_new.astype(moment_dtype)
+            return ((-lr * upd).astype(p.dtype),
+                    m_new.astype(moment_dtype),
+                    v_new.astype(moment_dtype))
 
         out = jax.tree.map(leaf, grads, state["m"], state["v"], params)
         upds = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))

@@ -8,8 +8,6 @@ Padded vocab entries (vocab rounded up for even sharding) are masked out.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

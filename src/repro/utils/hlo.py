@@ -466,7 +466,8 @@ def analyze(hlo_text: str, entry: str | None = None) -> HloCost:
             called = set()
             for c in comps.values():
                 for ins in c.instrs:
-                    for m in re.finditer(r"(?:condition|body|to_apply|calls)=%?([\w\.\-_]+)", ins.rest):
+                    pat = r"(?:condition|body|to_apply|calls)=%?([\w\.\-_]+)"
+                    for m in re.finditer(pat, ins.rest):
                         called.add(m.group(1))
             roots = [n for n in comps if n not in called]
             entry = next((n for n in roots if "main" in n),

@@ -110,7 +110,6 @@ class TestStructuralFlopSkip:
         """The kernel's grid (and its CostEstimate FLOPs) scale with density —
         the zero weight vectors are structurally absent, like vectors absent
         from the paper's SRAM."""
-        from repro.kernels.vsmm import vsmm_pallas
         k = n = 256
         x = jnp.asarray(rng.standard_normal((64, k)), jnp.float32)
         flops = {}

@@ -1,7 +1,6 @@
 """Chunked vocab-sharded CE vs dense oracle; MeshRules spec derivation."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as PS
 

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import SHAPES, get_config, list_archs
+from repro.configs import get_config, list_archs
 from repro.models import transformer as tfm
 from repro.models.layers import init_params
 from repro.models.frontend import synthetic_embeddings, synthetic_tokens

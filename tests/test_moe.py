@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models.layers import P, init_params
+from repro.models.layers import init_params
 from repro.models.moe import MoEConfig, moe_apply, moe_schema
 
 

@@ -12,8 +12,7 @@ from repro.data import LMBatchSpec, SyntheticImages, SyntheticLM
 from repro.optim import adafactor, adamw, clip_by_global_norm, global_norm
 from repro.optim.schedules import constant, warmup_cosine, warmup_linear
 from repro.parallel.compression import (
-    compressed_psum, dequantize_fp8_block, init_error_state,
-    quantize_fp8_block,
+    compressed_psum, dequantize_fp8_block, quantize_fp8_block,
 )
 
 

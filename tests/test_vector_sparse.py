@@ -5,7 +5,7 @@ import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.core import (
-    VectorSparse, decode, encode, from_mask, prune_vectors_balanced, tile_mask,
+    decode, encode, from_mask, prune_vectors_balanced, tile_mask,
 )
 
 
