@@ -40,6 +40,15 @@ exactly against the committed ``BENCH_serving_replicas.json`` baseline
 additionally cout-shards FC heads over each replica's model-axis devices
 and checks logits parity against the first fleet size.
 
+Chaos / degraded mode (``--chaos``): serves the same request set under
+seeded fault injection (`launch.faults.FaultPlan.random` over a
+``--chaos-replicas`` fleet, one row per ``--chaos-seeds`` entry) and
+reports planned vs fired faults, delivered/refused outcome counts by
+reason, final replica health, degraded images/s vs the fault-free
+reference, a delivered-bit-identical check, and a replay-determinism
+check (the same plan must reproduce the exact outcome/fault/health
+trajectory).  Exits non-zero if either check fails — the CI chaos smoke.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py --arch vscnn-vgg16
 (also: vscnn-resnet18 / vscnn-resnet50 / vscnn-mobilenet-v1 — any CNN
 registry arch; MobileNet exercises the depthwise tap kernels' traffic
@@ -58,6 +67,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.faults import ChaosBackend, FaultPlan
+from repro.launch.scheduler import FleetScheduler
 from repro.launch.serve import CNNServer, ImageRequest
 
 
@@ -246,6 +257,128 @@ def run_replicas(arch: str = "vscnn-vgg16", *, replicas=(1, 2, 4, 8),
     return artifact
 
 
+# --------------------------------------------------------------------------
+# Degraded-mode chaos bench (--chaos): seeded fault injection over the fleet
+# --------------------------------------------------------------------------
+
+def _chaos_serve(backends, plan: FaultPlan, reqs, *, batch: int,
+                 deadline_waves: int | None):
+    """One chaos serve over fresh ChaosBackend wrappers of the shared
+    (stateless) CNN backends; returns (scheduler, wall_s)."""
+    bes = [ChaosBackend(b, plan, replica=i)
+           for i, b in enumerate(backends)]
+    sched = FleetScheduler(bes, batch=batch, deadline_waves=deadline_waves)
+    t0 = time.time()
+    sched.serve(reqs)
+    return sched, time.time() - t0
+
+
+def _outcome_trace(sched) -> dict:
+    return {rid: (o.status, o.reason, o.replica, o.attempts, o.wave)
+            for rid, o in sched.outcomes.items()}
+
+
+def run_chaos(arch: str = "vscnn-vgg16", *, seeds=(0, 1, 2),
+              replicas: int = 3, images: int = 24, batch: int = 4,
+              density: float = 0.5, size: int | None = None,
+              impl: str = "jnp", deadline_waves: int | None = None,
+              out_path: str | None = None) -> dict:
+    """Degraded-mode serving under seeded fault injection.
+
+    One fault-free fleet serve pins the reference logits and throughput;
+    each chaos seed then serves the same request set through the same
+    (shared, stateless) backends wrapped in a fresh `ChaosBackend` fleet.
+    Per-seed columns: planned/fired faults by kind, delivered/refused by
+    reason, final health, deterministic scheduling counters, degraded
+    images/s, a delivered-bit-identical check against the fault-free
+    reference, and a replay check (the same plan served twice must
+    reproduce the exact outcome/fault/health trajectory).
+    """
+    cfg = get_config(arch).reduce()
+    size = size or cfg.image_size
+    srv = CNNServer(cfg, batch=batch, density=density, impl=impl,
+                    replicas=replicas)
+    # warmup: compile every batch bucket off the clock
+    srv.serve(_requests(np.random.default_rng(0), batch * replicas, size))
+    reqs = _requests(np.random.default_rng(1), images, size)
+    t0 = time.time()
+    srv.serve(reqs)
+    ref_wall = time.time() - t0
+    ref_logits = {r.rid: r.logits.tobytes() for r in reqs}
+    ref_ips = images / max(ref_wall, 1e-9)
+    rows = []
+    for seed in seeds:
+        plan = FaultPlan.random(seed, replicas=replicas)
+        reqs_c = _requests(np.random.default_rng(1), images, size)
+        sched, wall = _chaos_serve(srv.backends, plan, reqs_c, batch=batch,
+                                   deadline_waves=deadline_waves)
+        outcomes = sched.outcomes
+        delivered = [rid for rid, o in outcomes.items()
+                     if o.status == "delivered"]
+        refused: dict[str, int] = {}
+        for o in outcomes.values():
+            if o.status == "refused":
+                refused[o.reason] = refused.get(o.reason, 0) + 1
+        fired: dict[str, int] = {}
+        for be in sched.backends:
+            for _, kind in be.injected:
+                fired[kind] = fired.get(kind, 0) + 1
+        # delivered outputs must be bit-identical to the fault-free run
+        bit_identical = all(
+            r.logits is not None
+            and r.logits.tobytes() == ref_logits[r.rid]
+            for r in reqs_c
+            if outcomes[r.rid].status == "delivered")
+        # replay: the same plan on a fresh fleet reproduces the exact
+        # outcome / fault-event / health / wave trajectory
+        sched2, _ = _chaos_serve(
+            srv.backends, plan, _requests(np.random.default_rng(1),
+                                          images, size),
+            batch=batch, deadline_waves=deadline_waves)
+        replay_identical = (
+            _outcome_trace(sched) == _outcome_trace(sched2)
+            and sched.fault_events == sched2.fault_events
+            and sched.health == sched2.health
+            and sched.waves == sched2.waves)
+        rows.append({
+            "chaos_seed": seed,
+            "faults_planned": plan.counts(),
+            "faults_fired": fired,
+            "fault_events": len(sched.fault_events),
+            "delivered": len(delivered),
+            "refused": refused,
+            "health": list(sched.health),
+            "waves": sched.waves,
+            "steals": sched.steals,
+            "images_per_s_degraded": round(
+                len(delivered) / max(wall, 1e-9), 2),
+            "throughput_vs_fault_free": round(
+                (len(delivered) / max(wall, 1e-9)) / max(ref_ips, 1e-9), 3),
+            "wall_s": round(wall, 4),
+            "delivered_bit_identical": bool(bit_identical),
+            "replay_identical": bool(replay_identical),
+        })
+    artifact = {
+        "bench": "cnn_serving_chaos",
+        "arch": arch,
+        "image_size": size,
+        "images": images,
+        "batch": batch,
+        "density": density,
+        "impl": impl,
+        "replicas": replicas,
+        "deadline_waves": deadline_waves,
+        "seeds": list(seeds),
+        "reference": {"images_per_s": round(ref_ips, 2),
+                      "wall_s": round(ref_wall, 4)},
+        "rows": rows,
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(artifact, f, indent=1)
+    return artifact
+
+
 def compare_replicas_baseline(rows: list[dict], baseline: dict
                               ) -> tuple[list[str], list[str]]:
     """Exact comparison of the deterministic scheduling columns against the
@@ -347,7 +480,37 @@ if __name__ == "__main__":
                          "baseline's settings and fail on drift")
     ap.add_argument("--min-efficiency", type=float, default=None,
                     help="fail the gate below this scaling efficiency")
+    ap.add_argument("--chaos", action="store_true",
+                    help="degraded-mode bench: serve under seeded fault "
+                         "injection and report refusals / degraded "
+                         "throughput / replay determinism")
+    ap.add_argument("--chaos-seeds", type=int, nargs="+", default=[0, 1, 2],
+                    help="FaultPlan seeds for --chaos")
+    ap.add_argument("--chaos-replicas", type=int, default=3,
+                    help="fleet size for --chaos")
+    ap.add_argument("--deadline-waves", type=int, default=None,
+                    help="per-request deadline in fleet ticks (--chaos)")
     args = ap.parse_args()
+    if args.chaos:
+        art = run_chaos(args.arch, seeds=tuple(args.chaos_seeds),
+                        replicas=args.chaos_replicas, images=args.images,
+                        batch=args.batch, density=args.density,
+                        size=args.size, impl=args.impl,
+                        deadline_waves=args.deadline_waves,
+                        out_path=args.out)
+        print("reference:", art["reference"])
+        bad = []
+        for r in art["rows"]:
+            print(r)
+            if not r["delivered_bit_identical"]:
+                bad.append(f"seed={r['chaos_seed']}: delivered logits "
+                           f"diverge from the fault-free run")
+            if not r["replay_identical"]:
+                bad.append(f"seed={r['chaos_seed']}: chaos replay is not "
+                           f"deterministic")
+        for b in bad:
+            print("FAIL:", b)
+        sys.exit(1 if bad else 0)
     if args.compare_baseline:
         sys.exit(gate_replicas(args.compare_baseline,
                                min_efficiency=args.min_efficiency,

@@ -151,6 +151,22 @@ def run_selftest() -> bool:
         "    pass\n",
         "scheduler.py", rep=lrep2)
     expect("clock in scheduler branch", "VSC302", lrep2)
+
+    # seed 5: a blanket except in the launch layer must be flagged
+    # (VSC304) — and the same source outside launch/ must stay clean
+    blanket = ("try:\n"
+               "    run.dispatch()\n"
+               "except Exception:\n"
+               "    pass\n")
+    lrep3 = R()
+    lint_source(blanket, "src/repro/launch/scheduler.py", rep=lrep3)
+    expect("blanket except in launch", "VSC304", lrep3)
+    lrep4 = R()
+    lint_source(blanket, "src/repro/kernels/ops.py", rep=lrep4)
+    clean = not any(d.rule == "VSC304" for d in lrep4.errors)
+    print(f"  negative (non-launch blanket except): "
+          f"{'clean' if clean else 'FALSE POSITIVE VSC304'}")
+    ok = ok and clean
     return ok
 
 

@@ -51,6 +51,8 @@ RULES: dict[str, str] = {
     "VSC301": "impl= string literal outside the dispatch vocabulary",
     "VSC302": "clock read feeding scheduler control flow",
     "VSC303": "module-scope environment mutation outside a main() guard",
+    "VSC304": "bare/blanket except in the serving launch layer (swallows "
+              "typed replica faults)",
 }
 
 _SEVERITIES = ("error", "warning")

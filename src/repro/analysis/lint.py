@@ -15,7 +15,14 @@ linters can't know:
           stats/telemetry straight-line code;
   VSC303  module scope must not mutate ``os.environ`` — import order
           then silently decides XLA/JAX flags; mutations belong inside
-          ``main()`` / under ``if __name__ == "__main__":``.
+          ``main()`` / under ``if __name__ == "__main__":``;
+  VSC304  no bare or blanket ``except`` (``except:``, ``except
+          Exception`` / ``BaseException``) in the serving launch layer
+          (`repro/launch/`) — the fleet scheduler's fault tolerance
+          relies on replica faults being *typed*
+          (`launch.faults.FAULT_TYPES`); an overbroad handler between
+          the backend and the scheduler silently swallows the fault and
+          defeats quarantine/requeue (and chaos testing with it).
 """
 from __future__ import annotations
 
@@ -37,6 +44,31 @@ _CLOCK_ATTRS = frozenset({"time", "monotonic", "perf_counter"})
 # VSC302 only applies where timing-dependent branches are a correctness
 # hazard (the serving scheduler's placement/retry logic)
 _SCHEDULER_HINTS = ("scheduler",)
+
+# VSC304 applies to the serving launch layer, where fault handling must
+# stay typed (FAULT_TYPES) for quarantine/requeue to see replica faults
+_LAUNCH_HINTS = ("launch",)
+
+_BLANKET_EXCEPTIONS = frozenset({"Exception", "BaseException"})
+
+
+def _blanket_name(handler: ast.ExceptHandler) -> str | None:
+    """The blanket type a handler catches, if any: None type (bare
+    ``except:``), ``Exception``/``BaseException`` by name or attribute,
+    including inside a tuple of types."""
+    t = handler.type
+    if t is None:
+        return "bare except:"
+    types = list(t.elts) if isinstance(t, ast.Tuple) else [t]
+    for node in types:
+        name = None
+        if isinstance(node, ast.Name):
+            name = node.id
+        elif isinstance(node, ast.Attribute):
+            name = node.attr
+        if name in _BLANKET_EXCEPTIONS:
+            return f"except {name}"
+    return None
 
 
 def _is_clock_call(node: ast.AST) -> bool:
@@ -96,8 +128,10 @@ def lint_source(src: str, filename: str, *, rep: Report) -> None:
             return
         rep.error(rule, f"{filename}:{lineno}", message, hint)
 
+    parts = pathlib.PurePath(filename).parts
     is_scheduler = any(h in pathlib.PurePath(filename).name
                        for h in _SCHEDULER_HINTS)
+    is_launch = any(h in parts for h in _LAUNCH_HINTS)
 
     # VSC301 — impl= literals
     for node in ast.walk(tree):
@@ -128,6 +162,21 @@ def lint_source(src: str, filename: str, *, rep: Report) -> None:
                             "condition",
                             hint="read the clock into stats outside the "
                                  "branch; decide on counters/queue state")
+
+    # VSC304 — blanket excepts in the launch layer
+    if is_launch:
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            blanket = _blanket_name(node)
+            if blanket is not None:
+                emit(
+                    "VSC304", node.lineno,
+                    f"{blanket} in the serving launch layer swallows typed "
+                    f"replica faults",
+                    hint="catch the concrete exception types (e.g. "
+                         "launch.faults.FAULT_TYPES) so the fleet "
+                         "scheduler's quarantine/requeue sees the fault")
 
     # VSC303 — module-scope os.environ mutation
     def check_stmt(st: ast.stmt) -> None:

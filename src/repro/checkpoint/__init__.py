@@ -1,2 +1,4 @@
 """Atomic async checkpointing with elastic-reshard restore."""
-from .manager import CheckpointManager
+from .manager import CheckpointError, CheckpointManager
+
+__all__ = ["CheckpointError", "CheckpointManager"]

@@ -1,9 +1,17 @@
 """Fault-tolerant checkpointing: atomic, async, elastic-reshard restore.
 
 Layout: <dir>/step_<k>/ contains one .npy per leaf plus manifest.json
-(tree paths, shapes, dtypes, step, user metadata).  Writes go to a temp
-directory and are renamed into place — a crash mid-save never corrupts the
-latest checkpoint (restore scans for the newest *complete* step).
+(tree paths, shapes, dtypes, per-leaf sha256 checksums, step, user
+metadata).  Writes go to a temp directory and are renamed into place — a
+crash mid-save never corrupts the latest checkpoint (restore scans for
+the newest *complete* step).
+
+Restore verifies integrity before deserializing anything into the model:
+every leaf file's sha256 is checked against the manifest, so a corrupted,
+truncated, or torn checkpoint raises `CheckpointError` *naming the bad
+array* instead of silently loading garbage weights.  Manifests written
+before checksums existed restore with a shape/dtype-only check
+(back-compat).
 
 Restore is *elastic*: arrays are loaded host-side and re-placed with
 whatever shardings the new mesh wants (`device_put` with NamedSharding), so
@@ -13,22 +21,37 @@ would write per-shard files from each host — same manifest format.)
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
+import zlib
 
 import jax
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "CheckpointError"]
 
 _MANIFEST = "manifest.json"
+
+
+class CheckpointError(Exception):
+    """A checkpoint failed its integrity check (corrupted / torn / missing
+    data); the message names the offending array."""
 
 
 def _leaf_paths(tree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     return [(jax.tree_util.keystr(p), v) for p, v in flat]
+
+
+def _sha256(fname: str) -> str:
+    h = hashlib.sha256()
+    with open(fname, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 class CheckpointManager:
@@ -54,11 +77,13 @@ class CheckpointManager:
             manifest = {"step": step, "metadata": metadata or {}, "leaves": []}
             for i, (path, leaf) in enumerate(_leaf_paths(host_tree)):
                 fname = f"{i:05d}.npy"
-                np.save(os.path.join(tmp, fname), leaf, allow_pickle=False)
+                fpath = os.path.join(tmp, fname)
+                np.save(fpath, leaf, allow_pickle=False)
                 manifest["leaves"].append(
                     {"path": path, "file": fname,
                      "shape": list(np.shape(leaf)),
-                     "dtype": str(np.asarray(leaf).dtype)}
+                     "dtype": str(np.asarray(leaf).dtype),
+                     "sha256": _sha256(fpath)}
                 )
             with open(os.path.join(tmp, _MANIFEST), "w") as f:
                 json.dump(manifest, f)
@@ -98,17 +123,53 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_leaf(self, d: str, entry: dict) -> np.ndarray:
+        """Load one leaf file with its integrity check: missing file,
+        checksum mismatch (bit-rot / torn write) or an unparseable .npy all
+        raise `CheckpointError` naming the array."""
+        key = entry["path"]
+        fpath = os.path.join(d, entry["file"])
+        if not os.path.exists(fpath):
+            raise CheckpointError(
+                f"checkpoint {d} is missing the data file for array {key} "
+                f"({entry['file']})")
+        want = entry.get("sha256")
+        if want is not None:
+            got = _sha256(fpath)
+            if got != want:
+                raise CheckpointError(
+                    f"checksum mismatch for array {key} in {d}: manifest "
+                    f"sha256 {want[:12]}.. but file hashes {got[:12]}.. "
+                    f"(corrupted or torn checkpoint)")
+        try:
+            arr = np.load(fpath, allow_pickle=False)
+        except (ValueError, OSError, EOFError, zlib.error) as e:
+            raise CheckpointError(
+                f"array {key} in {d} failed to deserialize: {e}") from e
+        if list(arr.shape) != list(entry["shape"]):
+            raise CheckpointError(
+                f"array {key} in {d} has shape {list(arr.shape)} but the "
+                f"manifest recorded {entry['shape']}")
+        return arr
+
     def restore(self, target, step: int | None = None, *, shardings=None):
         """Load into the structure of `target` (a pytree of arrays or
         ShapeDtypeStructs).  `shardings`: optional matching tree of
         NamedShardings for elastic re-placement on the current mesh.
+        Every leaf is integrity-checked against the manifest (sha256)
+        before use — see `CheckpointError`.
         Returns (tree, step, metadata)."""
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
         d = os.path.join(self.dir, f"step_{step}")
-        with open(os.path.join(d, _MANIFEST)) as f:
-            manifest = json.load(f)
+        try:
+            with open(os.path.join(d, _MANIFEST)) as f:
+                manifest = json.load(f)
+        except json.JSONDecodeError as e:
+            raise CheckpointError(
+                f"manifest of {d} is not valid JSON (torn write?): {e}"
+            ) from e
         by_path = {l["path"]: l for l in manifest["leaves"]}
 
         flat, treedef = jax.tree_util.tree_flatten_with_path(target)
@@ -121,7 +182,7 @@ class CheckpointManager:
             key = jax.tree_util.keystr(path)
             if key not in by_path:
                 raise KeyError(f"checkpoint missing leaf {key}")
-            arr = np.load(os.path.join(d, by_path[key]["file"]))
+            arr = self._load_leaf(d, by_path[key])
             if tuple(arr.shape) != tuple(tgt.shape):
                 raise ValueError(
                     f"shape mismatch for {key}: ckpt {arr.shape} vs target {tgt.shape}"

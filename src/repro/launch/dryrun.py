@@ -137,6 +137,7 @@ def main():
             rows.append(run_cell(arch, shape, multi_pod=args.multipod,
                                  overrides=overrides,
                                  tag="optimized" if args.optimized else "baseline"))
+        # vscheck: ignore[VSC304] — sweep driver, not a serving fault path
         except Exception as e:  # a failing cell is a bug; record and continue
             traceback.print_exc()
             rows.append({"arch": arch, "shape": shape, "status": "error",

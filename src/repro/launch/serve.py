@@ -45,6 +45,17 @@ LM requests carry per-request sampling params (``temperature`` /
 ``top_k``); temperature 0 is greedy argmax, bit-identical to the
 pre-sampling decode path.
 
+Fault tolerance: both backends validate requests at admission
+(`validate_request` — malformed images / prompts become structured
+`RequestOutcome` refusals, never mid-wave shape errors), `CNNBackend`
+guards its outputs (`check_emission` — non-finite logits quarantine the
+producing replica), and `CNNServer` accepts a ``fault_plan``
+(`launch.faults.FaultPlan`) that wraps every replica in a `ChaosBackend`
+for deterministic chaos runs, plus ``max_queue`` / ``deadline_waves`` /
+``max_attempts`` budgets forwarded to the schedulers.  Per-request
+outcomes of the last serve land on ``srv.outcomes`` (and each request's
+``.outcome``).
+
 Usage (CPU examples):
   python -m repro.launch.serve --arch rwkv6-3b --requests 16 --tokens 32
   python -m repro.launch.serve --cnn vscnn-vgg16 --requests 16 --batch 8
@@ -62,6 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.faults import ChaosBackend, FaultPlan
 from repro.launch.mesh import make_local_mesh
 from repro.launch.scheduler import FleetScheduler, LockstepScheduler
 from repro.models import transformer as tfm
@@ -238,6 +250,31 @@ class LMBackend:
 
     # -- scheduler protocol -------------------------------------------------
 
+    def validate_request(self, req: Request) -> str | None:
+        """Admission-time validation: a reason string refuses the request
+        (structured `RequestOutcome`) before it can poison a batch."""
+        p = req.prompt
+        if not isinstance(p, np.ndarray):
+            return f"not_an_array:{type(p).__name__}"
+        if p.ndim != 1:
+            return f"bad_rank:{p.ndim}"
+        if not np.issubdtype(p.dtype, np.integer):
+            return f"bad_dtype:{p.dtype}"
+        if len(p) == 0:
+            return "empty_prompt"
+        if req.max_new < 1:
+            return f"bad_max_new:{req.max_new}"
+        padded = _round_up(len(p), self.len_bucket)
+        if padded >= self.capacity:
+            return f"prompt_too_long:{padded}>={self.capacity}"
+        return None
+
+    def reset(self, req: Request) -> None:
+        """Clear partial progress before a fault-displaced re-serve.  The
+        regenerated stream is bit-identical: sampling keys fold (seed, rid,
+        emission count) and the count restarts at 0 with the request."""
+        req.out.clear()
+
     def bucket_key(self, req: Request):
         return _round_up(max(len(req.prompt), 1), self.len_bucket)
 
@@ -320,7 +357,8 @@ class Server:
     """Batched LM serving: prefill/decode behind the lockstep scheduler."""
 
     def __init__(self, cfg, *, batch: int, capacity: int, seed: int = 0,
-                 mesh=None, eos_id: int | None = None, len_bucket: int = 16):
+                 mesh=None, eos_id: int | None = None, len_bucket: int = 16,
+                 max_queue: int | None = None):
         assert cfg.embed_inputs, "serving driver expects token-input archs"
         self.cfg = cfg
         self.batch = batch
@@ -332,7 +370,13 @@ class Server:
         self.backend = LMBackend(cfg, self.params, self.mesh,
                                  capacity=capacity, eos_id=eos_id,
                                  len_bucket=len_bucket)
-        self.scheduler = LockstepScheduler(self.backend, batch=batch)
+        self.scheduler = LockstepScheduler(self.backend, batch=batch,
+                                           max_queue=max_queue)
+
+    @property
+    def outcomes(self) -> dict:
+        """Per-request terminal outcomes of the last `serve` call."""
+        return self.scheduler.outcomes
 
     @staticmethod
     def _legacy_stats(s: dict) -> dict:
@@ -397,13 +441,33 @@ class CNNBackend:
     def __init__(self, net, params, *, sparse=None, impl: str = "auto",
                  density: float | None = None, image_size: int | None = None,
                  pad_multiple: int = 8, mesh=None, rules=None):
-        from repro.models.graph import BatchedApply
+        from repro.models.graph import (BatchedApply, input_refusal,
+                                        output_finite)
         self.image_size = image_size
         self.pad_multiple = pad_multiple
+        self.channels = next((l.cin for l in net.conv_layers()), None)
+        self._input_refusal = input_refusal
+        self._output_finite = output_finite
         self.apply = BatchedApply(net, params, sparse=sparse, impl=impl,
                                   key=(density,), mesh=mesh, rules=rules)
 
     # -- scheduler protocol -------------------------------------------------
+
+    def validate_request(self, req: ImageRequest) -> str | None:
+        """Admission-time validation via `models.graph.input_refusal`:
+        malformed images (wrong type/rank/dtype, non-finite values,
+        oversize for a fixed-input net) become structured refusals."""
+        return self._input_refusal(req.image, max_size=self.image_size,
+                                   channels=self.channels)
+
+    def check_emission(self, emission) -> bool:
+        """Output guard: non-finite logits quarantine the replica that
+        produced them (`models.graph.output_finite`)."""
+        return self._output_finite(emission)
+
+    def reset(self, req: ImageRequest) -> None:
+        req.out.clear()
+        req.logits = None
 
     def bucket_key(self, req: ImageRequest):
         h, w, c = req.image.shape
@@ -542,9 +606,13 @@ class CNNServer:
     def __init__(self, cfg, *, batch: int, impl: str = "auto",
                  density: float | None = None, sparse: bool = True,
                  seed: int = 0, pad_multiple: int = 8, replicas: int = 1,
-                 shard_fc: bool = False, validate: bool = True):
+                 shard_fc: bool = False, validate: bool = True,
+                 fault_plan: FaultPlan | None = None,
+                 max_queue: int | None = None,
+                 deadline_waves: int | None = None, max_attempts: int = 3):
         self.cfg = cfg
         self.replicas = replicas
+        self.fault_plan = fault_plan
         self.net = cfg.build()
         self.density = cfg.weight_density if density is None else density
         if validate:
@@ -557,13 +625,16 @@ class CNNServer:
             self.sparse, _ = self.net.sparsify(
                 self.params, self.density, vk=cfg.vk, vn=cfg.vn)
         image_size = cfg.image_size if cfg.fixed_image_size else None
-        if replicas == 1 and not shard_fc:
+        fleet = (replicas > 1 or shard_fc or fault_plan is not None
+                 or deadline_waves is not None)
+        if not fleet:
             self.backend = CNNBackend(
                 self.net, self.params, sparse=self.sparse, impl=impl,
                 density=self.density if sparse else None,
                 image_size=image_size, pad_multiple=pad_multiple)
             self.backends = [self.backend]
-            self.scheduler = LockstepScheduler(self.backend, batch=batch)
+            self.scheduler = LockstepScheduler(self.backend, batch=batch,
+                                               max_queue=max_queue)
         else:
             self.group = ReplicaGroup(
                 self.net, self.params, sparse=self.sparse, impl=impl,
@@ -571,8 +642,18 @@ class CNNServer:
                 image_size=image_size, pad_multiple=pad_multiple,
                 replicas=replicas, shard_fc=shard_fc, validate=False)
             self.backends = self.group.backends
+            if fault_plan is not None:
+                self.backends = [ChaosBackend(b, fault_plan, replica=i)
+                                 for i, b in enumerate(self.backends)]
             self.backend = self.backends[0]
-            self.scheduler = FleetScheduler(self.backends, batch=batch)
+            self.scheduler = FleetScheduler(
+                self.backends, batch=batch, max_queue=max_queue,
+                deadline_waves=deadline_waves, max_attempts=max_attempts)
+
+    @property
+    def outcomes(self) -> dict:
+        """Per-request terminal outcomes of the last `serve` call."""
+        return self.scheduler.outcomes
 
     def serve(self, requests: list[ImageRequest]) -> list[dict]:
         stats = self.scheduler.serve(list(requests))
@@ -620,6 +701,13 @@ def main():
                     help="LM sampling temperature (0 = greedy)")
     ap.add_argument("--top-k", type=int, default=0,
                     help="LM top-k truncation (0 = full vocab)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="CNN fleet: inject a seeded FaultPlan "
+                         "(deterministic chaos; forces the fleet path)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission depth (load shedding)")
+    ap.add_argument("--deadline-waves", type=int, default=None,
+                    help="CNN fleet: per-request deadline in fleet ticks")
     args = ap.parse_args()
     if (args.arch is None) == (args.cnn is None):
         ap.error("choose exactly one of --arch (LM) or --cnn")
@@ -634,8 +722,12 @@ def main():
                     rid=i,
                     image=rng.standard_normal((s, s, 3)).astype(np.float32))
                 for i in range(args.requests)]
+        plan = (None if args.chaos_seed is None else FaultPlan.random(
+            args.chaos_seed, replicas=max(args.replicas, 1)))
         srv = CNNServer(cfg, batch=args.batch, impl=args.impl,
-                        replicas=args.replicas, shard_fc=args.shard_fc)
+                        replicas=args.replicas, shard_fc=args.shard_fc,
+                        fault_plan=plan, max_queue=args.max_queue,
+                        deadline_waves=args.deadline_waves)
         t0 = time.time()
         stats = srv.serve(reqs)
         wall = time.time() - t0
@@ -644,7 +736,19 @@ def main():
               f"{tot / max(wall, 1e-9):.1f} img/s "
               f"(density {srv.density}, batch {args.batch}, "
               f"replicas {args.replicas}"
-              f"{', shard-fc' if args.shard_fc else ''})")
+              f"{', shard-fc' if args.shard_fc else ''}"
+              f"{f', chaos seed {args.chaos_seed}' if plan else ''})")
+        outcomes = list(srv.outcomes.values())
+        refused = [o for o in outcomes if o.status == "refused"]
+        if plan is not None or refused:
+            print(f"  outcomes: {len(outcomes) - len(refused)} delivered, "
+                  f"{len(refused)} refused "
+                  f"{sorted({o.reason for o in refused})}")
+            if plan is not None:
+                sch = srv.scheduler
+                print(f"  plan: {plan.describe()}")
+                print(f"  health: {sch.health}  "
+                      f"faults fired: {len(sch.fault_events)}")
         for st in stats:
             print("  ", {k: (round(v, 4) if isinstance(v, float) else v)
                          for k, v in st.items()})

@@ -642,6 +642,47 @@ def net_apply(net: SparseNet, params: dict, x: jax.Array, *,
     return x
 
 
+def input_refusal(image: Any, *, max_size: int | None = None,
+                  channels: int | None = None) -> str | None:
+    """Admission-time validation of one serving input image.
+
+    Returns a machine-readable refusal reason, or None when the image is
+    servable.  Serving backends call this *before* a request can join a
+    batch, so a malformed input becomes a structured refusal instead of a
+    mid-wave shape/dtype error that takes the whole batch down.  The
+    checks mirror what `net_apply` actually requires of one (H, W, C)
+    image: a rank-3 float array of finite values, within the net's fixed
+    input size (``max_size``) when it has one.
+    """
+    if not isinstance(image, np.ndarray):
+        return f"not_an_array:{type(image).__name__}"
+    if image.ndim != 3:
+        return f"bad_rank:{image.ndim}"
+    if not np.issubdtype(image.dtype, np.floating):
+        return f"bad_dtype:{image.dtype}"
+    if image.size == 0:
+        return "empty_image"
+    h, w, c = image.shape
+    if channels is not None and c != channels:
+        return f"bad_channels:{c}"
+    if max_size is not None and max(h, w) > max_size:
+        return f"oversize:{h}x{w}>{max_size}"
+    if not bool(np.isfinite(image).all()):
+        return "non_finite_input"
+    return None
+
+
+def output_finite(emission: Any) -> bool:
+    """Output-validation guard predicate: True iff every value in one
+    emission (a logits row) is finite.  The fleet scheduler uses this to
+    quarantine a replica whose wave produced NaN/inf instead of delivering
+    the garbage (`launch.scheduler.FleetScheduler`)."""
+    arr = np.asarray(emission)
+    if not np.issubdtype(arr.dtype, np.floating):
+        return True
+    return bool(np.isfinite(arr).all())
+
+
 @dataclasses.dataclass
 class BatchedApply:
     """Batched serving entry point: `net_apply` behind a jit-compile cache.

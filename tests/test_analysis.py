@@ -251,6 +251,35 @@ class TestLint:
             "except KeyError:\n    pass\n", "f.py", rep=rep)
         assert any(d.rule == "VSC303" for d in rep.errors)
 
+    def test_blanket_except_in_launch_vsc304(self):
+        src = ("try:\n    run.dispatch()\n"
+               "except Exception:\n    pass\n")
+        rep = Report()
+        lint_source(src, "src/repro/launch/scheduler.py", rep=rep)
+        assert any(d.rule == "VSC304" for d in rep.errors)
+        # bare except and tuple-smuggled blankets are caught too
+        for body in ("except:", "except (ValueError, BaseException):"):
+            rep = Report()
+            lint_source(f"try:\n    f()\n{body}\n    pass\n",
+                        "src/repro/launch/serve.py", rep=rep)
+            assert any(d.rule == "VSC304" for d in rep.errors), body
+        # typed handlers in launch are fine
+        rep = Report()
+        lint_source("try:\n    f()\nexcept (ValueError, KeyError):\n"
+                    "    pass\n", "src/repro/launch/serve.py", rep=rep)
+        assert not rep.errors
+        # the same blanket outside launch/ is out of scope
+        rep = Report()
+        lint_source(src, "src/repro/kernels/ops.py", rep=rep)
+        assert not rep.errors
+        # waivers work for VSC304 like the other lint rules
+        rep = Report()
+        lint_source("try:\n    f()\n"
+                    "# vscheck: ignore[VSC304] - sweep driver\n"
+                    "except Exception:\n    pass\n",
+                    "src/repro/launch/dryrun.py", rep=rep)
+        assert not rep.errors
+
     def test_inline_waiver_covers_next_line(self):
         rep = Report()
         lint_source(

@@ -233,11 +233,81 @@ class TestCNNServing:
         assert widths == {4, 1}
 
     def test_fixed_input_rejects_oversize(self):
+        """An oversize image for a fixed-input net is refused at admission
+        with a structured outcome — it never reaches a batch (and never
+        takes down the serve)."""
         cfg = get_config("vscnn-vgg16").reduce()   # image_size 32
         srv = CNNServer(cfg, batch=2, seed=0)
         big = ImageRequest(rid=0, image=np.zeros((48, 48, 3), np.float32))
-        with pytest.raises(ValueError, match="fixed input"):
-            srv.serve([big])
+        stats = srv.serve([big])
+        assert stats == []
+        assert big.outcome.status == "refused"
+        assert big.outcome.reason.startswith("invalid:oversize")
+        assert srv.outcomes[0] is big.outcome
+
+    def test_malformed_requests_refused(self):
+        """Every malformed-input arm becomes a structured refusal, and
+        valid neighbors in the same serve still get answers."""
+        cfg = get_config("vscnn-vgg16").reduce()
+        srv = CNNServer(cfg, batch=2, seed=0)
+        s = cfg.image_size
+        good = ImageRequest(
+            rid=0, image=np.ones((s, s, 3), np.float32))
+        bad = [
+            ImageRequest(rid=1, image=[[1.0]]),                # not ndarray
+            ImageRequest(rid=2, image=np.ones((s, s), np.float32)),
+            ImageRequest(rid=3, image=np.ones((s, s, 3), np.int32)),
+            ImageRequest(rid=4, image=np.full((s, s, 3), np.nan,
+                                              np.float32)),
+        ]
+        srv.serve([good] + bad)
+        assert good.outcome.status == "delivered"
+        assert good.out  # got a class
+        reasons = [r.outcome.reason for r in bad]
+        assert reasons[0].startswith("invalid:not_an_array")
+        assert reasons[1].startswith("invalid:bad_rank")
+        assert reasons[2].startswith("invalid:bad_dtype")
+        assert reasons[3] == "invalid:non_finite_input"
+
+    def test_lm_malformed_requests_refused(self, lm_server):
+        """LM arm: empty prompts, wrong dtype/rank, bad budgets and
+        over-capacity prompts are refused at admission; the valid request
+        in the same serve still completes."""
+        srv = lm_server
+        good = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new=2)
+        bad = [
+            Request(rid=1, prompt=np.zeros(0, np.int32), max_new=2),
+            Request(rid=2, prompt=np.ones(4, np.float32), max_new=2),
+            Request(rid=3, prompt=np.ones((2, 2), np.int32), max_new=2),
+            Request(rid=4, prompt=np.arange(4, dtype=np.int32), max_new=0),
+            Request(rid=5, prompt=np.arange(100, dtype=np.int32),
+                    max_new=2),   # capacity 32
+        ]
+        srv.serve([good] + bad)
+        assert good.outcome.status == "delivered"
+        assert len(good.out) == 2
+        reasons = {r.rid: r.outcome.reason for r in bad}
+        assert reasons[1] == "invalid:empty_prompt"
+        assert reasons[2].startswith("invalid:bad_dtype")
+        assert reasons[3].startswith("invalid:bad_rank")
+        assert reasons[4].startswith("invalid:bad_max_new")
+        assert reasons[5].startswith("invalid:prompt_too_long")
+        for r in bad:
+            assert r.out == []
+
+    def test_lockstep_max_queue_sheds(self):
+        """Bounded admission: requests beyond the depth are shed with a
+        queue_full refusal, the rest are served."""
+        cfg = get_config("vscnn-vgg16").reduce()
+        srv = CNNServer(cfg, batch=2, seed=0, max_queue=3)
+        s = cfg.image_size
+        reqs = [ImageRequest(rid=i, image=np.ones((s, s, 3), np.float32))
+                for i in range(5)]
+        srv.serve(reqs)
+        statuses = [r.outcome.status for r in reqs]
+        assert statuses == ["delivered"] * 3 + ["refused"] * 2
+        assert all(r.outcome.reason == "queue_full" for r in reqs[3:])
 
     def test_dense_path_serves(self):
         """sparse=False routes the same scheduler through plain XLA convs —
