@@ -251,7 +251,7 @@ def _measured_vs_modeled(net, params, x, density) -> dict:
 def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
                 image_size: int = 32, num_classes: int = 200, batch: int = 1,
                 out_path: str | None = None,
-                measure: bool = True) -> list[dict]:
+                measure: bool = True, dtype: str = "f32") -> list[dict]:
     """Per-network per-layer speedup-vs-density through the graph executor.
 
     For each density: sparsify the whole network (BN folded, residuals
@@ -266,12 +266,25 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
     the calibrated model's ``predicted_us`` — and the FC head gets its own
     (ungated) row.  ``out_path`` writes the rows as a JSON artifact
     (``BENCH_<net>.json`` in CI).
+
+    ``dtype="int8"`` runs the compound sparsity x precision path: weights
+    quantized per-cout at sparsify time (power-of-two scales), activations
+    quantized per-tensor at apply time, int32 accumulation, dequant fused
+    into the epilogue.  The traffic model keys itemsizes off the stored
+    weight dtype (int8 activation/weight bytes, f32 output bytes), and
+    every ``__net__`` row gains int8-vs-f32 output-agreement columns
+    (``max_abs_dlogit_vs_f32``, ``top1_match_vs_f32``) against the
+    sparse-f32 forward at the same density on the same seeded input.
+    The calibrated measured-vs-modeled columns are f32-only and skipped.
     """
     from repro.core.accel_model import PE_4_14_3, aggregate, \
         network_cycle_reports, network_traffic_reports
     from repro.models.graph import collect_conv_traffic, net_apply, sparsify
     from repro.models.layers import init_params
 
+    if dtype not in ("f32", "int8"):
+        raise ValueError(f"dtype must be 'f32' or 'int8', got {dtype!r}")
+    int8 = dtype == "int8"
     net = _net_builders()[net_name](num_classes, image_size=image_size)
     params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
     rng = np.random.default_rng(3)
@@ -281,7 +294,8 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
     rows = []
     base_us = None
     for density in densities:
-        sparse, pruned = sparsify(net, params, density)
+        sparse, pruned = sparsify(net, params, density,
+                                  dtype="int8" if int8 else None)
         fn = jax.jit(lambda xx: net_apply(net, params, xx, sparse=sparse,
                                           impl="jnp"))
         fn(x).block_until_ready()
@@ -292,13 +306,28 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
         us = (time.time() - t0) / 3 * 1e6
         if base_us is None:
             base_us = us  # density 1.0 reference
+        agreement = {}
+        if int8:
+            # output agreement vs the sparse-f32 forward at the same
+            # density (the dense-f32 reference is the density-1.0 row)
+            sparse_f, _ = sparsify(net, params, density)
+            ref = np.asarray(net_apply(net, params, x, sparse=sparse_f,
+                                       impl="jnp"))
+            got = np.asarray(out)
+            agreement = {
+                "max_abs_dlogit_vs_f32": round(
+                    float(np.abs(got - ref).max()), 6),
+                "top1_match_vs_f32": round(
+                    float((got.argmax(-1) == ref.argmax(-1)).mean()), 4),
+            }
         # cycle model on the pruned weights + real forward-pass activations,
-        # DRAM traffic model on the encoded geometry
+        # DRAM traffic model on the encoded geometry (itemsizes keyed off
+        # the stored weight dtype — int8 in/weight bytes, f32 out bytes)
         traffic = collect_conv_traffic(net, pruned, x[:1])
         reports = network_cycle_reports(traffic, pe)
         byte_reports = dict(network_traffic_reports(traffic, sparse))
         measured = _measured_vs_modeled(net, params, x, density) \
-            if measure else {}
+            if measure and not int8 else {}
         for name, rep in reports:
             layer = next(l for l in net.conv_layers() if l.name == name)
             tr = byte_reports[name]
@@ -353,11 +382,13 @@ def run_network(net_name: str = "resnet18", densities=(1.0, 0.5, 0.25), *,
                               for t in byte_reports.values()),
             "bytes_stack": sum(t["stack"].bytes_accessed
                                for t in byte_reports.values()),
+            **agreement,
         })
     if out_path:
         artifact = {
             "bench": f"{net_name}_per_layer",
             "net": net_name,
+            "dtype": dtype,
             "image_size": image_size,
             "num_classes": num_classes,
             "batch": batch,
@@ -453,6 +484,7 @@ def gate_baseline(baseline_path: str, *, tol: float = 0.10,
         image_size=baseline["image_size"],
         num_classes=baseline["num_classes"],
         batch=baseline.get("batch", 1),
+        dtype=baseline.get("dtype", "f32"),
         out_path=out_path,
     )
     failures, lines = compare_baseline(rows, baseline, tol=tol)
@@ -473,6 +505,58 @@ def gate_baseline(baseline_path: str, *, tol: float = 0.10,
     return 0
 
 
+def gate_int8_traffic(*, ratio_max: float = 0.55) -> bool:
+    """Per-layer dtype half of the traffic gate: on every weight-carrying
+    layer of resnet18 (every conv, both input layouts, plus the FC head)
+    the int8 contract's modeled HBM bytes must be strictly below the f32
+    contract's — and at most ``ratio_max`` of it (int8 activations+weights
+    at 1 byte, the f32 output stream unchanged)."""
+    from repro.core.accel_model import network_traffic_reports
+    from repro.kernels.plan import fc_plan
+    from repro.models.graph import collect_conv_traffic, sparsify
+    from repro.models.layers import init_params
+
+    net = _net_builders()["resnet18"](200, image_size=32)
+    params = init_params(net.schema(), jax.random.PRNGKey(0), jnp.float32)
+    x = jnp.asarray(
+        np.random.default_rng(3).standard_normal((1, 32, 32, 3)),
+        jnp.float32)
+    ok = True
+    worst = 0.0
+    per_layer: dict[str, dict[str, int]] = {}
+    for dt in ("f32", "int8"):
+        sparse, pruned = sparsify(net, params, 0.5,
+                                  dtype="int8" if dt == "int8" else None)
+        traffic = collect_conv_traffic(net, pruned, x)
+        for name, tr in network_traffic_reports(traffic, sparse):
+            for impl in ("halo", "stack"):
+                per_layer.setdefault(f"{name}[{impl}]", {})[dt] = \
+                    tr[impl].bytes_accessed
+        # FC head: quote the vsmm plan's cost under this dtype contract
+        fc = sparse.get("fc")
+        if fc is not None:
+            a_i, w_i, o_i = (1, 1, 4) if dt == "int8" else (4, 4, 4)
+            plan = fc_plan(
+                m=1, k=fc.vs.shape[0], s_steps=fc.vs.nnz_per_strip,
+                vk=fc.vs.vk, vn=fc.vs.vn, nb=fc.vs.vals.shape[0],
+                has_bias=True, has_scale=dt == "int8", itemsize=a_i,
+                w_itemsize=w_i, out_itemsize=o_i)
+            per_layer.setdefault("fc[vsmm]", {})[dt] = \
+                plan.cost.bytes_accessed
+    for name, b in sorted(per_layer.items()):
+        r = b["int8"] / b["f32"]
+        worst = max(worst, r)
+        bad = not (b["int8"] < b["f32"] and r <= ratio_max)
+        if bad:
+            print(f"FAIL: {name}: int8 {b['int8']:,} B vs f32 "
+                  f"{b['f32']:,} B (ratio {r:.3f} > {ratio_max})")
+            ok = False
+    print(f"int8 traffic gate: {len(per_layer)} weight-carrying layer "
+          f"rows, worst int8/f32 byte ratio {worst:.3f} "
+          f"(bound {ratio_max})")
+    return ok
+
+
 def gate_traffic() -> int:
     """CI smoke gate for the halo layout's bandwidth claim.
 
@@ -481,7 +565,9 @@ def gate_traffic() -> int:
     the stack path — on two geometries: the ResNet 7x7/s2 stem and a
     MobileNetV1 depthwise 3x3/s2 layer (512 channels, the stage-4
     downsample), each at the ImageNet size and the reduced CI size.
-    Returns a process exit code.
+    Also asserts the int8 dtype contract's modeled bytes are strictly
+    below (and at most 0.55x) the f32 contract's on every weight-carrying
+    resnet18 layer (`gate_int8_traffic`).  Returns a process exit code.
     """
     from repro.core import conv_cin_major
     from repro.core.accel_model import conv_layer_traffic
@@ -543,6 +629,8 @@ def gate_traffic() -> int:
             print("FAIL: halo modeled bytes not strictly below stack (dw)")
             ok = False
 
+    ok &= gate_int8_traffic()
+
     print("traffic gate:", "PASS" if ok else "FAIL")
     return 0 if ok else 1
 
@@ -570,6 +658,11 @@ if __name__ == "__main__":
                     help="regression tolerance for --compare-baseline")
     ap.add_argument("--size", type=int, default=32)
     ap.add_argument("--classes", type=int, default=200)
+    ap.add_argument("--dtype", default="f32", choices=["f32", "int8"],
+                    help="weight/activation precision for the per-network "
+                         "bench: int8 runs the compound sparsity x "
+                         "precision path with output-agreement columns "
+                         "vs the sparse-f32 forward")
     ap.add_argument("--out", default=None,
                     help="write rows as a JSON artifact "
                          "(e.g. BENCH_resnet18.json)")
@@ -582,7 +675,8 @@ if __name__ == "__main__":
     net = args.net or ("resnet18" if args.resnet18 else None)
     if net:
         for r in run_network(net, image_size=args.size,
-                             num_classes=args.classes, out_path=args.out):
+                             num_classes=args.classes, dtype=args.dtype,
+                             out_path=args.out):
             print(r)
     else:
         for r in run():

@@ -113,14 +113,33 @@ def _throughput(srv: CNNServer, rng, n: int, size: int, batch: int) -> dict:
     }
 
 
+def _int8_agreement(srv_f32: CNNServer, srv_int8: CNNServer, size: int,
+                    batch: int) -> dict:
+    """Serve one identical seeded request wave through both precision paths
+    and compare logits: max |Δlogit| + top-1 match rate."""
+    reqs_f = _requests(np.random.default_rng(42), batch, size)
+    reqs_q = _requests(np.random.default_rng(42), batch, size)
+    srv_f32.serve(reqs_f)
+    srv_int8.serve(reqs_q)
+    lf = np.stack([r.logits for r in sorted(reqs_f, key=lambda r: r.rid)])
+    lq = np.stack([r.logits for r in sorted(reqs_q, key=lambda r: r.rid)])
+    return {
+        "max_abs_dlogit_vs_f32": round(float(np.abs(lq - lf).max()), 6),
+        "top1_match_vs_f32": round(
+            float((lq.argmax(-1) == lf.argmax(-1)).mean()), 4),
+    }
+
+
 def run(arch: str = "vscnn-vgg16", *, densities=(1.0, 0.5, 0.235),
         batches=(1, 4, 8), images: int = 24, size: int | None = None,
-        impl: str = "jnp", out_path: str | None = None) -> dict:
+        impl: str = "jnp", dtype: str = "f32",
+        out_path: str | None = None) -> dict:
     cfg = get_config(arch).reduce()
     size = size or cfg.image_size
+    int8 = dtype == "int8"
     rng = np.random.default_rng(0)
     rows = []
-    model_bytes: dict = {}  # per density — independent of the batch size
+    model_bytes: dict = {}  # per (density, dtype) — batch-size independent
     for batch in batches:
         srv = CNNServer(cfg, batch=batch, sparse=False)
         rows.append({"path": "dense-jnp", "density": 1.0, "batch": batch,
@@ -133,6 +152,20 @@ def run(arch: str = "vscnn-vgg16", *, densities=(1.0, 0.5, 0.235),
                          "batch": batch,
                          **model_bytes[density],
                          **_throughput(srv, rng, images, size, batch)})
+            if int8:
+                # compound sparsity x precision cell: same density, int8
+                # weights/activations, plus output-agreement columns vs
+                # the sparse-f32 server on one identical seeded wave
+                srv_q = CNNServer(cfg, batch=batch, density=density,
+                                  impl=impl, dtype="int8")
+                key = (density, "int8")
+                if key not in model_bytes:
+                    model_bytes[key] = _model_bytes(srv_q, size)
+                rows.append({"path": f"sparse-{impl}-int8",
+                             "density": density, "batch": batch,
+                             **model_bytes[key],
+                             **_throughput(srv_q, rng, images, size, batch),
+                             **_int8_agreement(srv, srv_q, size, batch)})
     # batched throughput must beat (or match) batch-1 at equal density
     summary = {}
     max_batch = max(batches)
@@ -152,6 +185,7 @@ def run(arch: str = "vscnn-vgg16", *, densities=(1.0, 0.5, 0.235),
         "image_size": size,
         "images": images,
         "impl": impl,
+        "dtype": dtype,
         "batches": list(batches),
         "densities": list(densities),
         "rows": rows,
@@ -464,6 +498,10 @@ if __name__ == "__main__":
                     choices=["jnp", "pallas", "pallas-halo", "pallas-stack"],
                     help="executed sparse path (pallas* = the TPU kernels; "
                          "interpret-mode and slow on CPU)")
+    ap.add_argument("--dtype", default="f32", choices=["f32", "int8"],
+                    help="int8 adds a sparse-<impl>-int8 row per cell "
+                         "(compound sparsity x precision) with "
+                         "output-agreement columns vs sparse-f32")
     ap.add_argument("--out", default=None,
                     help="write the artifact (e.g. BENCH_serving.json)")
     ap.add_argument("--replicas", type=int, nargs="+", default=None,
@@ -537,7 +575,8 @@ if __name__ == "__main__":
         sys.exit(1 if bad else 0)
     art = run(args.arch, densities=tuple(args.densities),
               batches=tuple(args.batches), images=args.images,
-              size=args.size, impl=args.impl, out_path=args.out)
+              size=args.size, impl=args.impl, dtype=args.dtype,
+              out_path=args.out)
     for r in art["rows"]:
         print(r)
     print("summary:", art["summary"])

@@ -30,6 +30,12 @@ from repro.models.graph import SparseNet, strip_steps      # noqa: E402
 
 DENSITY_STEPS = (1.0, 0.75, 0.5, 0.375, 0.25, 0.125)
 
+# activation / weight / output itemsizes per dtype contract — the same
+# axis `core.accel_model.conv_layer_traffic` and the kernel CostEstimates
+# carry (int8 halves nothing by luck: in/weight streams drop to 1 byte,
+# the f32 output stream stays 4)
+DTYPES = {"f32": (4, 4, 4), "int8": (1, 1, 4)}
+
 
 @dataclasses.dataclass
 class LayerState:
@@ -37,6 +43,9 @@ class LayerState:
 
     site: ConvSite
     step: int  # index into DENSITY_STEPS
+    itemsize: int = 4       # activation bytes/element
+    w_itemsize: int = 4     # stored weight bytes/element
+    out_itemsize: int = 4   # output bytes/element
 
     @property
     def density(self) -> float:
@@ -50,32 +59,46 @@ class LayerState:
             stride=self.site.stride, groups=self.site.groups,
             dilation=self.site.dilation, cout=self.site.cout, s_steps=s,
             vk=self.site.geom.vk, vn=self.site.geom.vn, impl=impl,
+            itemsize=self.itemsize, w_itemsize=self.w_itemsize,
+            out_itemsize=self.out_itemsize,
             residual=self.site.has_residual)
         return tr.bytes_accessed
+
+
+def kept_tiles(layers: list[LayerState]) -> int:
+    """Stored weight tiles (vectors) kept across the net at the current
+    knob positions."""
+    return sum(
+        st.site.geom.nb * strip_steps(st.site.geom.kb, st.density,
+                                      prune=True)
+        for st in layers)
 
 
 def kept_weight_fraction(layers: list[LayerState]) -> float:
     """Accuracy placeholder: the fraction of stored weight tiles kept,
     weighted by tile count.  Replace with a real eval once the
     checkpoint importer (ROADMAP) lands."""
-    kept = sum(
-        st.site.geom.nb * strip_steps(st.site.geom.kb, st.density,
-                                      prune=True)
-        for st in layers)
     total = sum(st.site.geom.nb * st.site.geom.kb for st in layers)
-    return kept / max(total, 1)
+    return kept_tiles(layers) / max(total, 1)
 
 
-def hillclimb(net: SparseNet, *, size: int, batch: int, budget: float,
+def hillclimb(net: SparseNet, *, size: int, batch: int, budget: float = 0.5,
+              budget_bytes: int | None = None, dtype: str = "f32",
               impl: str = "halo", verbose: bool = True) -> dict:
     """Greedy coordinate descent: repeatedly prune the layer whose next
     density step buys the most modeled bytes per kept-weight point, until
-    total modeled bytes <= ``budget`` x the dense-density total."""
+    total modeled bytes <= ``budget`` x the dense-density total (or
+    ``budget_bytes``, an absolute target that lets searches under
+    different dtype contracts be compared at the same byte spend —
+    an int8 search at the same absolute budget keeps more vectors).
+    ``dtype`` picks the itemsize contract the modeled bytes use."""
+    a_i, w_i, o_i = DTYPES[dtype]
     nc = check_net(net, (batch, size, size, 3), density=1.0)
     nc.report.raise_errors()
-    layers = [LayerState(site=s, step=0) for s in nc.conv_sites]
+    layers = [LayerState(site=s, step=0, itemsize=a_i, w_itemsize=w_i,
+                         out_itemsize=o_i) for s in nc.conv_sites]
     start = sum(st.bytes_at(st.step, impl=impl) for st in layers)
-    target = int(start * budget)
+    target = int(start * budget) if budget_bytes is None else budget_bytes
     total = start
     while total > target:
         best, best_gain = None, 0.0
@@ -96,10 +119,13 @@ def hillclimb(net: SparseNet, *, size: int, batch: int, budget: float,
     return {
         "net": net.name,
         "impl": impl,
-        "budget": budget,
+        "dtype": dtype,
+        "budget": budget if budget_bytes is None else None,
+        "budget_bytes": budget_bytes,
         "reached": total / start,
         "start_bytes": start,
         "total_bytes": total,
+        "kept_tiles": kept_tiles(layers),
         "kept_weight_fraction": round(kept_weight_fraction(layers), 4),
         "densities": {st.site.name: st.density for st in layers},
     }
@@ -114,12 +140,19 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--batch", type=int, default=1)
     p.add_argument("--budget", type=float, default=0.5,
                    help="target modeled-bytes fraction of density-1.0")
+    p.add_argument("--budget-bytes", type=int, default=None,
+                   help="absolute modeled-bytes target (overrides "
+                        "--budget; comparable across --dtype contracts)")
+    p.add_argument("--dtype", choices=sorted(DTYPES), default="f32",
+                   help="itemsize contract for the modeled bytes")
     p.add_argument("--impl", choices=("halo", "stack"), default="halo")
     p.add_argument("--out", default="")
     args = p.parse_args(argv)
 
     row = hillclimb(NETS[args.net](image_size=args.size), size=args.size,
-                    batch=args.batch, budget=args.budget, impl=args.impl)
+                    batch=args.batch, budget=args.budget,
+                    budget_bytes=args.budget_bytes, dtype=args.dtype,
+                    impl=args.impl)
     print(json.dumps(row, indent=1))
     if args.out:
         out = pathlib.Path(args.out)

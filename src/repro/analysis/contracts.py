@@ -30,6 +30,11 @@ for convs, vsmm for FC heads) and prove, without executing anything:
 The canonical idx is the one `models.graph.sparse_conv_from_dense`
 emits: ascending stored-tile ids re-sorted cin-major per strip — the
 order the halo cost formula's min(S, CB) fetch floor relies on.
+
+Every site is proven under *both* dtype contracts: f32 (activation /
+weight / output all 4 bytes) and int8 (int8 activations+weights, f32
+output, a per-cout dequant-scale operand whose tile rides the excluded
+DMA policy like bias).  Int8 rows carry a ``:int8`` path tag.
 """
 from __future__ import annotations
 
@@ -220,23 +225,35 @@ def _plan_idx(plan: KernelPlan, *, cbg: int) -> np.ndarray:
     return canonical_tap_idx(plan.nb, plan.s_steps)
 
 
-def check_conv_site(site: ConvSite, *, rep: Report, itemsize: int = 4
-                    ) -> list[PlanSummary]:
+def check_conv_site(site: ConvSite, *, rep: Report, itemsize: int = 4,
+                    w_itemsize: int | None = None,
+                    out_itemsize: int | None = None) -> list[PlanSummary]:
     """Both conv impls of one site: plan + prove + compare to the traffic
-    model column by column (VSC203)."""
+    model column by column (VSC203).
+
+    ``itemsize``/``w_itemsize``/``out_itemsize`` select the dtype
+    contract — (4, 4, 4) is f32, (1, 1, 4) is the int8 path (int8
+    activations+weights dequantized to f32 in the epilogue, so the plan
+    additionally carries the excluded per-cout scale tile).
+    """
     out: list[PlanSummary] = []
     g = site.geom
     n, h, w, c = site.x_shape
+    w_itemsize = w_itemsize or itemsize
+    out_itemsize = out_itemsize or itemsize
+    int8 = w_itemsize == 1
+    tag = ":int8" if int8 else ""
     for impl in ("halo", "stack"):
         plan = conv_plan(
             site.x_shape, kh=site.kh, kw=site.kw, stride=site.stride,
             groups=site.groups, dilation=site.dilation, cout=site.cout,
             s_steps=site.s_steps, vk=g.vk, vn=g.vn, impl=impl,
             has_bias=True, has_residual=site.has_residual,
-            itemsize=itemsize,
+            has_scale=int8, itemsize=itemsize, w_itemsize=w_itemsize,
+            out_itemsize=out_itemsize,
         )
         assert plan.kb == g.kb, (site.path, plan.kb, g.kb)
-        path = f"{site.path}[{impl}]"
+        path = f"{site.path}[{impl}{tag}]"
         cbg = 1 if g.depthwise else (c // g.vk) // site.groups
         cols = check_plan(plan, path=path, rep=rep,
                           idx=_plan_idx(plan, cbg=cbg))
@@ -244,7 +261,8 @@ def check_conv_site(site: ConvSite, *, rep: Report, itemsize: int = 4
             site.x_shape, kh=site.kh, kw=site.kw, stride=site.stride,
             groups=site.groups, dilation=site.dilation, cout=site.cout,
             s_steps=site.s_steps, vk=g.vk, vn=g.vn, impl=impl,
-            itemsize=itemsize, residual=site.has_residual,
+            itemsize=itemsize, w_itemsize=w_itemsize,
+            out_itemsize=out_itemsize, residual=site.has_residual,
         )
         # quote the derived columns at logical extents (the vsmm row axis
         # is the only padded one) and derive the layout-pass bytes from
@@ -293,18 +311,24 @@ def check_conv_site(site: ConvSite, *, rep: Report, itemsize: int = 4
     return out
 
 
-def check_fc_site(site: FCSite, *, rep: Report, itemsize: int = 4
-                  ) -> list[PlanSummary]:
+def check_fc_site(site: FCSite, *, rep: Report, itemsize: int = 4,
+                  w_itemsize: int | None = None,
+                  out_itemsize: int | None = None) -> list[PlanSummary]:
     """The vsmm plan of one FC head (dense VSC116 layers are skipped —
-    no sparse kernel runs for them)."""
+    no sparse kernel runs for them).  Dtype contract selection as in
+    `check_conv_site`."""
     g = site.geom
     if g is None:
         return []
+    w_itemsize = w_itemsize or itemsize
+    out_itemsize = out_itemsize or itemsize
+    int8 = w_itemsize == 1
     plan = fc_plan(
         m=site.m, k=site.din, s_steps=site.s_steps, vk=g.vk, vn=g.vn,
-        nb=g.nb, has_bias=True, itemsize=itemsize,
+        nb=g.nb, has_bias=True, has_scale=int8, itemsize=itemsize,
+        w_itemsize=w_itemsize, out_itemsize=out_itemsize,
     )
-    path = f"{site.path}[fc]"
+    path = f"{site.path}[fc:int8]" if int8 else f"{site.path}[fc]"
     cols = check_plan(plan, path=path, rep=rep,
                       idx=_plan_idx(plan, cbg=1))
     return [PlanSummary(
@@ -313,13 +337,33 @@ def check_fc_site(site: FCSite, *, rep: Report, itemsize: int = 4
         flops=plan.flops_per_step * _prod(plan.grid))]
 
 
-def check_contracts(nc: NetCheck, *, itemsize: int = 4
+# activation / weight / output itemsizes of each verified dtype contract
+DTYPE_CONTRACTS: dict[str, tuple[int, int, int]] = {
+    "f32": (4, 4, 4),
+    "int8": (1, 1, 4),
+}
+
+
+def check_contracts(nc: NetCheck, *, itemsize: int = 4,
+                    dtypes: tuple[str, ...] = ("f32", "int8")
                     ) -> tuple[Report, list[PlanSummary]]:
-    """Pass 2 over everything pass 1 surfaced."""
+    """Pass 2 over everything pass 1 surfaced, once per dtype contract.
+
+    ``itemsize`` overrides the f32 contract's uniform itemsize (kept for
+    callers probing odd widths); the int8 pass always runs (1, 1, 4).
+    """
     rep = Report()
     rows: list[PlanSummary] = []
-    for site in nc.conv_sites:
-        rows.extend(check_conv_site(site, rep=rep, itemsize=itemsize))
-    for fsite in nc.fc_sites:
-        rows.extend(check_fc_site(fsite, rep=rep, itemsize=itemsize))
+    for dt in dtypes:
+        a_i, w_i, o_i = DTYPE_CONTRACTS[dt]
+        if dt == "f32":
+            a_i = w_i = o_i = itemsize
+        for site in nc.conv_sites:
+            rows.extend(check_conv_site(
+                site, rep=rep, itemsize=a_i, w_itemsize=w_i,
+                out_itemsize=o_i))
+        for fsite in nc.fc_sites:
+            rows.extend(check_fc_site(
+                fsite, rep=rep, itemsize=a_i, w_itemsize=w_i,
+                out_itemsize=o_i))
     return rep, rows

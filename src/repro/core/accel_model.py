@@ -305,6 +305,7 @@ def conv_layer_traffic(
     bh: int = 8,
     impl: str = "halo",
     itemsize: int = 4,
+    w_itemsize: int | None = None,
     out_itemsize: int | None = None,
     residual: bool = False,
 ) -> TrafficReport:
@@ -326,6 +327,12 @@ def conv_layer_traffic(
     The kernel-side formulas are imported from `repro.kernels.vsconv` —
     the same numbers the kernels hand XLA as `pl.CostEstimate`, so the
     model, the compiler hint, and the benchmark gate can never drift.
+
+    The dtype axis: ``itemsize`` is the activation width, ``w_itemsize``
+    the stored-weight width (defaults to ``itemsize``; 1 on the int8
+    path), ``out_itemsize`` the output width (the int8 kernels emit f32,
+    so 4).  The residual is modeled at ``out_itemsize`` — it stays f32 on
+    the int8 path, matching the kernels' real CostEstimate.
     """
     from repro.kernels.vsconv import (  # lazy: keep accel_model numpy-first
         dw_halo_kernel_cost, dw_stack_kernel_cost, halo_kernel_cost,
@@ -344,6 +351,7 @@ def conv_layer_traffic(
         x_shape, vk, groups)
     assert nb % groups == 0 or depthwise, (cout, vn, groups)
     out_itemsize = out_itemsize or itemsize
+    w_itemsize = w_itemsize or itemsize
     ho, _, _ = same_pads(h, kh, stride, dilation)
     wo, _, _ = same_pads(w, kw, stride, dilation)
 
@@ -357,16 +365,16 @@ def conv_layer_traffic(
             impl=impl,
             flops=flops,
             input_bytes=m * nb * s_steps * vk * itemsize,
-            weight_bytes=nb * s_steps * vk * vn * itemsize,
+            weight_bytes=nb * s_steps * vk * vn * w_itemsize,
             output_bytes=(m * cout * out_itemsize
-                          + (m * cout * itemsize if residual else 0)),
+                          + (m * cout * out_itemsize if residual else 0)),
             build_bytes=(2 * m * c * itemsize if stride != 1 else 0),
         )
 
     bh = min(bh, ho)
     hop = _round_up(ho, bh)
     hb = hop // bh
-    res_bytes = n * hop * wo * cout * itemsize if residual else 0
+    res_bytes = n * hop * wo * cout * out_itemsize if residual else 0
     ke_h = (kh - 1) * dilation + 1
     ke_w = (kw - 1) * dilation + 1
     if impl == "halo":
@@ -377,7 +385,7 @@ def conv_layer_traffic(
             est = dw_halo_kernel_cost(
                 n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp,
                 bh=bh, nb=nb, s_steps=s_steps, vc=vn, dilation=dilation,
-                in_itemsize=itemsize, w_itemsize=itemsize,
+                in_itemsize=itemsize, w_itemsize=w_itemsize,
                 out_itemsize=out_itemsize, residual_bytes=res_bytes,
             )
             input_bytes = n * hb * nb * (stride * (bh - 1) + ke_h) * bwp \
@@ -389,7 +397,7 @@ def conv_layer_traffic(
                 n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp, bh=bh,
                 nb=nb, s_steps=s_steps, cb=cbg, vk=vk, vn=vn,
                 dilation=dilation, resident=resident,
-                in_itemsize=itemsize, w_itemsize=itemsize,
+                in_itemsize=itemsize, w_itemsize=w_itemsize,
                 out_itemsize=out_itemsize, residual_bytes=res_bytes,
             )
             hh = stride * (bh - 1) + ke_h
@@ -409,7 +417,7 @@ def conv_layer_traffic(
             est = dw_stack_kernel_cost(
                 n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb,
                 s_steps=s_steps, vc=vn, in_itemsize=itemsize,
-                w_itemsize=itemsize, out_itemsize=out_itemsize,
+                w_itemsize=w_itemsize, out_itemsize=out_itemsize,
                 residual_bytes=res_bytes,
             )
             input_bytes = n * hb * nb * s_steps * bh * bw * vn * itemsize
@@ -417,7 +425,7 @@ def conv_layer_traffic(
             est = stack_kernel_cost(
                 n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb,
                 s_steps=s_steps, vk=vk, vn=vn, in_itemsize=itemsize,
-                w_itemsize=itemsize, out_itemsize=out_itemsize,
+                w_itemsize=w_itemsize, out_itemsize=out_itemsize,
                 residual_bytes=res_bytes,
             )
             input_bytes = n * hb * nb * s_steps * bh * bw * vk * itemsize
@@ -427,7 +435,7 @@ def conv_layer_traffic(
     else:
         raise ValueError(f"impl must be 'halo' or 'stack', got {impl!r}")
 
-    weight_bytes = nb * s_steps * vk * vn * itemsize
+    weight_bytes = nb * s_steps * vk * vn * w_itemsize
     output_bytes = n * hop * wo * cout * out_itemsize + res_bytes
     assert input_bytes + weight_bytes + output_bytes == est.bytes_accessed, (
         "traffic model drifted from the kernel CostEstimate")
@@ -451,7 +459,10 @@ def network_traffic_reports(
     (name, conv input NHWC, weight, stride, groups, dilation) per conv
     layer (the trailing geometry fields are optional for legacy 4-tuple
     records) — and ``sparse`` the `sparsify` dict giving each layer's
-    encoded geometry (tile counts, vk/vn, cin padding).  Returns
+    encoded geometry (tile counts, vk/vn, cin padding).  The dtype axis
+    keys off the stored weight dtype: an int8 entry (``sparsify(dtype=
+    jnp.int8)``) is modeled with int8 activations and weights and f32
+    outputs, exactly what the kernels move.  Returns
     [(name, {impl: TrafficReport})] so `bench_kernels`/`bench_serving` can
     emit bytes + arithmetic-intensity columns for both layouts next to the
     cycle speedups.
@@ -474,6 +485,8 @@ def network_traffic_reports(
                 dilation=dilation, cout=nb * vn,
                 s_steps=s_steps, vk=vk, vn=vn, bh=bh, impl=impl,
                 itemsize=np.dtype(entry.vs.dtype).itemsize,
+                w_itemsize=np.dtype(entry.vs.dtype).itemsize,
+                out_itemsize=4,
             )
             for impl in impls
         }))

@@ -64,6 +64,7 @@ def vs_matmul(
     *,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     fuse_relu: bool = False,
     impl: str = "jnp",
     out_dtype: Any = None,
@@ -79,8 +80,14 @@ def vs_matmul(
     ``residual`` (..., N) and ``fuse_relu`` run the epilogue fused in the
     Pallas kernel and in f32 before the output cast in the jnp path
     (residual added before the ReLU — the ResNet shortcut).
+
+    INT8 (int8 ``x`` + int8 ``vs.vals`` + ``scale`` (N,)): each sparse step
+    multiply-accumulates in int32 (exact) and enters the shared f32
+    accumulator — per-step sums stay < 2^24 so the jnp path is bit-exact
+    against the Pallas kernel — and the epilogue dequantizes first:
+    acc -> *scale -> +bias -> +residual -> max(0).  Output defaults to f32.
     """
-    out_dtype = out_dtype or x.dtype
+    out_dtype = out_dtype or (jnp.float32 if x.dtype == jnp.int8 else x.dtype)
     *batch, k = x.shape
     assert k == vs.shape[0], (x.shape, vs.shape)
     if _use_pallas(impl):
@@ -89,7 +96,7 @@ def vs_matmul(
         x2 = x.reshape(-1, k)
         res2 = (residual.reshape(-1, vs.shape[1])
                 if residual is not None else None)
-        out = kops.vsmm(x2, vs, bias=bias, residual=res2,
+        out = kops.vsmm(x2, vs, bias=bias, residual=res2, scale=scale,
                         fuse_relu=fuse_relu,
                         skip_zero_inputs=skip_zero_inputs)
         return out.reshape(*batch, vs.shape[1]).astype(out_dtype)
@@ -97,19 +104,31 @@ def vs_matmul(
     nb, s, vk, vn = vs.vals.shape
     kb = k // vk
     x2 = x.reshape(-1, kb, vk)  # (M, KB, vk)
+    int8 = x2.dtype == jnp.int8
 
     def step(acc: jax.Array, sv: tuple[jax.Array, jax.Array]
              ) -> tuple[jax.Array, None]:
         idx_s, w_s = sv  # (NB,), (NB, vk, vn)
         xg = jnp.take(x2, idx_s, axis=1)  # (M, NB, vk)
-        acc = acc + jnp.einsum(
-            "mjk,jkn->mjn", xg, w_s, preferred_element_type=jnp.float32
-        )
-        return acc, None
+        if int8:
+            part = jnp.einsum(
+                "mjk,jkn->mjn", xg, w_s, preferred_element_type=jnp.int32
+            ).astype(jnp.float32)
+        else:
+            part = jnp.einsum(
+                "mjk,jkn->mjn", xg, w_s, preferred_element_type=jnp.float32
+            )
+        return acc + part, None
 
     acc0 = jnp.zeros((x2.shape[0], nb, vn), jnp.float32)
     acc, _ = jax.lax.scan(step, acc0, (vs.idx.T, vs.vals.transpose(1, 0, 2, 3)))
     y = acc.reshape(*batch, nb * vn)
+    if scale is not None:
+        # scales are powers of two (see `models.graph.weight_scales`), so
+        # this multiply is exact — FMA contraction by the compiler cannot
+        # change the result and parity with the Pallas kernels stays
+        # bit-exact under any fusion decisions
+        y = y * scale.astype(jnp.float32)
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     if residual is not None:
@@ -220,6 +239,7 @@ def vs_conv2d(
     dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     fuse_relu: bool = False,
     impl: str = "jnp",
 ) -> jax.Array:
@@ -240,13 +260,18 @@ def vs_conv2d(
     ``residual`` (the output-shaped ResNet shortcut, added before the ReLU)
     and ``fuse_relu`` run the epilogue fused in the Pallas path and in f32
     before the output cast in the jnp path — bit-identical math either way.
+
+    INT8 (int8 ``x`` + int8 ``w_vs.vals`` + ``scale`` (Cout,)): the MAC runs
+    exactly (int32 accumulation into the shared f32 accumulator) and the
+    epilogue dequantizes first — acc -> *scale -> +bias -> +residual (f32)
+    -> max(0) — with f32 output.
     """
     if _use_pallas(impl):
         from repro.kernels import ops as kops  # lazy: avoid import cycle
 
         return kops.vsconv(
             x, w_vs, kh=kh, kw=kw, stride=stride, groups=groups,
-            dilation=dilation, bias=bias, residual=residual,
+            dilation=dilation, bias=bias, residual=residual, scale=scale,
             fuse_relu=fuse_relu, impl=_conv_impl(impl),
         )
     if groups == 1:
@@ -264,13 +289,17 @@ def vs_conv2d(
     else:
         y = _vs_conv2d_grouped_jnp(x, w_vs, kh=kh, kw=kw, stride=stride,
                                    groups=groups, dilation=dilation)
+    if scale is not None:
+        # exact multiply: scales are powers of two (see
+        # `models.graph.weight_scales`) — FMA-contraction-proof
+        y = y * scale.astype(jnp.float32)
     if bias is not None:
         y = y + bias.astype(jnp.float32)
     if residual is not None:
         y = y + residual.astype(jnp.float32)
     if fuse_relu:
         y = jnp.maximum(y, 0.0)
-    return y.astype(x.dtype)
+    return y.astype(jnp.float32 if x.dtype == jnp.int8 else x.dtype)
 
 
 def vs_conv2d_3x3(x: jax.Array, w_vs: VectorSparse, *, impl: str = "jnp") -> jax.Array:

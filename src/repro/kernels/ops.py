@@ -59,15 +59,17 @@ def vsmm(
     bm: int = 256,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
     interpret: bool | None = None,
 ) -> jax.Array:
     """x (M, K) @ vector-sparse W (K, N) -> (M, N); pads M to a bm multiple.
 
-    Optional fused epilogue: ``bias`` (N,) add + ``residual`` (M, N) add
-    (before the ReLU — the ResNet shortcut) + ``fuse_relu`` inside the
-    kernel (f32 accumulator, one cast at flush).
+    Optional fused epilogue: ``scale`` (N,) int8 dequant multiply + ``bias``
+    (N,) add + ``residual`` (M, N) add (before the ReLU — the ResNet
+    shortcut) + ``fuse_relu`` inside the kernel (f32 accumulator, one cast
+    at flush).
     """
     m, k = x.shape
     interpret = _interpret() if interpret is None else interpret
@@ -78,7 +80,7 @@ def vsmm(
         if residual is not None:
             residual = jnp.pad(residual, ((0, mp - m), (0, 0)))
     out = vsmm_pallas(
-        x, vs, bm=bm, bias=bias, residual=residual,
+        x, vs, bm=bm, bias=bias, residual=residual, scale=scale,
         skip_zero_inputs=skip_zero_inputs,
         fuse_relu=fuse_relu, interpret=interpret
     )
@@ -96,6 +98,7 @@ def vsconv(
     dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
@@ -132,7 +135,7 @@ def vsconv(
         res2 = (residual.reshape(n * ho * wo, -1)
                 if residual is not None else None)
         out = vsmm(
-            x.reshape(-1, c), vs, bias=bias, residual=res2,
+            x.reshape(-1, c), vs, bias=bias, residual=res2, scale=scale,
             skip_zero_inputs=skip_zero_inputs, fuse_relu=fuse_relu,
             interpret=interpret,
         )
@@ -145,7 +148,8 @@ def vsconv(
         residual = jnp.pad(residual, ((0, 0), (0, hop - ho), (0, 0), (0, 0)))
     common = dict(
         w_out=wo, kh=kh, kw=kw, stride=stride, dilation=dilation, bias=bias,
-        residual=residual, bh=bh, skip_zero_inputs=skip_zero_inputs,
+        residual=residual, scale=scale, bh=bh,
+        skip_zero_inputs=skip_zero_inputs,
         fuse_relu=fuse_relu, interpret=interpret,
     )
     if depthwise:

@@ -33,8 +33,9 @@ DMA-counting policies (how the cost contract counts block fetches):
                       the vsmm activation gather, whose block index
                       changes (in the model) every sparse step.
   ``excluded``        not part of the byte contract (the (1, vn) bias
-                      tile: one tile per strip, noise next to the other
-                      terms) — bounds are still proven.
+                      and int8 dequant-scale tiles: one tile per strip,
+                      noise next to the other terms) — bounds are still
+                      proven.
 
 The faithful Pallas rule — skip the DMA whenever a step's offsets equal
 the *immediately previous* step's — is simulated separately by the
@@ -146,7 +147,9 @@ def conv_plan(
     impl: str = "halo",
     has_bias: bool = False,
     has_residual: bool = False,
+    has_scale: bool = False,
     itemsize: int = 4,
+    w_itemsize: int | None = None,
     out_itemsize: int | None = None,
 ) -> KernelPlan:
     """The `ops.vsconv` dispatch from static geometry.
@@ -155,12 +158,20 @@ def conv_plan(
     channels included), ``cout`` the encoded output width (a vn multiple)
     — the same conventions as `core.accel_model.conv_layer_traffic`, whose
     byte totals the resulting plan must reproduce.
+
+    The dtype axis: ``itemsize`` is the activation/input width,
+    ``w_itemsize`` the stored weight width (defaults to ``itemsize``;
+    1 for the int8 kernels), ``out_itemsize`` the output width (defaults
+    to ``itemsize``; the int8 path emits f32, so 4).  The f32 bias, the
+    f32 residual and the f32 dequant ``scale`` (``has_scale``) are always
+    ``out_itemsize`` wide.
     """
     n, h, w, c = (int(d) for d in x_shape)
     if impl not in ("halo", "stack"):
         raise ValueError(f"impl must be 'halo' or 'stack', got {impl!r}")
     assert c % vk == 0 and cout % vn == 0, (x_shape, cout, vk, vn)
     out_itemsize = out_itemsize or itemsize
+    w_itemsize = w_itemsize or itemsize
     nb = cout // vn
     cb = c // vk
     depthwise = groups > 1 and groups == c and vk == 1 and cout == c
@@ -172,7 +183,8 @@ def conv_plan(
         wo = -(-w // stride)
         return fc_plan(
             m=n * ho * wo, k=c, s_steps=s_steps, vk=vk, vn=vn, nb=nb,
-            has_bias=has_bias, has_residual=has_residual, itemsize=itemsize,
+            has_bias=has_bias, has_residual=has_residual,
+            has_scale=has_scale, itemsize=itemsize, w_itemsize=w_itemsize,
             out_itemsize=out_itemsize,
         )
 
@@ -182,7 +194,7 @@ def conv_plan(
     hop = _round_up(ho, bh)
     hb = hop // bh
     hh = stride * (bh - 1) + (kh - 1) * dilation + 1
-    res_bytes = n * hop * wo * cout * itemsize if has_residual else 0
+    res_bytes = n * hop * wo * cout * out_itemsize if has_residual else 0
 
     out_buf = BufferAccess(
         name="output",
@@ -194,15 +206,21 @@ def conv_plan(
         itemsize=out_itemsize,
     )
     extras: list[BufferAccess] = []
+    if has_scale:
+        extras.append(BufferAccess(
+            name="scale", block=(1, vn), dims=(nb, vn), valid=(nb, vn),
+            index_map=conv_bias_index_map(), policy="excluded",
+            itemsize=out_itemsize,
+        ))
     if has_bias:
         extras.append(BufferAccess(
             name="bias", block=(1, vn), dims=(nb, vn), valid=(nb, vn),
             index_map=conv_bias_index_map(), policy="excluded",
-            itemsize=itemsize,
+            itemsize=out_itemsize,
         ))
     if has_residual:
         extras.append(dataclasses.replace(
-            out_buf, name="residual", itemsize=itemsize))
+            out_buf, name="residual", itemsize=out_itemsize))
 
     if depthwise:
         # per-channel tap kernels: strip j IS the channel tile, vk==1,
@@ -211,7 +229,7 @@ def conv_plan(
         w_buf = BufferAccess(
             name="weights", block=(1, 1, 1, vn), dims=(nb, s_steps, 1, vn),
             valid=(nb, s_steps, 1, vn), index_map=conv_weight_index_map(),
-            policy="distinct", itemsize=itemsize,
+            policy="distinct", itemsize=w_itemsize,
         )
         if impl == "halo":
             rows, bwp = halo_layout_dims(
@@ -226,7 +244,7 @@ def conv_plan(
             cost = dw_halo_kernel_cost(
                 n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp, bh=bh,
                 nb=nb, s_steps=s_steps, vc=vn, dilation=dilation,
-                in_itemsize=itemsize, w_itemsize=itemsize,
+                in_itemsize=itemsize, w_itemsize=w_itemsize,
                 out_itemsize=out_itemsize, residual_bytes=res_bytes,
             )
             kind = "dw_halo"
@@ -243,7 +261,7 @@ def conv_plan(
             )
             cost = dw_stack_kernel_cost(
                 n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb, s_steps=s_steps,
-                vc=vn, in_itemsize=itemsize, w_itemsize=itemsize,
+                vc=vn, in_itemsize=itemsize, w_itemsize=w_itemsize,
                 out_itemsize=out_itemsize, residual_bytes=res_bytes,
             )
             kind = "dw_stack"
@@ -267,14 +285,15 @@ def conv_plan(
         cost = halo_kernel_cost(
             n=n, hop=hop, w_out=wo, kh=kh, stride=stride, bwp=bwp, bh=bh,
             nb=nb, s_steps=s_steps, cb=cbg, vk=vk, vn=vn, dilation=dilation,
-            resident=resident, in_itemsize=itemsize, w_itemsize=itemsize,
+            resident=resident, in_itemsize=itemsize,
+            w_itemsize=w_itemsize,
             out_itemsize=out_itemsize, residual_bytes=res_bytes,
         )
         w_buf = BufferAccess(
             name="weights", block=(1, 1, vk, vn), dims=(nb, s_steps, vk, vn),
             valid=(nb, s_steps, vk, vn),
             index_map=conv_weight_index_map(resident=resident),
-            policy="distinct", itemsize=itemsize,
+            policy="distinct", itemsize=w_itemsize,
         )
         if resident:
             in_buf = BufferAccess(
@@ -290,7 +309,7 @@ def conv_plan(
                 dataclasses.replace(
                     b,
                     index_map=(conv_bias_index_map(resident=True)
-                               if b.name == "bias"
+                               if b.name in ("bias", "scale")
                                else conv_out_index_map(hb, resident=True)))
                 for b in extras
             ]
@@ -310,13 +329,13 @@ def conv_plan(
             h, w, kh=kh, kw=kw, stride=stride, dilation=dilation, h_out=hop)
         cost = stack_kernel_cost(
             n=n, hop=hop, w_out=wo, bw=bw, bh=bh, nb=nb, s_steps=s_steps,
-            vk=vk, vn=vn, in_itemsize=itemsize, w_itemsize=itemsize,
+            vk=vk, vn=vn, in_itemsize=itemsize, w_itemsize=w_itemsize,
             out_itemsize=out_itemsize, residual_bytes=res_bytes,
         )
         w_buf = BufferAccess(
             name="weights", block=(1, 1, vk, vn), dims=(nb, s_steps, vk, vn),
             valid=(nb, s_steps, vk, vn), index_map=conv_weight_index_map(),
-            policy="distinct", itemsize=itemsize,
+            policy="distinct", itemsize=w_itemsize,
         )
         in_buf = BufferAccess(
             name="input", block=(1, 1, bh, bw, vk), dims=(n, planes, hop, bw, c),
@@ -344,7 +363,9 @@ def fc_plan(
     bm: int = 256,
     has_bias: bool = False,
     has_residual: bool = False,
+    has_scale: bool = False,
     itemsize: int = 4,
+    w_itemsize: int | None = None,
     out_itemsize: int | None = None,
 ) -> KernelPlan:
     """The `ops.vsmm` dispatch from static geometry: ``m`` logical rows
@@ -353,10 +374,11 @@ def fc_plan(
     ones `conv_layer_traffic` uses for the 1x1-conv route)."""
     assert k % vk == 0, (k, vk)
     out_itemsize = out_itemsize or itemsize
+    w_itemsize = w_itemsize or itemsize
     bm = min(bm, _round_up(m, 8))
     mp = _round_up(m, bm)
     kb = k // vk
-    res_bytes = mp * nb * vn * itemsize if has_residual else 0
+    res_bytes = mp * nb * vn * out_itemsize if has_residual else 0
     x_buf = BufferAccess(
         name="input", block=(bm, vk), dims=(mp, k), valid=(m, k),
         index_map=vsmm_x_index_map(), policy="per_step", itemsize=itemsize,
@@ -364,7 +386,7 @@ def fc_plan(
     w_buf = BufferAccess(
         name="weights", block=(1, 1, vk, vn), dims=(nb, s_steps, vk, vn),
         valid=(nb, s_steps, vk, vn), index_map=vsmm_w_index_map(),
-        policy="distinct", itemsize=itemsize,
+        policy="distinct", itemsize=w_itemsize,
     )
     out_buf = BufferAccess(
         name="output", block=(bm, vn), dims=(mp, nb * vn),
@@ -372,18 +394,24 @@ def fc_plan(
         policy="distinct", itemsize=out_itemsize,
     )
     extras: list[BufferAccess] = []
+    if has_scale:
+        extras.append(BufferAccess(
+            name="scale", block=(1, vn), dims=(nb, vn), valid=(nb, vn),
+            index_map=vsmm_bias_index_map(), policy="excluded",
+            itemsize=out_itemsize,
+        ))
     if has_bias:
         extras.append(BufferAccess(
             name="bias", block=(1, vn), dims=(nb, vn), valid=(nb, vn),
             index_map=vsmm_bias_index_map(), policy="excluded",
-            itemsize=itemsize,
+            itemsize=out_itemsize,
         ))
     if has_residual:
         extras.append(dataclasses.replace(
-            out_buf, name="residual", itemsize=itemsize))
+            out_buf, name="residual", itemsize=out_itemsize))
     cost = vsmm_kernel_cost(
         m=mp, nb=nb, s_steps=s_steps, vk=vk, vn=vn, in_itemsize=itemsize,
-        w_itemsize=itemsize, out_itemsize=out_itemsize,
+        w_itemsize=w_itemsize, out_itemsize=out_itemsize,
         residual_bytes=res_bytes,
     )
     return KernelPlan(

@@ -108,6 +108,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.sparse_ops import same_pads
 from repro.core.vector_sparse import VectorSparse
+from repro.kernels.vsmm import _mac_dot
 
 __all__ = [
     "vsconv_pallas", "vsconv_halo_pallas", "vsconv_dw_halo_pallas",
@@ -488,8 +489,10 @@ def build_row_tap_stack(
 
 def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
                  dilation: int, bh: int, w_out: int, fuse_relu: bool,
-                 has_bias: bool, has_residual: bool, skip_zero_inputs: bool):
+                 has_scale: bool, has_bias: bool, has_residual: bool,
+                 skip_zero_inputs: bool):
     it = iter(refs)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
     o_ref = next(it)
@@ -521,9 +524,7 @@ def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
     xs2 = xt.reshape(bh * w_out, xt.shape[-1])
 
     def _mac():
-        acc_ref[...] += jnp.dot(
-            xs2, w_ref[0, 0], preferred_element_type=jnp.float32
-        )
+        acc_ref[...] += _mac_dot(xs2, w_ref[0, 0])
 
     if skip_zero_inputs:
         # paper's input zero-vector skip (post-ReLU activations)
@@ -534,6 +535,11 @@ def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
         acc = acc_ref[...].reshape(o_ref.shape)
+        if has_scale:
+            # int8 dequant first: the accumulator holds exact int sums and
+            # the scales are powers of two, so this multiply is exact —
+            # FMA contraction with the bias add cannot change the result
+            acc = acc * scale_ref[0].astype(jnp.float32)
         if has_bias:
             acc = acc + bias_ref[0].astype(jnp.float32)
         if has_residual:
@@ -547,14 +553,15 @@ def _halo_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int, stride: int,
 
 def _halo_resident_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int,
                           stride: int, dilation: int, bh: int, w_out: int,
-                          fuse_relu: bool, has_bias: bool, has_residual: bool,
-                          skip_zero_inputs: bool):
+                          fuse_relu: bool, has_scale: bool, has_bias: bool,
+                          has_residual: bool, skip_zero_inputs: bool):
     """Tiny-feature-map variant of `_halo_kernel`: the block holds ALL cb
     cin tiles (offset independent of strip and sparse step; the row-block
     axis is the outermost grid axis, so the whole thing is DMA'd once per
     (image, row-block)) and the cin tile is resolved in-kernel alongside
     the tap."""
     it = iter(refs)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
     o_ref = next(it)
@@ -584,9 +591,7 @@ def _halo_resident_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int,
     xs2 = xt.reshape(bh * w_out, xt.shape[-1])
 
     def _mac():
-        acc_ref[...] += jnp.dot(
-            xs2, w_ref[0, 0], preferred_element_type=jnp.float32
-        )
+        acc_ref[...] += _mac_dot(xs2, w_ref[0, 0])
 
     if skip_zero_inputs:
         pl.when(jnp.any(xs2 != 0))(_mac)
@@ -596,6 +601,9 @@ def _halo_resident_kernel(idx_ref, xh_ref, w_ref, *refs, cb: int, kw: int,
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
         acc = acc_ref[...].reshape(o_ref.shape)
+        if has_scale:
+            # exact multiply (po2 dequant scales) — FMA-contraction-proof
+            acc = acc * scale_ref[0].astype(jnp.float32)
         if has_bias:
             acc = acc + bias_ref[0].astype(jnp.float32)
         if has_residual:
@@ -624,6 +632,7 @@ def vsconv_halo_pallas(
     dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
@@ -633,6 +642,10 @@ def vsconv_halo_pallas(
     """Direct input xh (N, rows, bW, CB, vk) * sparse (kh*kw*CB*vk/groups,
     Cout) -> (N, Hout, w_out, Cout), Hout = (rows - ke_h) // stride + 1
     with ke_h = (kh-1)*dilation + 1.
+
+    INT8: int8 ``xh`` + int8 ``vs.vals`` + ``scale`` (Cout,) — the combined
+    per-cout dequant scale, applied at flush before the bias; each step's
+    MAC accumulates in int32 on the MXU and the output defaults to f32.
 
     ``xh`` is `build_halo_input`'s SAME-padded raw input; Hout must be a
     multiple of ``bh`` (the `ops.vsconv` wrapper pads).  Each grid step sees
@@ -658,7 +671,9 @@ def vsconv_halo_pallas(
     assert h % bh == 0, (h, bh)
     hb = h // bh
     hh = stride * (bh - 1) + ke_h  # halo rows per output row-block
-    out_dtype = out_dtype or xh.dtype
+    out_dtype = out_dtype or (jnp.float32 if xh.dtype == jnp.int8
+                              else xh.dtype)
+    has_scale = scale is not None
     has_bias = bias is not None
     has_residual = residual is not None
     resident = use_resident_halo(h, groups)
@@ -682,7 +697,8 @@ def vsconv_halo_pallas(
         kernel = functools.partial(
             _halo_resident_kernel, cb=cb, kw=kw, stride=stride,
             dilation=dilation, bh=bh, w_out=w_out, fuse_relu=fuse_relu,
-            has_bias=has_bias, has_residual=has_residual,
+            has_scale=has_scale, has_bias=has_bias,
+            has_residual=has_residual,
             skip_zero_inputs=skip_zero_inputs,
         )
     else:
@@ -707,11 +723,14 @@ def vsconv_halo_pallas(
         kernel = functools.partial(
             _halo_kernel, cb=cbg, kw=kw, stride=stride, dilation=dilation,
             bh=bh, w_out=w_out,
-            fuse_relu=fuse_relu, has_bias=has_bias,
+            fuse_relu=fuse_relu, has_scale=has_scale, has_bias=has_bias,
             has_residual=has_residual,
             skip_zero_inputs=skip_zero_inputs,
         )
     args = [vs.idx, xh, vs.vals]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, vn), bias_map))
+        args.append(scale.reshape(nb, vn))
     if has_bias:
         in_specs.append(pl.BlockSpec((1, vn), bias_map))
         args.append(bias.reshape(nb, vn))
@@ -751,9 +770,10 @@ def vsconv_halo_pallas(
 # --------------------------------------------------------------------------
 
 def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
-            dilation: int, w_out: int, fuse_relu: bool, has_bias: bool,
-            has_residual: bool, skip_zero_inputs: bool):
+            dilation: int, w_out: int, fuse_relu: bool, has_scale: bool,
+            has_bias: bool, has_residual: bool, skip_zero_inputs: bool):
     it = iter(refs)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
     o_ref = next(it)
@@ -778,9 +798,7 @@ def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
     xs2 = xs.reshape(-1, xs.shape[-1])  # (bh*w_out, vk)
 
     def _mac():
-        acc_ref[...] += jnp.dot(
-            xs2, w_ref[0, 0], preferred_element_type=jnp.float32
-        )
+        acc_ref[...] += _mac_dot(xs2, w_ref[0, 0])
 
     if skip_zero_inputs:
         # paper's input zero-vector skip (post-ReLU activations)
@@ -791,6 +809,9 @@ def _kernel(idx_ref, xt_ref, w_ref, *refs, cb: int, kw: int, stride: int,
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
         acc = acc_ref[...].reshape(o_ref.shape)
+        if has_scale:
+            # exact multiply (po2 dequant scales) — FMA-contraction-proof
+            acc = acc * scale_ref[0].astype(jnp.float32)
         if has_bias:
             acc = acc + bias_ref[0].astype(jnp.float32)
         if has_residual:
@@ -821,6 +842,7 @@ def vsconv_pallas(
     dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
@@ -849,7 +871,9 @@ def vsconv_pallas(
     assert vs.shape[0] == kh * kw * cbg * vk, (vs.shape, c, vk, groups)
     assert h % bh == 0, (h, bh)
     hb = h // bh
-    out_dtype = out_dtype or xt.dtype
+    out_dtype = out_dtype or (jnp.float32 if xt.dtype == jnp.int8
+                              else xt.dtype)
+    has_scale = scale is not None
     has_bias = bias is not None
     has_residual = residual is not None
 
@@ -865,6 +889,9 @@ def vsconv_pallas(
         pl.BlockSpec((1, 1, vk, vn), conv_weight_index_map()),
     ]
     args = [vs.idx, xt, vs.vals]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, vn), conv_bias_index_map()))
+        args.append(scale.reshape(nb, vn))
     if has_bias:
         in_specs.append(pl.BlockSpec((1, vn), conv_bias_index_map()))
         args.append(bias.reshape(nb, vn))
@@ -885,7 +912,7 @@ def vsconv_pallas(
         functools.partial(
             _kernel, cb=cbg, kw=kw, stride=stride, dilation=dilation,
             w_out=w_out,
-            fuse_relu=fuse_relu, has_bias=has_bias,
+            fuse_relu=fuse_relu, has_scale=has_scale, has_bias=has_bias,
             has_residual=has_residual,
             skip_zero_inputs=skip_zero_inputs,
         ),
@@ -917,9 +944,13 @@ def vsconv_pallas(
 # @pl.when — the same two-sided skip as the full kernels.
 
 
-def _dw_flush(acc_ref, o_ref, bias_ref, res_ref, *, fuse_relu, has_bias,
-              has_residual):
+def _dw_flush(acc_ref, o_ref, scale_ref, bias_ref, res_ref, *, fuse_relu,
+              has_scale, has_bias, has_residual):
     acc = acc_ref[...].reshape(o_ref.shape)
+    if has_scale:
+        # int8 dequant first (the elementwise int8 MAC is f32-exact, so the
+        # accumulator already holds the exact integer sums)
+        acc = acc * scale_ref[0].astype(jnp.float32)
     if has_bias:
         acc = acc + bias_ref[0].astype(jnp.float32)
     if has_residual:
@@ -931,9 +962,10 @@ def _dw_flush(acc_ref, o_ref, bias_ref, res_ref, *, fuse_relu, has_bias,
 
 def _dw_halo_kernel(idx_ref, xh_ref, w_ref, *refs, kw: int, stride: int,
                     dilation: int, bh: int, w_out: int, fuse_relu: bool,
-                    has_bias: bool, has_residual: bool,
+                    has_scale: bool, has_bias: bool, has_residual: bool,
                     skip_zero_inputs: bool):
     it = iter(refs)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
     o_ref = next(it)
@@ -961,6 +993,8 @@ def _dw_halo_kernel(idx_ref, xh_ref, w_ref, *refs, kw: int, stride: int,
 
     def _mac():
         # elementwise per-channel MAC: one tap vector scales its channels
+        # (f32-exact for int8 values too — every |v| <= 127 product is
+        # exactly representable, so no separate int32 path is needed)
         acc_ref[...] += xs2.astype(jnp.float32) * w_ref[0, 0, 0].astype(
             jnp.float32)
 
@@ -971,7 +1005,8 @@ def _dw_halo_kernel(idx_ref, xh_ref, w_ref, *refs, kw: int, stride: int,
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        _dw_flush(acc_ref, o_ref, bias_ref, res_ref, fuse_relu=fuse_relu,
+        _dw_flush(acc_ref, o_ref, scale_ref, bias_ref, res_ref,
+                  fuse_relu=fuse_relu, has_scale=has_scale,
                   has_bias=has_bias, has_residual=has_residual)
 
 
@@ -993,6 +1028,7 @@ def vsconv_dw_halo_pallas(
     dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
@@ -1018,7 +1054,9 @@ def vsconv_dw_halo_pallas(
     assert h % bh == 0, (h, bh)
     hb = h // bh
     hh = stride * (bh - 1) + ke_h
-    out_dtype = out_dtype or xh.dtype
+    out_dtype = out_dtype or (jnp.float32 if xh.dtype == jnp.int8
+                              else xh.dtype)
+    has_scale = scale is not None
     has_bias = bias is not None
     has_residual = residual is not None
 
@@ -1031,6 +1069,9 @@ def vsconv_dw_halo_pallas(
         pl.BlockSpec((1, 1, 1, vc), conv_weight_index_map()),
     ]
     args = [vs.idx, xh, vs.vals]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, vc), conv_bias_index_map()))
+        args.append(scale.reshape(nb, vc))
     if has_bias:
         in_specs.append(pl.BlockSpec((1, vc), conv_bias_index_map()))
         args.append(bias.reshape(nb, vc))
@@ -1050,8 +1091,9 @@ def vsconv_dw_halo_pallas(
     return pl.pallas_call(
         functools.partial(
             _dw_halo_kernel, kw=kw, stride=stride, dilation=dilation, bh=bh,
-            w_out=w_out, fuse_relu=fuse_relu, has_bias=has_bias,
-            has_residual=has_residual, skip_zero_inputs=skip_zero_inputs,
+            w_out=w_out, fuse_relu=fuse_relu, has_scale=has_scale,
+            has_bias=has_bias, has_residual=has_residual,
+            skip_zero_inputs=skip_zero_inputs,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, h, w_out, nb * vc), out_dtype),
@@ -1070,9 +1112,10 @@ def vsconv_dw_halo_pallas(
 
 def _dw_stack_kernel(idx_ref, xt_ref, w_ref, *refs, kw: int, stride: int,
                      dilation: int, w_out: int, fuse_relu: bool,
-                     has_bias: bool, has_residual: bool,
+                     has_scale: bool, has_bias: bool, has_residual: bool,
                      skip_zero_inputs: bool):
     it = iter(refs)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
     o_ref = next(it)
@@ -1104,7 +1147,8 @@ def _dw_stack_kernel(idx_ref, xt_ref, w_ref, *refs, kw: int, stride: int,
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
-        _dw_flush(acc_ref, o_ref, bias_ref, res_ref, fuse_relu=fuse_relu,
+        _dw_flush(acc_ref, o_ref, scale_ref, bias_ref, res_ref,
+                  fuse_relu=fuse_relu, has_scale=has_scale,
                   has_bias=has_bias, has_residual=has_residual)
 
 
@@ -1126,6 +1170,7 @@ def vsconv_dw_stack_pallas(
     dilation: int = 1,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     bh: int = 8,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
@@ -1146,7 +1191,9 @@ def vsconv_dw_stack_pallas(
     assert vs.shape == (kh * kw, c), (vs.shape, kh, kw, c)
     assert h % bh == 0, (h, bh)
     hb = h // bh
-    out_dtype = out_dtype or xt.dtype
+    out_dtype = out_dtype or (jnp.float32 if xt.dtype == jnp.int8
+                              else xt.dtype)
+    has_scale = scale is not None
     has_bias = bias is not None
     has_residual = residual is not None
 
@@ -1158,6 +1205,9 @@ def vsconv_dw_stack_pallas(
         pl.BlockSpec((1, 1, 1, vc), conv_weight_index_map()),
     ]
     args = [vs.idx, xt, vs.vals]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, vc), conv_bias_index_map()))
+        args.append(scale.reshape(nb, vc))
     if has_bias:
         in_specs.append(pl.BlockSpec((1, vc), conv_bias_index_map()))
         args.append(bias.reshape(nb, vc))
@@ -1177,8 +1227,9 @@ def vsconv_dw_stack_pallas(
     return pl.pallas_call(
         functools.partial(
             _dw_stack_kernel, kw=kw, stride=stride, dilation=dilation,
-            w_out=w_out, fuse_relu=fuse_relu, has_bias=has_bias,
-            has_residual=has_residual, skip_zero_inputs=skip_zero_inputs,
+            w_out=w_out, fuse_relu=fuse_relu, has_scale=has_scale,
+            has_bias=has_bias, has_residual=has_residual,
+            skip_zero_inputs=skip_zero_inputs,
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, h, w_out, c), out_dtype),

@@ -45,6 +45,20 @@ __all__ = [
 ]
 
 
+def _mac_dot(x: jax.Array, w: jax.Array) -> jax.Array:
+    """One sparse-step MAC on the MXU.
+
+    int8 inputs multiply-accumulate exactly in int32 (the MXU-native int8
+    path; one step is at most 127*127*vk < 2^24, so the cast of the partial
+    into the shared f32 accumulator is also exact); float inputs accumulate
+    in f32 directly.
+    """
+    if x.dtype == jnp.int8:
+        return jnp.dot(x, w, preferred_element_type=jnp.int32).astype(
+            jnp.float32)
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
 def vsmm_kernel_cost(
     *, m: int, nb: int, s_steps: int, vk: int, vn: int, in_itemsize: int = 4,
     w_itemsize: int = 4, out_itemsize: int = 4, residual_bytes: int = 0,
@@ -100,9 +114,10 @@ def vsmm_bias_index_map():
     return index_map
 
 
-def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_bias: bool,
-            has_residual: bool, skip_zero_inputs: bool):
+def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_scale: bool,
+            has_bias: bool, has_residual: bool, skip_zero_inputs: bool):
     it = iter(refs)
+    scale_ref = next(it) if has_scale else None
     bias_ref = next(it) if has_bias else None
     res_ref = next(it) if has_residual else None
     o_ref = next(it)
@@ -123,11 +138,9 @@ def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_bias: bool,
 
         @pl.when(nonzero)
         def _mac():
-            acc_ref[...] += jnp.dot(
-                x, w_ref[0, 0], preferred_element_type=jnp.float32
-            )
+            acc_ref[...] += _mac_dot(x, w_ref[0, 0])
     else:
-        acc_ref[...] += jnp.dot(x, w_ref[0, 0], preferred_element_type=jnp.float32)
+        acc_ref[...] += _mac_dot(x, w_ref[0, 0])
 
     @pl.when(s == pl.num_programs(2) - 1)
     def _flush():
@@ -135,7 +148,13 @@ def _kernel(idx_ref, x_ref, w_ref, *refs, fuse_relu: bool, has_bias: bool,
         # fused epilogue: the ReLU zeros produced here are exactly the input
         # vectors the *next* layer's input-side skip elides.  The residual
         # (ResNet shortcut) is added before the ReLU, so a whole basic block
-        # retires in-kernel with one HBM write.
+        # retires in-kernel with one HBM write.  Dequant (int8) comes first:
+        # acc -> *scale -> +bias -> +residual -> max(0) -> cast.
+        if has_scale:
+            # exact multiply: dequant scales are powers of two, so FMA
+            # contraction with the bias add cannot change the result —
+            # parity with the structural jnp path is compiler-proof
+            acc = acc * scale_ref[0].astype(jnp.float32)
         if has_bias:
             acc = acc + bias_ref[0].astype(jnp.float32)
         if has_residual:
@@ -157,6 +176,7 @@ def vsmm_pallas(
     bm: int = 256,
     bias: jax.Array | None = None,
     residual: jax.Array | None = None,
+    scale: jax.Array | None = None,
     skip_zero_inputs: bool = True,
     fuse_relu: bool = False,
     interpret: bool = False,
@@ -168,13 +188,19 @@ def vsmm_pallas(
     pads).  FLOPs scale with vs.density — the zero weight vectors are
     structurally absent from the grid.  ``bias`` (N,), ``residual`` (M, N)
     and ``fuse_relu`` run the epilogue inside the kernel at flush time
-    (f32 accumulator -> +bias -> +residual -> max(0) -> cast).
+    (f32 accumulator -> *scale -> +bias -> +residual -> max(0) -> cast).
+
+    INT8: pass int8 ``x`` + int8 ``vs.vals`` + ``scale`` (N,) — the combined
+    per-cout dequant scale (activation scale x weight scale).  Each step
+    multiply-accumulates in int32 on the MXU and the f32 output materializes
+    only at flush; the residual stays f32.
     """
     m, k = x.shape
     nb, s_steps, vk, vn = vs.vals.shape
     assert k == vs.shape[0] and k % vk == 0, (x.shape, vs.shape, vk)
     assert m % bm == 0, (m, bm)
-    out_dtype = out_dtype or x.dtype
+    out_dtype = out_dtype or (jnp.float32 if x.dtype == jnp.int8 else x.dtype)
+    has_scale = scale is not None
     has_bias = bias is not None
     has_residual = residual is not None
 
@@ -183,6 +209,9 @@ def vsmm_pallas(
         pl.BlockSpec((1, 1, vk, vn), vsmm_w_index_map()),
     ]
     args = [vs.idx, x, vs.vals]
+    if has_scale:
+        in_specs.append(pl.BlockSpec((1, vn), vsmm_bias_index_map()))
+        args.append(scale.reshape(nb, vn))
     if has_bias:
         in_specs.append(pl.BlockSpec((1, vn), vsmm_bias_index_map()))
         args.append(bias.reshape(nb, vn))
@@ -199,8 +228,8 @@ def vsmm_pallas(
         scratch_shapes=[pltpu.VMEM((bm, vn), jnp.float32)],
     )
     return pl.pallas_call(
-        functools.partial(_kernel, fuse_relu=fuse_relu, has_bias=has_bias,
-                          has_residual=has_residual,
+        functools.partial(_kernel, fuse_relu=fuse_relu, has_scale=has_scale,
+                          has_bias=has_bias, has_residual=has_residual,
                           skip_zero_inputs=skip_zero_inputs),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, nb * vn), out_dtype),

@@ -605,6 +605,7 @@ class CNNServer:
 
     def __init__(self, cfg, *, batch: int, impl: str = "auto",
                  density: float | None = None, sparse: bool = True,
+                 dtype: str | None = None,
                  seed: int = 0, pad_multiple: int = 8, replicas: int = 1,
                  shard_fc: bool = False, validate: bool = True,
                  fault_plan: FaultPlan | None = None,
@@ -622,8 +623,11 @@ class CNNServer:
             self.net.schema(), jax.random.PRNGKey(seed), jnp.float32)
         self.sparse = None
         if sparse:
+            # dtype="int8" serves the compound sparsity x precision path:
+            # per-cout power-of-two weight scales baked in at sparsify time,
+            # activations quantized per-tensor at apply time
             self.sparse, _ = self.net.sparsify(
-                self.params, self.density, vk=cfg.vk, vn=cfg.vn)
+                self.params, self.density, vk=cfg.vk, vn=cfg.vn, dtype=dtype)
         image_size = cfg.image_size if cfg.fixed_image_size else None
         fleet = (replicas > 1 or shard_fc or fault_plan is not None
                  or deadline_waves is not None)

@@ -73,6 +73,7 @@ __all__ = [
     "ConvTileGeometry", "FCTileGeometry", "conv_tile_geometry",
     "fc_tile_geometry", "strip_steps",
     "sparse_conv_from_dense", "apply_sparse_conv", "apply_sparse_fc",
+    "weight_scales", "quantize_weights_int8", "quantize_activations_int8",
     "net_schema", "net_apply", "sparsify", "collect_conv_traffic",
     "build_vgg16", "build_resnet18", "build_resnet34", "build_resnet50",
     "build_mobilenet_v1", "build_resnet_stem",
@@ -181,10 +182,10 @@ class SparseNet:
                          collect=collect)
 
     def sparsify(self, params: dict, density: float, *, vk: int = 32,
-                 vn: int = 128,
-                 include_fc: bool = True) -> tuple[dict, dict]:
+                 vn: int = 128, include_fc: bool = True,
+                 dtype: Any = None) -> tuple[dict, dict]:
         return sparsify(self, params, density, vk=vk, vn=vn,
-                        include_fc=include_fc)
+                        include_fc=include_fc, dtype=dtype)
 
     def batched_apply(self, params: dict, *,
                       sparse: dict | None = None, impl: str = "auto",
@@ -218,7 +219,9 @@ class SparseConv:
     the grouped/dilated geometry (``groups == cin`` is depthwise: the
     encoded matrix is the (kh*kw, C) tap matrix with vk == 1).  ``bias``
     (when set) overrides the param-tree bias — this is where the BN-folded
-    bias lives.
+    bias lives.  ``scale`` (set iff the weights are int8-quantized) holds
+    the per-cout symmetric dequant scales; the walker quantizes the layer
+    input per-tensor and hands the combined scale to the kernel epilogue.
     """
 
     vs: VectorSparse
@@ -229,6 +232,7 @@ class SparseConv:
     dilation: int = 1
     cin_pad: int = 0
     bias: jax.Array | None = None
+    scale: jax.Array | None = None
 
 
 @dataclasses.dataclass
@@ -238,12 +242,15 @@ class SparseFC:
     ``dout`` is the true output width; the encoded matrix may be zero-padded
     to a strip multiple (the remainder strip for non-tileable heads, e.g.
     1000 classes) — the walker slices the pad columns off after the kernel.
-    ``bias`` (when set) overrides the param-tree bias.
+    ``bias`` (when set) overrides the param-tree bias.  ``scale`` (set iff
+    the weights are int8-quantized) holds per-cout dequant scales padded to
+    the encoded width (pad columns get scale 1.0).
     """
 
     vs: VectorSparse
     dout: int | None = None
     bias: jax.Array | None = None
+    scale: jax.Array | None = None
 
 
 # --------------------------------------------------------------------------
@@ -360,6 +367,70 @@ def strip_steps(kb: int, density: float, *, prune: bool = True) -> int:
     return max(1, int(round(kb * density)))
 
 
+# --------------------------------------------------------------------------
+# INT8 quantization (compound sparsity x precision)
+# --------------------------------------------------------------------------
+
+def _wants_int8(dtype: Any) -> bool:
+    """True iff ``dtype`` names int8 (string or dtype-like)."""
+    if dtype is None:
+        return False
+    try:
+        return jnp.dtype(dtype) == jnp.dtype(jnp.int8)
+    except TypeError:
+        return False
+
+
+def _pow2_up(s: np.ndarray) -> np.ndarray:
+    """Round positive scales UP to the next power of two (exactly
+    representable in f32).  Po2 scales make every dequant multiply exact —
+    scaling an f32 by 2^k only shifts the exponent — so the fused epilogue
+    ``acc*s + bias`` is immune to FMA contraction (fma == two-step, bit for
+    bit, under any compiler fusion) and matches the shift-based requant of
+    fixed-point accelerator datapaths."""
+    s64 = np.asarray(s, np.float64)
+    p = np.exp2(np.ceil(np.log2(s64)))
+    p = np.where(p < s64, p * 2.0, p)  # guard log2 rounding at po2 inputs
+    return p.astype(np.float32)
+
+
+def weight_scales(wm: np.ndarray) -> np.ndarray:
+    """Per-cout symmetric int8 scales of a (K, Cout) weight matrix.
+
+    ``s[c] = max|wm[:, c]| / 127`` rounded up to the next power of two (see
+    `_pow2_up` — exact dequant multiplies, deterministic epilogue); an
+    all-zero column (e.g. a remainder-strip pad column) gets scale 1.0 so
+    dequant stays a no-op there.
+    """
+    s = np.abs(np.asarray(wm, np.float32)).max(axis=0) / 127.0
+    return _pow2_up(np.where(s > 0, s, 1.0))
+
+
+def quantize_weights_int8(wm: np.ndarray,
+                          s: np.ndarray) -> np.ndarray:
+    """Symmetric round-to-nearest int8 encode of ``wm`` at per-cout scales
+    ``s`` (decode is ``wq.astype(f32) * s``, within s/2 of the source)."""
+    q = np.rint(np.asarray(wm, np.float32) / s)
+    return np.clip(q, -127, 127).astype(np.int8)
+
+
+def quantize_activations_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 activation quantization (traceable).
+
+    Returns ``(xq, sx)`` with ``xq = clip(round(x / sx), -127, 127)`` and
+    ``sx = max|x| / 127`` rounded up to the next power of two (1.0 when the
+    tensor is all-zero, so the encode never divides by zero).  Po2 scales
+    keep the combined dequant scale ``sx * s_w`` a power of two, so the
+    kernels' epilogue multiply is exact (see `_pow2_up`).
+    """
+    sx = (jnp.max(jnp.abs(x.astype(jnp.float32))) / 127.0).astype(jnp.float32)
+    sx = jnp.where(sx > 0, sx, jnp.float32(1.0))
+    p = jnp.exp2(jnp.ceil(jnp.log2(sx))).astype(jnp.float32)
+    sx = jnp.where(p < sx, p * jnp.float32(2.0), p)
+    xq = jnp.clip(jnp.round(x.astype(jnp.float32) / sx), -127, 127)
+    return xq.astype(jnp.int8), sx
+
+
 def sparse_conv_from_dense(
     w: np.ndarray | jax.Array,
     density: float,
@@ -394,7 +465,8 @@ def sparse_conv_from_dense(
     """
     w = np.asarray(w, np.float32)
     kh, kw, cin_g, cout = w.shape
-    dtype = dtype or jnp.float32
+    int8 = _wants_int8(dtype)
+    dtype = jnp.float32 if int8 else (dtype or jnp.float32)
     g = conv_tile_geometry(kh, kw, cin_g, cout, vk=vk, vn=vn, groups=groups,
                            allow_fallback=allow_fallback, path=path)
     vk_l, vn_l, cp = g.vk, g.vn, g.cin_pad
@@ -406,9 +478,18 @@ def sparse_conv_from_dense(
         else:
             wp = wm
             mask = np.ones((kh * kw, cout // vn_l), bool)
-        vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
+        scale: np.ndarray | None = None
+        if int8:
+            # quantize the PRUNED weights: scales see only surviving taps
+            scale = weight_scales(wp)
+            wq = quantize_weights_int8(wp, scale)
+            wp = wq.astype(np.float32) * scale  # dequantized dense oracle
+            vs = from_mask(jnp.asarray(wq), mask, vk_l, vn_l)
+        else:
+            vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
         spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, groups=groups,
-                          dilation=dilation)
+                          dilation=dilation,
+                          scale=None if scale is None else jnp.asarray(scale))
         return spec, wp.reshape(kh, kw, 1, cout)
     wpad = np.pad(w, ((0, 0), (0, 0), (0, cp), (0, 0))) if cp else w
     wm = wpad.reshape(kh * kw * (cin_g + cp), cout)
@@ -417,7 +498,14 @@ def sparse_conv_from_dense(
     else:
         wp = wm
         mask = np.ones((wm.shape[0] // vk_l, cout // vn_l), bool)
-    vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
+    scale = None
+    if int8:
+        scale = weight_scales(wp)
+        wq = quantize_weights_int8(wp, scale)
+        wp = wq.astype(np.float32) * scale  # dequantized dense oracle
+        vs = from_mask(jnp.asarray(wq), mask, vk_l, vn_l)
+    else:
+        vs = from_mask(jnp.asarray(wp, dtype), mask, vk_l, vn_l)
     if kh * kw > 1:
         # cin-major issue order: the halo kernel's input block then revisits
         # (no re-DMA) across consecutive taps of one cin tile — the layout
@@ -427,7 +515,8 @@ def sparse_conv_from_dense(
         # tile count is what orders them.
         vs = conv_cin_major(vs, (cin_g + cp) // vk_l)
     spec = SparseConv(vs, kh=kh, kw=kw, stride=stride, groups=groups,
-                      dilation=dilation, cin_pad=cp)
+                      dilation=dilation, cin_pad=cp,
+                      scale=None if scale is None else jnp.asarray(scale))
     wp_dense = wp.reshape(kh, kw, cin_g + cp, cout)[:, :, :cin_g]
     return spec, wp_dense
 
@@ -441,14 +530,22 @@ def apply_sparse_conv(x: jax.Array, entry: SparseConv | VectorSparse, *,
     ``entry`` is a `SparseConv` or a bare `VectorSparse` (legacy 3x3/s1).
     ``residual`` is the output-shaped shortcut added before the ReLU in the
     kernels' fused epilogue.
+
+    An int8 entry (``spec.scale`` set) quantizes the layer input per-tensor
+    first; the kernel accumulates int8 x int8 in int32 and the combined
+    scale ``sx * s_w`` dequantizes in the fused epilogue (before bias).
     """
     spec = entry if isinstance(entry, SparseConv) else SparseConv(entry)
+    scale = spec.scale
+    if scale is not None:
+        x, sx = quantize_activations_int8(x)
+        scale = sx * scale
     if spec.cin_pad:
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, spec.cin_pad)))
     return vs_conv2d(
         x, spec.vs, kh=spec.kh, kw=spec.kw, stride=spec.stride,
         groups=spec.groups, dilation=spec.dilation, bias=bias,
-        residual=residual, fuse_relu=fuse_relu, impl=impl,
+        residual=residual, fuse_relu=fuse_relu, impl=impl, scale=scale,
     )
 
 
@@ -472,8 +569,12 @@ def apply_sparse_fc(x: jax.Array, entry: SparseFC | VectorSparse, *,
             residual,
             [(0, 0)] * (residual.ndim - 1) + [(0, n_enc - residual.shape[-1])],
         )
+    scale = spec.scale
+    if scale is not None:
+        x, sx = quantize_activations_int8(x)
+        scale = sx * scale
     y = vs_matmul(x, spec.vs, bias=bias, residual=residual,
-                  fuse_relu=fuse_relu, impl=impl)
+                  fuse_relu=fuse_relu, impl=impl, scale=scale)
     return y[..., :dout] if dout != n_enc else y
 
 
@@ -780,12 +881,16 @@ def shard_sparse(sparse: dict, *, ctx: Any = None) -> dict:
             out[name] = dataclasses.replace(
                 entry, vs=place_vs(entry.vs, "ff"),
                 bias=None if entry.bias is None
-                else place(entry.bias, (None,)))
+                else place(entry.bias, (None,)),
+                scale=None if entry.scale is None
+                else place(entry.scale, (None,)))
         elif isinstance(entry, SparseConv):
             out[name] = dataclasses.replace(
                 entry, vs=place_vs(entry.vs, "conv"),
                 bias=None if entry.bias is None
-                else place(entry.bias, (None,)))
+                else place(entry.bias, (None,)),
+                scale=None if entry.scale is None
+                else place(entry.scale, (None,)))
         else:  # bare VectorSparse entry (FC-style)
             out[name] = place_vs(entry, "ff")
     return out
@@ -807,7 +912,7 @@ def collect_conv_traffic(net: SparseNet, params: dict,
 
 def sparsify(net: SparseNet, params: dict, density: float, *,
              vk: int = 32, vn: int = 128,
-             include_fc: bool = True) -> tuple[dict, dict]:
+             include_fc: bool = True, dtype: Any = None) -> tuple[dict, dict]:
     """Vector-prune a whole network to `density` (fraction of kept vectors).
 
     Returns ``(sparse, pruned)``:
@@ -821,7 +926,14 @@ def sparsify(net: SparseNet, params: dict, density: float, *,
     * ``pruned`` — a dense param tree computing the identical function
       (folded weights + bias; BN entries replaced by a plain bias), the
       oracle for parity tests.
+
+    ``dtype=jnp.int8`` (or ``"int8"``) quantizes every encoded weight
+    per-cout symmetric from the pruned folded-BN weights and stores the
+    dequant scales on the specs; the pruned dense tree then holds the
+    DEQUANTIZED f32 weights, so the oracle and cycle model see exactly the
+    values the int8 kernels reconstruct.
     """
+    int8 = _wants_int8(dtype)
     sparse: dict = {}
     pruned = {name: dict(entry) for name, entry in params.items()}
     for l in net.layers:
@@ -842,7 +954,8 @@ def sparsify(net: SparseNet, params: dict, density: float, *,
             prune = True if l.groups > 1 else cin_g >= vk
             spec, wp = sparse_conv_from_dense(
                 w, density, vk=vk, vn=vn, stride=l.stride, groups=l.groups,
-                dilation=l.dilation, prune=prune, dtype=wdt,
+                dilation=l.dilation, prune=prune,
+                dtype=jnp.int8 if int8 else wdt,
                 allow_fallback=l.allow_fallback, path=f"{net.name}/{l.name}",
             )
             spec.bias = jnp.asarray(b, wdt)
@@ -859,8 +972,16 @@ def sparsify(net: SparseNet, params: dict, density: float, *,
                 continue  # non-tileable K: stays dense (none of our nets)
             wpad = np.pad(w, ((0, 0), (0, fg.pad))) if fg.pad else w
             wp, mask = prune_vectors_balanced(wpad, density, fg.vk, fg.vn)
-            vs = from_mask(jnp.asarray(wp, wdt), mask, fg.vk, fg.vn)
-            sparse[l.name] = SparseFC(vs, dout=dout, bias=p["b"])
+            if int8:
+                s_w = weight_scales(wp)  # pad columns (all-zero) -> 1.0
+                wq = quantize_weights_int8(wp, s_w)
+                wp = wq.astype(np.float32) * s_w
+                vs = from_mask(jnp.asarray(wq), mask, fg.vk, fg.vn)
+                sparse[l.name] = SparseFC(vs, dout=dout, bias=p["b"],
+                                          scale=jnp.asarray(s_w))
+            else:
+                vs = from_mask(jnp.asarray(wp, wdt), mask, fg.vk, fg.vn)
+                sparse[l.name] = SparseFC(vs, dout=dout, bias=p["b"])
             pruned[l.name] = {"w": jnp.asarray(wp[:, :dout], wdt),
                               "b": p["b"]}
     return sparse, pruned

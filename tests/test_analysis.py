@@ -127,7 +127,11 @@ class TestContracts:
         # equality with the kernel CostEstimate (VSC202), traffic-model
         # agreement (VSC203), elision soundness (VSC204), FLOPs (VSC205)
         assert not rep.errors, rep.render()
-        assert len(rows) == 2  # halo + stack variants both proved
+        # halo + stack variants, each proved under both dtype contracts
+        assert len(rows) == 4
+        assert sorted(r.path for r in rows) == sorted(
+            f"{nc.conv_sites[0].path}[{impl}{tag}]"
+            for impl in ("halo", "stack") for tag in ("", ":int8"))
 
     @given(conv_geometries())
     @settings(max_examples=15, deadline=None)

@@ -1,0 +1,195 @@
+"""INT8 vector-sparse quantization: round-trip properties, bit-exact
+Pallas-vs-jnp parity, int8-vs-f32 output agreement, and the dtype axis of
+the hillclimb byte budget.
+
+The quantization scheme (see `models.graph`): per-cout symmetric weight
+scales from the PRUNED folded weights, per-tensor symmetric activation
+scales at apply time — both rounded UP to powers of two, so the fused
+dequant multiply in the kernel epilogue is exact in f32 and parity
+between the Pallas kernels and the structural jnp path is bit-for-bit
+regardless of compiler FMA contraction.
+"""
+import importlib.util
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encode, prune_vectors_balanced, vs_conv2d, vs_matmul
+from repro.models import graph as G
+from repro.models.layers import init_params
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _load_bench(name):
+    spec = importlib.util.spec_from_file_location(
+        name, REPO / "benchmarks" / f"{name}.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules[name] = mod  # dataclass string-annotation resolution
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _quantized_vs(rng, k, n, vk, vn, density):
+    """Mirror `sparse_conv_from_dense`'s int8 encode: prune f32, scale
+    from the pruned matrix, quantize, encode the int8 tiles."""
+    wm = rng.standard_normal((k, n)).astype(np.float32)
+    wp, _ = prune_vectors_balanced(wm, density, vk, vn)
+    s = G.weight_scales(wp)
+    wq = G.quantize_weights_int8(wp, s)
+    return encode(jnp.asarray(wq), vk, vn), s, wp
+
+
+class TestRoundTrip:
+    def test_weight_scales_are_pow2(self, rng):
+        wm = rng.standard_normal((96, 64)).astype(np.float32)
+        wm[:, 7] = 0.0  # pad-like all-zero column
+        s = G.weight_scales(wm)
+        assert s.shape == (64,) and s.dtype == np.float32
+        assert np.all(np.exp2(np.round(np.log2(s))) == s)  # exact po2
+        assert s[7] == 1.0
+        # po2 round-up never shrinks below the symmetric-range scale
+        assert np.all(s[:7] * 127.0 >= np.abs(wm[:, :7]).max(axis=0))
+
+    def test_weight_roundtrip_within_half_scale(self, rng):
+        wm = rng.standard_normal((128, 256)).astype(np.float32) * 3.0
+        s = G.weight_scales(wm)
+        wq = G.quantize_weights_int8(wm, s)
+        assert wq.dtype == np.int8
+        err = np.abs(wm - wq.astype(np.float32) * s)
+        assert np.all(err <= s / 2 + 1e-7)
+
+    def test_activation_quant_pow2_and_bounds(self, rng):
+        x = jnp.asarray(rng.standard_normal((4, 8, 8, 16)), jnp.float32)
+        xq, sx = G.quantize_activations_int8(x)
+        assert xq.dtype == jnp.int8
+        sxv = float(sx)
+        assert np.exp2(np.round(np.log2(sxv))) == sxv
+        assert sxv * 127.0 >= float(jnp.abs(x).max())
+        err = np.abs(np.asarray(x) - np.asarray(xq, np.float32) * sxv)
+        assert np.all(err <= sxv / 2 + 1e-7)
+        # all-zero tensor: scale guard, encode is a no-op
+        zq, zs = G.quantize_activations_int8(jnp.zeros_like(x))
+        assert float(zs) == 1.0 and not np.any(np.asarray(zq))
+
+    def test_sparsify_int8_structure(self):
+        net = G.build_resnet18(16, image_size=16)
+        params = init_params(net.schema(), jax.random.PRNGKey(0),
+                             jnp.float32)
+        sparse, pruned = net.sparsify(params, 0.5, dtype="int8")
+        for name, entry in sparse.items():
+            assert entry.vs.vals.dtype == jnp.int8, name
+            assert entry.scale is not None, name
+            s = np.asarray(entry.scale)
+            assert np.all(np.exp2(np.round(np.log2(s))) == s), name
+
+
+class TestKernelParity:
+    """Pallas kernels vs the structural jnp path must agree BIT-FOR-BIT
+    on int8 inputs: int32 step MACs are exact, the shared f32 accumulator
+    sees identical addends in identical order, and the po2 dequant scale
+    makes the epilogue immune to FMA contraction."""
+
+    def test_vsmm_full_epilogue_bit_exact(self, rng):
+        m, k, n, vk, vn = 32, 128, 256, 32, 128
+        vs, s_w, _ = _quantized_vs(rng, k, n, vk, vn, 0.5)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        xq, sx = G.quantize_activations_int8(x)
+        scale = jnp.asarray(s_w) * sx
+        bias = jnp.asarray(rng.standard_normal(n), jnp.float32)
+        res = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        kw = dict(scale=scale, bias=bias, residual=res, fuse_relu=True)
+        ref = vs_matmul(xq, vs, impl="jnp", **kw)
+        out = vs_matmul(xq, vs, impl="pallas", **kw)
+        assert ref.dtype == jnp.float32
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+    @pytest.mark.parametrize("geom", [
+        dict(kh=3, kw=3, stride=1, groups=1, h=8, w=8, cin=32, cout=128,
+             vk=32, vn=128, residual=True),
+        dict(kh=3, kw=3, stride=2, groups=64, h=8, w=8, cin=64, cout=64,
+             vk=1, vn=64, residual=False),          # depthwise
+        dict(kh=3, kw=3, stride=1, groups=2, h=8, w=8, cin=64, cout=64,
+             vk=16, vn=32, residual=False),         # grouped
+        dict(kh=1, kw=1, stride=1, groups=1, h=8, w=8, cin=64, cout=128,
+             vk=32, vn=128, residual=False),        # pointwise -> vsmm
+    ], ids=["3x3_res", "dw3x3_s2", "grouped_g2", "1x1"])
+    @pytest.mark.parametrize("impl", ["pallas", "pallas-stack"])
+    def test_vsconv_bit_exact(self, rng, geom, impl):
+        kh, kw, stride, groups = (geom["kh"], geom["kw"], geom["stride"],
+                                  geom["groups"])
+        h, w, cin, cout = geom["h"], geom["w"], geom["cin"], geom["cout"]
+        vk, vn = geom["vk"], geom["vn"]
+        depthwise = groups == cin
+        k = kh * kw if depthwise else kh * kw * cin // groups
+        vs, s_w, _ = _quantized_vs(rng, k, cout if not depthwise else cin,
+                                   vk, vn, 0.5)
+        if kh * kw > 1 and not depthwise:
+            from repro.core import conv_cin_major
+            vs = conv_cin_major(vs, (cin // groups) // vk)
+        x = jnp.asarray(
+            np.maximum(rng.standard_normal((2, h, w, cin)), 0), jnp.float32)
+        xq, sx = G.quantize_activations_int8(x)
+        scale = jnp.asarray(s_w) * sx
+        bias = jnp.asarray(rng.standard_normal(vs.shape[1]), jnp.float32)
+        res = None
+        if geom["residual"]:
+            ho = -(-h // stride)
+            res = jnp.asarray(
+                rng.standard_normal((2, ho, -(-w // stride), cout)),
+                jnp.float32)
+        kw_args = dict(kh=kh, kw=kw, stride=stride, groups=groups,
+                       scale=scale, bias=bias, residual=res, fuse_relu=True)
+        ref = vs_conv2d(xq, vs, impl="jnp", **kw_args)
+        out = vs_conv2d(xq, vs, impl=impl, **kw_args)
+        assert ref.dtype == jnp.float32
+        assert np.array_equal(np.asarray(ref), np.asarray(out))
+
+
+class TestNetworkAgreement:
+    """int8 vs f32 forward on fixed seeded inputs: logits stay close and
+    top-1 decisions mostly agree (random-init logit margins are tiny, so
+    the match-rate bound is deliberately modest)."""
+
+    @pytest.mark.parametrize("build", [G.build_resnet18,
+                                       G.build_mobilenet_v1],
+                             ids=["resnet18", "mobilenet_v1"])
+    def test_int8_vs_f32_agreement(self, build):
+        net = build(64, image_size=24)
+        params = init_params(net.schema(), jax.random.PRNGKey(0),
+                             jnp.float32)
+        x = jnp.asarray(
+            np.random.default_rng(7).standard_normal((8, 24, 24, 3)),
+            jnp.float32)
+        sp_f, _ = net.sparsify(params, 0.5)
+        sp_q, _ = net.sparsify(params, 0.5, dtype="int8")
+        lf = np.asarray(G.net_apply(net, params, x, sparse=sp_f,
+                                    impl="jnp"))
+        lq = np.asarray(G.net_apply(net, params, x, sparse=sp_q,
+                                    impl="jnp"))
+        assert lq.dtype == np.float32 and lq.shape == lf.shape
+        assert float(np.abs(lq - lf).max()) <= 0.1
+        match = float((lq.argmax(-1) == lf.argmax(-1)).mean())
+        assert match >= 0.25
+
+
+class TestHillclimbDtype:
+    def test_int8_budget_keeps_more_vectors(self):
+        """Regression for the modeled-bytes budget ignoring weight dtype:
+        at the SAME absolute byte budget the int8 contract must afford
+        strictly more stored vectors than f32."""
+        hc = _load_bench("hillclimb")
+        net = G.build_resnet18(200, image_size=32)
+        f32 = hc.hillclimb(net, size=32, batch=1, budget=0.5,
+                           verbose=False)
+        i8 = hc.hillclimb(net, size=32, batch=1,
+                          budget_bytes=f32["total_bytes"], dtype="int8",
+                          verbose=False)
+        assert i8["dtype"] == "int8"
+        assert i8["total_bytes"] <= f32["total_bytes"]
+        assert i8["kept_tiles"] > f32["kept_tiles"]
+        assert i8["kept_weight_fraction"] > f32["kept_weight_fraction"]
